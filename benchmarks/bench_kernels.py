@@ -1,0 +1,46 @@
+"""Benchmark 3 — kernel layer: fused Bellman backup / SpMV wall time vs the
+unfused XLA reference (CPU timings; the Pallas path is validated in
+interpret mode and targeted at TPU — see EXPERIMENTS.md for the roofline
+projection instead of CPU wall time)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(csv_rows: list):
+    rng = np.random.default_rng(0)
+    for (n, m, k) in [(100_000, 16, 8), (1_000_000, 8, 4)]:
+        idx = jnp.asarray(rng.integers(0, n, (n, m, k)).astype(np.int32))
+        val = jnp.asarray(rng.random((n, m, k)).astype(np.float32))
+        cost = jnp.asarray(rng.random((n, m)).astype(np.float32))
+        v = jnp.asarray(rng.random(n).astype(np.float32))
+
+        fused = jax.jit(lambda i, w, c, u: ops.ell_backup(i, w, c, 0.99, u))
+        us = _time(fused, idx, val, cost, v)
+        csv_rows.append((f"kernels/backup_fused/n={n}", us,
+                         f"flops={2*n*m*k:.2e}"))
+
+        def unfused(i, w, c, u):
+            q = c + 0.99 * (w * jnp.take(u, i, axis=0)).sum(-1)
+            return q.min(-1), q.argmin(-1)
+        us2 = _time(jax.jit(unfused), idx, val, cost, v)
+        csv_rows.append((f"kernels/backup_unfused/n={n}", us2, ""))
+        print(f"  backup n={n:9d}: fused={us:9.0f}us unfused={us2:9.0f}us",
+              flush=True)

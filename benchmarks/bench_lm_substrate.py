@@ -1,0 +1,42 @@
+"""Benchmark 5 — LM substrate sanity: reduced-config train-step wall time
+per architecture (smoke-scale; full-scale numbers are roofline projections
+in results/roofline.json)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_smoke_config, get_train_config
+from repro.data.pipeline import SyntheticSource
+from repro.models import build_model
+from repro.train.optimizer import init_opt_state
+from repro.train.steps import make_train_step
+
+
+def run(csv_rows: list):
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        tcfg = get_train_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        src = SyntheticSource(
+            cfg.vocab_size, 64, 8, n_patches=cfg.n_patches,
+            d_model=cfg.d_model,
+            encoder_len=cfg.encoder_len if cfg.family == "encdec" else 0)
+        batch = src.next_batch(0)
+        step = jax.jit(make_train_step(model, tcfg, n_microbatches=2))
+        opt = init_opt_state(params, tcfg)
+        p, o, m = step(params, opt, jnp.int32(0), batch)
+        jax.block_until_ready(m)
+        t0 = time.time()
+        for i in range(3):
+            p, o, m = step(p, o, jnp.int32(i + 1), batch)
+        jax.block_until_ready(m)
+        us = (time.time() - t0) / 3 * 1e6
+        csv_rows.append((f"lm_substrate/{arch}/train_step_smoke", us,
+                         f"loss={float(m['loss']):.3f}"))
+        print(f"  {arch:16s} {us:9.0f}us/step loss={float(m['loss']):.3f}",
+              flush=True)

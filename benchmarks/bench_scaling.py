@@ -1,0 +1,50 @@
+"""Benchmark 4 — distributed scaling (madupite's memory/compute distribution
+claim).  Runs the same solve on 1 vs 8 (forced-host) devices in subprocesses
+and reports wall time + per-device state bytes; the 256/512-chip scaling
+artifact is the dry-run (results/dryrun_all.json)."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CHILD = r"""
+import os, sys, time, json
+n_dev = int(sys.argv[1])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+import jax
+jax.config.update("jax_enable_x64", True)
+from repro.core import generators, solve, IPIOptions
+mdp = generators.garnet(200_000, 8, 8, gamma=0.99, seed=1)
+opts = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64")
+mesh = None
+if n_dev > 1:
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+t0 = time.time(); r = solve(mdp, opts, mesh=mesh); wall = time.time() - t0
+# warm second solve (excludes compile)
+t0 = time.time(); r = solve(mdp, opts, mesh=mesh); warm = time.time() - t0
+print("RESULT " + json.dumps(dict(wall=wall, warm=warm,
+      outer=r.outer_iterations, inner=r.inner_iterations,
+      converged=bool(r.converged))))
+"""
+
+
+def run(csv_rows: list):
+    env = dict(os.environ, PYTHONPATH="src")
+    for n_dev in (1, 8):
+        out = subprocess.run([sys.executable, "-c", _CHILD, str(n_dev)],
+                             env=env, capture_output=True, text=True,
+                             timeout=1800)
+        assert out.returncode == 0, out.stderr[-2000:]
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("RESULT ")][0]
+        rec = json.loads(line[len("RESULT "):])
+        csv_rows.append((f"scaling/garnet200k/devices={n_dev}",
+                         rec["warm"] * 1e6,
+                         f"outer={rec['outer']};inner={rec['inner']};"
+                         f"converged={rec['converged']}"))
+        print(f"  devices={n_dev}: warm={rec['warm']:.2f}s "
+              f"(cold {rec['wall']:.2f}s) outer={rec['outer']}", flush=True)

@@ -1,0 +1,47 @@
+"""Benchmark 1 — madupite's core claim: a selectable inner solver beats any
+fixed method across instance families (Gargiani et al. 2023/2024, Tables of
+iteration counts / wall time per method).
+
+For each instance family and each method: outer iterations, cumulative inner
+iterations, wall time to the same certified tolerance.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import IPIOptions, generators, solve
+
+METHODS = ["vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab"]
+
+INSTANCES = {
+    "garnet_50k": lambda: generators.garnet(50_000, 16, 8, gamma=0.99,
+                                            seed=0),
+    "maze2d_150": lambda: generators.maze2d(150, gamma=0.998),
+    "sis_20k": lambda: generators.sis(20_000, 8, gamma=0.999),
+    "chain_0.9999": lambda: generators.chain_walk(5_000, gamma=0.9999),
+}
+
+
+def run(csv_rows: list):
+    jax.config.update("jax_enable_x64", True)
+    for iname, make in INSTANCES.items():
+        mdp = make()
+        for method in METHODS:
+            opts = IPIOptions(method=method, atol=1e-8, dtype="float64",
+                              max_outer=100_000 if method == "vi" else 5000,
+                              mpi_sweeps=100, max_inner=1000)
+            t0 = time.time()
+            r = solve(mdp, opts)
+            wall = time.time() - t0
+            csv_rows.append((
+                f"solvers/{iname}/{method}",
+                wall * 1e6,
+                f"outer={r.outer_iterations};inner={r.inner_iterations};"
+                f"res={r.residual:.2e};converged={r.converged}"))
+            print(f"  {iname:16s} {method:16s} wall={wall:7.2f}s "
+                  f"outer={r.outer_iterations:6d} "
+                  f"inner={r.inner_iterations:8d} conv={r.converged}",
+                  flush=True)

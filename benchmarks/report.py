@@ -1,0 +1,100 @@
+"""Assemble EXPERIMENTS.md tables from results/*.json artifacts."""
+
+import json
+import os
+
+
+def fmt(x, digits=2):
+    if x is None:
+        return "-"
+    if isinstance(x, str):
+        return x
+    return f"{x:.{digits}e}"
+
+
+def gb(x):
+    return "-" if x in (None, -1) else f"{x / 2**30:.2f}"
+
+
+DRYRUN_PATHS = ("results/dryrun_all.json", "results/dryrun_moe_refresh.json",
+                "results/dryrun_moe2.json", "results/dryrun_small_refresh.json",
+                "results/dryrun_small2.json",
+                "results/dryrun_mdp_refresh.json")
+
+
+def dryrun_table(paths=DRYRUN_PATHS):
+    d = {}
+    for p in paths:  # later files overwrite earlier cells (refreshes win)
+        if os.path.exists(p):
+            d.update(json.load(open(p)))
+    lines = ["| cell | mesh | status | lower+compile s | temp GB/dev | "
+             "args GB/dev | AG | AR | RS | A2A | CP |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for key, r in sorted(d.items()):
+        parts = key.rsplit("/", 1)
+        cell, mesh = parts[0], parts[1]
+        if r["status"] != "ok":
+            lines.append(f"| {cell} | {mesh} | FAIL | - | - | - |  |  |  |  |  |")
+            continue
+        c = r.get("collective_counts", {})
+        lines.append(
+            f"| {cell} | {mesh} | ok | "
+            f"{r['lower_s'] + r['compile_s']:.0f} | "
+            f"{gb(r.get('temp_size_in_bytes'))} | "
+            f"{gb(r.get('argument_size_in_bytes'))} | "
+            f"{c.get('all-gather', 0)} | {c.get('all-reduce', 0)} | "
+            f"{c.get('reduce-scatter', 0)} | {c.get('all-to-all', 0)} | "
+            f"{c.get('collective-permute', 0)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(paths=("results/roofline.json",
+                          "results/roofline_mdp2.json",
+                          "results/roofline_whisper_opt.json",
+                          "results/roofline_mamba_opt.json")):
+    d = {}
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        tag = " (shipped-opt)" if p.endswith("_opt.json") else ""
+        for k, v in json.load(open(p)).items():
+            d[k + tag] = v
+    lines = ["| cell | compute s | memory s | collective s | dominant | "
+             "MODEL_FLOPs/dev | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for key, r in sorted(d.items()):
+        if r.get("status") != "ok":
+            lines.append(f"| {key} | FAIL {r.get('error', '')[:40]} | | | | | | |")
+            continue
+        lines.append(
+            f"| {key} | {fmt(r['compute_s'])} | {fmt(r['memory_s'])} | "
+            f"{fmt(r['collective_s'])} | **{r['dominant']}** | "
+            f"{fmt(r['model_flops_per_device'])} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r.get('roofline_fraction', 0):.2e} |")
+    return "\n".join(lines)
+
+
+def perf_table(path="results/perf_iters.jsonl"):
+    if not os.path.exists(path):
+        return "(no perf iterations recorded)"
+    rows = [json.loads(ln) for ln in open(path) if ln.strip()]
+    lines = ["| cell | variant | compute s | memory s | collective s | "
+             "bound (max term) | dominant |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r['variant']} | "
+            f"{fmt(r['compute_s'])} | {fmt(r['memory_s'])} | "
+            f"{fmt(r['collective_s'])} | {fmt(bound)} | {r['dominant']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    os.makedirs("results", exist_ok=True)
+    with open("results/tables.md", "w") as f:
+        f.write("## Dry-run\n\n" + dryrun_table() + "\n\n")
+        f.write("## Roofline\n\n" + roofline_table() + "\n\n")
+        f.write("## Perf iterations\n\n" + perf_table() + "\n")
+    print("wrote results/tables.md")

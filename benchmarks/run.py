@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (and progress to stderr-ish
+stdout).  Full suite:
+
+    PYTHONPATH=src:. python -m benchmarks.run [--only solvers,kernels,...]
+
+Tables:
+  solvers       — method comparison across instance families (core claim)
+  conditioning  — gamma -> 1 sweep (Krylov-iPI vs VI iteration growth)
+  kernels       — fused Bellman backup vs unfused reference
+  scaling       — 1 vs 8 device distributed solve
+  lm_substrate  — per-arch smoke train-step timing
+(roofline terms live in benchmarks/roofline.py -> results/roofline.json)
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: solvers,conditioning,kernels,scaling,"
+                         "lm_substrate")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_conditioning, bench_kernels,
+                            bench_lm_substrate, bench_scaling, bench_solvers)
+    suites = {
+        "solvers": bench_solvers.run,
+        "conditioning": bench_conditioning.run,
+        "kernels": bench_kernels.run,
+        "scaling": bench_scaling.run,
+        "lm_substrate": bench_lm_substrate.run,
+    }
+    pick = args.only.split(",") if args.only else list(suites)
+    rows = []
+    for name in pick:
+        print(f"== bench:{name} ==", flush=True)
+        try:
+            suites[name](rows)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"  [FAIL] {name}: {type(e).__name__}: {e}", flush=True)
+            rows.append((f"{name}/SUITE_FAILED", -1, str(e)[:80]))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""The paper's headline claim as a runnable comparison: as gamma -> 1,
+Krylov-accelerated inexact policy iteration decouples from the
+1/(1-gamma) iteration blow-up that hits value iteration.
+
+    PYTHONPATH=src python examples/ipi_vs_vi.py
+"""
+import jax
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import IPIOptions, generators, solve
+
+print(f"{'gamma':>8} | {'VI iters':>9} | {'iPI outer':>9} | {'iPI inner':>9}")
+print("-" * 46)
+for gamma in (0.9, 0.99, 0.999, 0.9999):
+    mdp = generators.chain_walk(n=1000, gamma=gamma)
+    r_vi = solve(mdp, IPIOptions(method="vi", atol=1e-8, dtype="float64",
+                                 max_outer=1_000_000), chunk=8192)
+    r_ip = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-8,
+                                 max_inner=3000, dtype="float64"))
+    print(f"{gamma:>8} | {r_vi.outer_iterations:>9} | "
+          f"{r_ip.outer_iterations:>9} | {r_ip.inner_iterations:>9}")

@@ -1,0 +1,10 @@
+"""Serve a reduced-config architecture: batched prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [arch]
+"""
+import sys
+from repro.launch.serve import main
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "zamba2-1.2b"
+raise SystemExit(main(["--arch", arch, "--smoke", "--batch", "4",
+                       "--prompt-len", "32", "--gen", "12"]))

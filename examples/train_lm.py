@@ -1,0 +1,11 @@
+"""Train a reduced-config assigned architecture end-to-end (driver demo).
+
+    PYTHONPATH=src python examples/train_lm.py [arch]
+"""
+import sys
+from repro.launch.train import main
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "olmoe-1b-7b"
+raise SystemExit(main(["--arch", arch, "--smoke", "--steps", "60",
+                       "--batch", "8", "--seq", "64",
+                       "--ckpt-dir", "/tmp/repro_train_demo"]))

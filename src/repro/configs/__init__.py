@@ -1,0 +1,59 @@
+"""Architecture registry: ``--arch <id>`` -> config module.
+
+Each module defines CONFIG (exact assigned dims), TRAIN (trainer knobs
+tuned to fit 16 GB/chip on the production mesh) and SMOKE (reduced
+same-family config for CPU tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig, SHAPES
+
+ARCHS = {
+    "zamba2-1.2b": "zamba2_1_2b",
+    "llava-next-34b": "llava_next_34b",
+    "arctic-480b": "arctic_480b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mamba2-130m": "mamba2_130m",
+    "whisper-base": "whisper_base",
+    "stablelm-3b": "stablelm_3b",
+    "minitron-8b": "minitron_8b",
+    "granite-34b": "granite_34b",
+    "nemotron-4-15b": "nemotron_4_15b",
+}
+
+# archs whose attention is sub-quadratic-capable (SSM/hybrid) -> long_500k runs
+LONG_CONTEXT_OK = {"zamba2-1.2b", "mamba2-130m"}
+
+
+def get_module(arch: str):
+    assert arch in ARCHS, f"unknown arch {arch!r}; choose from {list(ARCHS)}"
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return get_module(arch).CONFIG
+
+
+def get_train_config(arch: str) -> TrainConfig:
+    return getattr(get_module(arch), "TRAIN", TrainConfig())
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return get_module(arch).SMOKE
+
+
+def cells(arch: str):
+    """The assigned (shape) cells for this arch, with documented skips."""
+    out = []
+    for name, shape in SHAPES.items():
+        if name == "long_500k" and arch not in LONG_CONTEXT_OK:
+            continue  # full-attention arch: skip documented in DESIGN.md §4
+        out.append(shape)
+    return out
+
+
+def all_cells():
+    return [(a, s) for a in ARCHS for s in cells(a)]

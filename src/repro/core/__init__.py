@@ -1,0 +1,18 @@
+"""repro.core — distributed inexact policy iteration for large-scale MDPs.
+
+The JAX/TPU reimplementation of madupite's contribution.  Public surface:
+
+    from repro.core import EllMDP, IPIOptions, solve, generators
+    mdp = generators.garnet(n=10_000, m=16, k=8, gamma=0.99)
+    result = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-8))
+"""
+
+from repro.core.comm import Axes
+from repro.core.driver import SolveResult, solve
+from repro.core.ipi import IPIOptions, METHODS, SolveState
+from repro.core.mdp import DenseMDP, EllMDP
+from repro.core import bellman, generators, partition
+
+__all__ = ["Axes", "DenseMDP", "EllMDP", "IPIOptions", "METHODS",
+           "SolveResult", "SolveState", "bellman", "generators",
+           "partition", "solve"]

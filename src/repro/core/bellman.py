@@ -1,0 +1,182 @@
+"""Distributed Bellman operators.
+
+All functions operate on a *local* MDP block plus the :class:`~repro.core.comm.Axes`
+describing the mesh axes it is sharded over.  They are pure and jit/shard_map
+friendly; with ``Axes()`` (no axes) they are the single-device reference.
+
+Conventions
+-----------
+* ``v_local``  — (n_local,) owned slice of the value vector.
+* ``v_global`` — (n_global,) gathered value vector (``axes.allgather_state``).
+* ``pi``       — (n_local,) int32 of **global** action ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Axes
+from repro.core.mdp import DenseMDP, EllMDP, MDP
+from repro.kernels import ops
+
+
+# --------------------------------------------------------------------------- #
+# Value-vector movement (all-gather vs banded halo exchange)                   #
+# --------------------------------------------------------------------------- #
+
+def gather_v(v_local: jax.Array, axes: Axes, *, halo: int = 0,
+             dtype=None) -> jax.Array:
+    """Produce the column window the local rows reference: the full gathered
+    vector (``halo=0``) or the banded ``[start-halo, stop+halo)`` window."""
+    if halo:
+        return axes.halo_exchange(v_local, halo, dtype)
+    return axes.allgather_state(v_local, dtype)
+
+
+def _shift_idx(idx: jax.Array, mdp: MDP, axes: Axes, halo: int) -> jax.Array:
+    """Global successor ids -> window-relative ids for the halo layout."""
+    if not halo:
+        return idx
+    row_start = axes.state_index() * mdp.n_local
+    return idx - row_start + halo
+
+
+# --------------------------------------------------------------------------- #
+# Greedy step (policy improvement)                                            #
+# --------------------------------------------------------------------------- #
+
+def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
+           impl: str | None = None,
+           halo: int = 0) -> tuple[jax.Array, jax.Array]:
+    """One Bellman backup: ``Tv`` and the greedy policy on local rows.
+
+    ``v_global`` is whatever :func:`gather_v` produced (full vector or halo
+    window — ``halo`` must match).  Returns ``(tv_local (n_local,) f32,
+    pi_local (n_local,) int32 global ids)``.  With an action axis, the
+    min/argmin is completed with a pmin reduction; ties break to the
+    smallest global action id (deterministic across layouts).
+    """
+    if isinstance(mdp, EllMDP):
+        idx = _shift_idx(mdp.idx, mdp, axes, halo)
+        vmin, amin = ops.ell_backup(idx, mdp.val, mdp.cost, mdp.gamma,
+                                    v_global, impl=impl)
+    else:
+        assert halo == 0, "halo layout requires the ELL representation"
+        vmin, amin = ops.dense_backup(mdp.p, mdp.cost, mdp.gamma,
+                                      v_global, impl=impl)
+    a_glob = amin + mdp.m_local * axes.action_index()
+    if axes.action is None:
+        return vmin, a_glob
+    tv = axes.pmin_action(vmin)
+    # argmin across shards: owner shards (vmin == tv exactly, since pmin picks
+    # one of the exact local minima) propose their id, others propose m_global.
+    cand = jnp.where(vmin == tv, a_glob, jnp.int32(mdp.m_global))
+    pi = axes.pmin_action(cand)
+    return tv, pi
+
+
+def residual_norm(mdp: MDP, v_local: jax.Array, v_global: jax.Array,
+                  axes: Axes, *, impl: str | None = None,
+                  halo: int = 0) -> jax.Array:
+    """Global sup-norm Bellman residual ``||T v - v||_inf`` (the optimality gap
+    certificate: ``||v - v*||_inf <= residual / (1 - gamma)``)."""
+    tv, _ = backup(mdp, v_global, axes, impl=impl, halo=halo)
+    return axes.pmax_state(jnp.max(jnp.abs(tv - v_local)))
+
+
+# --------------------------------------------------------------------------- #
+# Policy-restricted operators (policy evaluation)                             #
+# --------------------------------------------------------------------------- #
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PolicyRows:
+    """Rows of ``P_pi`` / ``g_pi`` owned by this shard, pre-masked.
+
+    With a 2-D (state x action) layout each action shard owns the rows whose
+    greedy action falls inside its slice; masked-out rows contribute zeros and
+    the results are psum-reduced over the action axis (the beyond-paper 2-D
+    layout; the paper-faithful 1-D layout has no action axis and the mask is
+    all-ones).
+    """
+
+    idx: jax.Array | None   # (n_local, K) int32   (ELL)
+    val: jax.Array | None   # (n_local, K) f32     (ELL, masked)
+    p: jax.Array | None     # (n_local, n_global)  (dense, masked)
+    g: jax.Array            # (n_local,) f32       (masked)
+    gamma: float = dataclasses.field(metadata=dict(static=True))
+
+
+def policy_rows(mdp: MDP, pi: jax.Array, axes: Axes) -> PolicyRows:
+    """Extract the ``P_pi`` rows for a (global-id) policy ``pi``."""
+    a_rel = pi - mdp.m_local * axes.action_index()
+    own = (a_rel >= 0) & (a_rel < mdp.m_local)
+    a_sel = jnp.clip(a_rel, 0, mdp.m_local - 1)
+    if isinstance(mdp, EllMDP):
+        take = lambda x: jnp.take_along_axis(
+            x, a_sel[:, None, None], axis=1)[:, 0]
+        idx_pi = take(mdp.idx)
+        val_pi = take(mdp.val) * own[:, None].astype(mdp.val.dtype)
+        g_pi = jnp.take_along_axis(mdp.cost, a_sel[:, None], axis=1)[:, 0]
+        g_pi = g_pi * own.astype(g_pi.dtype)
+        return PolicyRows(idx=idx_pi, val=val_pi, p=None, g=g_pi,
+                          gamma=mdp.gamma)
+    p_pi = jnp.take_along_axis(mdp.p, a_sel[:, None, None], axis=1)[:, 0]
+    p_pi = p_pi * own[:, None].astype(mdp.p.dtype)
+    g_pi = jnp.take_along_axis(mdp.cost, a_sel[:, None], axis=1)[:, 0]
+    g_pi = g_pi * own.astype(g_pi.dtype)
+    return PolicyRows(idx=None, val=None, p=p_pi, g=g_pi, gamma=mdp.gamma)
+
+
+def _p_pi_matvec(rows: PolicyRows, x_eff: jax.Array, axes: Axes,
+                 impl: str | None, idx_eff=None) -> jax.Array:
+    """(P_pi @ x) on local rows, reduced over action shards."""
+    if rows.idx is not None:
+        idx = rows.idx if idx_eff is None else idx_eff
+        y = ops.ell_matvec(idx, rows.val, x_eff, impl=impl)
+    else:
+        dt = jnp.result_type(jnp.float32, rows.p.dtype, x_eff.dtype)
+        y = jnp.dot(rows.p.astype(dt), x_eff.astype(dt),
+                    precision=jax.lax.Precision.HIGHEST)
+    return axes.psum_action(y)
+
+
+def _rows_idx_eff(rows: PolicyRows, mdp: MDP, axes: Axes, halo: int):
+    if not halo or rows.idx is None:
+        return None
+    row_start = axes.state_index() * mdp.n_local
+    return rows.idx - row_start + halo
+
+
+def t_pi(rows: PolicyRows, x_local: jax.Array, axes: Axes, *,
+         impl: str | None = None, mdp: MDP | None = None, halo: int = 0,
+         gather_dtype=None) -> jax.Array:
+    """Policy-restricted Bellman operator ``T_pi x = g_pi + gamma P_pi x``."""
+    x_eff = gather_v(x_local, axes, halo=halo, dtype=gather_dtype)
+    y = _p_pi_matvec(rows, x_eff, axes, impl,
+                     _rows_idx_eff(rows, mdp, axes, halo))
+    return axes.psum_action(rows.g) + rows.gamma * y
+
+
+def a_pi_matvec(rows: PolicyRows, x_local: jax.Array, axes: Axes, *,
+                impl: str | None = None, mdp: MDP | None = None,
+                halo: int = 0, gather_dtype=None) -> jax.Array:
+    """Policy-evaluation system operator ``A_pi x = (I - gamma P_pi) x``.
+
+    This is the matvec handed to the inner (Krylov) solvers; the value
+    function of ``pi`` solves ``A_pi v = g_pi``.  ``gather_dtype`` turns on
+    the compressed (inexact) gather — safe here because the forcing term of
+    the outer iPI loop bounds the tolerable inner-system perturbation.
+    """
+    x_eff = gather_v(x_local, axes, halo=halo, dtype=gather_dtype)
+    y = _p_pi_matvec(rows, x_eff, axes, impl,
+                     _rows_idx_eff(rows, mdp, axes, halo))
+    return x_local - rows.gamma * y.astype(x_local.dtype)
+
+
+def b_pi(rows: PolicyRows, axes: Axes) -> jax.Array:
+    """Right-hand side ``g_pi`` of the policy-evaluation system."""
+    return axes.psum_action(rows.g)

@@ -1,0 +1,122 @@
+"""Collective-axis abstraction for the distributed MDP solver.
+
+madupite distributes states across MPI ranks and lets PETSc insert the
+communication (VecScatter for SpMV halo exchange, MPI_Allreduce for Krylov
+dot products).  The TPU adaptation expresses the same pattern with named mesh
+axes inside ``shard_map``:
+
+* ``state`` axis — states are row-partitioned; moving ``v`` is an
+  ``all_gather``; norms / dots are ``psum`` / ``pmax``.
+* ``action`` axis — optional 2-D layout (beyond the paper): actions are
+  column-partitioned; the greedy step finishes with a min/argmin reduction.
+
+When an axis name is ``None`` the collective degenerates to the identity, so
+the identical solver code runs on a single device (tests, small problems).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+AxisName = Union[str, Sequence[str], None]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Mesh axis names used by the solver (all static metadata)."""
+
+    state: AxisName = dataclasses.field(default=None, metadata=dict(static=True))
+    action: AxisName = dataclasses.field(default=None, metadata=dict(static=True))
+
+    # ---- state-axis collectives -------------------------------------------------
+    def allgather_state(self, x: jax.Array, dtype=None) -> jax.Array:
+        """Gather the value vector across state shards (PETSc VecScatter
+        analogue).  ``dtype`` optionally compresses the wire format (e.g.
+        bf16): the inexact-gather optimization — the iPI forcing term absorbs
+        the quantization error in *inner* matvecs (EXPERIMENTS.md §Perf)."""
+        if dtype is not None:
+            x = x.astype(dtype)
+        if self.state is None:
+            return x
+        return jax.lax.all_gather(x, self.state, axis=0, tiled=True)
+
+    def halo_exchange(self, x: jax.Array, halo: int, dtype=None) -> jax.Array:
+        """Exchange ``halo`` boundary entries with ring neighbours instead of
+        all-gathering the full vector — the TPU analogue of PETSc's
+        VecScatter moving only the referenced columns.  Valid when the
+        transition matrix is banded with bandwidth <= halo (validated at
+        partition time).  Returns the local window
+        ``[start - halo, stop + halo)`` (ends wrap with garbage that banded
+        instances never reference).  Collective volume: 2*halo vs n_global.
+        """
+        if dtype is not None:
+            x = x.astype(dtype)
+        if halo == 0:
+            return x
+        if self.state is None:
+            # single-shard window with the same ring semantics (edges unused)
+            return jnp.concatenate([x[-halo:], x, x[:halo]], axis=0)
+        n = self.state_size()
+        fwd = [(i, (i + 1) % n) for i in range(n)]   # data flows ->
+        bwd = [(i, (i - 1) % n) for i in range(n)]
+        # my left halo = left neighbour's tail (neighbour sends forward)
+        left = jax.lax.ppermute(x[-halo:], self.state, fwd)
+        right = jax.lax.ppermute(x[:halo], self.state, bwd)
+        return jnp.concatenate([left, x, right], axis=0)
+
+    def psum_state(self, x):
+        if self.state is None:
+            return x
+        return jax.lax.psum(x, self.state)
+
+    def pmax_state(self, x):
+        if self.state is None:
+            return x
+        return jax.lax.pmax(x, self.state)
+
+    def state_index(self) -> jax.Array:
+        if self.state is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.state)
+
+    def state_size(self) -> int:
+        if self.state is None:
+            return 1
+        if isinstance(self.state, str):
+            return jax.lax.axis_size(self.state)
+        out = 1
+        for name in self.state:
+            out *= jax.lax.axis_size(name)
+        return out
+
+    # ---- action-axis collectives ------------------------------------------------
+    def pmin_action(self, x):
+        if self.action is None:
+            return x
+        return jax.lax.pmin(x, self.action)
+
+    def psum_action(self, x):
+        if self.action is None:
+            return x
+        return jax.lax.psum(x, self.action)
+
+    def action_index(self) -> jax.Array:
+        if self.action is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.action)
+
+    # ---- derived linear-algebra helpers ------------------------------------------
+    def dot(self, x: jax.Array, y: jax.Array) -> jax.Array:
+        """Distributed <x, y> over state shards (MPI_Allreduce analogue)."""
+        return self.psum_state(jnp.dot(x, y, precision=jax.lax.Precision.HIGHEST))
+
+    def norm2(self, x: jax.Array) -> jax.Array:
+        return jnp.sqrt(jnp.maximum(self.dot(x, x), 0.0))
+
+    def norm_inf(self, x: jax.Array) -> jax.Array:
+        return self.pmax_state(jnp.max(jnp.abs(x)))

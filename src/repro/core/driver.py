@@ -1,0 +1,148 @@
+"""Host driver: chunked, checkpointed, optionally distributed iPI solve.
+
+This is the user-facing ``solve`` — the analogue of madupite's
+``madupite.solve(mdp, options)``.  The device-side loop runs in bounded
+chunks; between chunks the host persists the solver state (preemption /
+node-failure tolerance) and reports progress.  Distribution wraps the same
+device code in ``shard_map`` over the supplied mesh (1-D paper-faithful or
+2-D state x action layout — see :mod:`repro.core.partition`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import ipi, partition
+from repro.core.comm import Axes
+from repro.core.ipi import IPIOptions, SolveState
+from repro.core.mdp import EllMDP, MDP
+from repro.utils import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class SolveResult:
+    v: np.ndarray                  # (n,) optimal values (padding trimmed)
+    policy: np.ndarray             # (n,) int32 greedy policy
+    residual: float                # final ||T v - v||_inf
+    gap_bound: float               # ||v - v*||_inf certificate: res / (1-gamma)
+    converged: bool
+    outer_iterations: int
+    inner_iterations: int
+    trace_residual: np.ndarray     # (outer+1,)
+    trace_inner: np.ndarray        # (outer,)
+
+    def summary(self) -> str:
+        return (f"converged={self.converged} outer={self.outer_iterations} "
+                f"inner={self.inner_iterations} residual={self.residual:.3e} "
+                f"gap<= {self.gap_bound:.3e}")
+
+
+def _result(state: SolveState, opts: IPIOptions, gamma: float,
+            n_orig: int) -> SolveResult:
+    k = int(state.k)
+    res = float(state.res)
+    return SolveResult(
+        v=np.asarray(jax.device_get(state.v))[:n_orig],
+        policy=np.asarray(jax.device_get(state.pi))[:n_orig],
+        residual=res,
+        gap_bound=res / (1.0 - gamma),
+        converged=res <= opts.atol,
+        outer_iterations=k,
+        inner_iterations=int(state.inner_total),
+        trace_residual=np.asarray(state.trace_res)[:k + 1],
+        trace_inner=np.asarray(state.trace_inner)[:k])
+
+
+def _validate_banded(mdp, halo: int, mesh, layout: str) -> None:
+    """The halo layout is only exact when every transition stays within
+    +-halo of its source row (matrix bandwidth <= halo) and the halo fits in
+    one shard."""
+    assert isinstance(mdp, EllMDP), "halo layout requires ELL"
+    idx = np.asarray(mdp.idx)
+    rows = np.arange(mdp.n_global)[:, None, None]
+    band = int(np.abs(idx - rows).max())
+    assert band <= halo, f"matrix bandwidth {band} exceeds halo {halo}"
+    if mesh is not None:
+        n_shards = int(np.prod([
+            mesh.shape[a] for a in partition.mesh_axes(mesh, layout).state]))
+        n_local = -(-mdp.n_global // n_shards)
+        assert halo <= n_local, (halo, n_local)
+
+
+def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
+          mesh=None, layout: str = "1d", v0=None,
+          checkpoint_dir: str | None = None, chunk: int = 64,
+          verbose: bool = False) -> SolveResult:
+    """Solve an MDP to ``||T v - v||_inf <= opts.atol``.
+
+    ``mesh=None`` runs single-device; otherwise the MDP is padded, sharded
+    onto ``mesh`` and the identical loop runs SPMD under ``shard_map``.
+    """
+    n_orig = mdp.n_global
+    if opts.halo:
+        _validate_banded(mdp, opts.halo, mesh, layout)
+    if mesh is None:
+        axes = Axes()
+        dev_mdp = mdp
+        run_chunk = partial(ipi.solve_chunk, opts=opts, axes=axes)
+        init = lambda: ipi.init_state(dev_mdp, axes, opts, v0)
+    else:
+        dev_mdp, axes, n_orig = partition.shard_mdp(mdp, mesh, layout)
+        mdp_specs = partition.mdp_pspecs(dev_mdp, axes)
+        state_specs = SolveState(
+            v=P(axes.state), tv=P(axes.state), pi=P(axes.state),
+            res=P(), k=P(), inner_total=P(), trace_res=P(), trace_inner=P())
+        run_chunk = jax.jit(
+            jax.shard_map(
+                partial(ipi.solve_chunk, opts=opts, axes=axes),
+                mesh=mesh,
+                in_specs=(mdp_specs, state_specs, P()),
+                out_specs=state_specs,
+                check_vma=False),
+        )
+
+        def init():
+            f = jax.jit(
+                jax.shard_map(
+                    partial(ipi.init_state, axes=axes, opts=opts),
+                    mesh=mesh, in_specs=(mdp_specs,), out_specs=state_specs,
+                    check_vma=False))
+            return f(dev_mdp)
+
+    state = None
+    if checkpoint_dir:
+        like = jax.eval_shape(init)
+        like = jax.tree_util.tree_map(
+            lambda s: np.zeros(s.shape, s.dtype), like)
+        restored = ckpt.restore(checkpoint_dir, like)
+        if restored is not None:
+            tree, _, _ = restored
+            state = tree
+            if verbose:
+                print(f"[driver] resumed at outer k={int(state.k)}")
+    if state is None:
+        state = init()
+
+    while True:
+        k = int(jax.device_get(state.k))
+        res = float(jax.device_get(state.res))
+        if verbose:
+            print(f"[driver] k={k} residual={res:.3e}")
+        if res <= opts.atol or k >= opts.max_outer:
+            break
+        k_hi = jnp.int32(min(k + chunk, opts.max_outer))
+        state = run_chunk(dev_mdp, state, k_hi)
+        if checkpoint_dir:
+            ckpt.save(checkpoint_dir, int(jax.device_get(state.k)), state,
+                      meta=dict(method=opts.method))
+
+    if mesh is not None:
+        # gather the sharded fields for the host-side result
+        state = jax.device_get(state)
+    return _result(state, opts, mdp.gamma, n_orig)

@@ -1,0 +1,57 @@
+"""Offline MDP storage (madupite's load-from-file mode).
+
+Format: one ``.npz`` per state-block (ELL fields) + a JSON manifest holding
+the global shape, discount and block table — the moral equivalent of PETSc
+binary matrices.  Blocks can be written/read independently (each rank loads
+only its rows)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.mdp import EllMDP
+
+
+def save_mdp(path: str, mdp: EllMDP, n_blocks: int = 1) -> None:
+    os.makedirs(path, exist_ok=True)
+    n = mdp.n_global
+    idx, val, cost = (np.asarray(mdp.idx), np.asarray(mdp.val),
+                      np.asarray(mdp.cost))
+    assert idx.shape[0] == n, "save_mdp expects the full MDP"
+    bounds = np.linspace(0, n, n_blocks + 1, dtype=int)
+    blocks = []
+    for b in range(n_blocks):
+        lo, hi = int(bounds[b]), int(bounds[b + 1])
+        np.savez(os.path.join(path, f"block_{b:05d}.npz"),
+                 idx=idx[lo:hi], val=val[lo:hi], cost=cost[lo:hi])
+        blocks.append(dict(block=b, row_lo=lo, row_hi=hi))
+    manifest = dict(n=int(n), m=int(mdp.m_global), k=int(mdp.nnz_per_row),
+                    gamma=float(mdp.gamma), n_blocks=n_blocks, blocks=blocks)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_mdp(path: str, rows: tuple[int, int] | None = None) -> EllMDP:
+    """Load the full MDP or just the ``rows=(lo, hi)`` slice (block-aligned
+    reads; each distributed worker calls this with its own range)."""
+    import jax.numpy as jnp
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    lo, hi = rows or (0, man["n"])
+    parts = []
+    for blk in man["blocks"]:
+        if blk["row_hi"] <= lo or blk["row_lo"] >= hi:
+            continue
+        with np.load(os.path.join(path, f"block_{blk['block']:05d}.npz")) as z:
+            s = slice(max(lo - blk["row_lo"], 0),
+                      min(hi, blk["row_hi"]) - blk["row_lo"])
+            parts.append((z["idx"][s], z["val"][s], z["cost"][s]))
+    idx = np.concatenate([p[0] for p in parts])
+    val = np.concatenate([p[1] for p in parts])
+    cost = np.concatenate([p[2] for p in parts])
+    return EllMDP(idx=jnp.asarray(idx), val=jnp.asarray(val),
+                  cost=jnp.asarray(cost), gamma=man["gamma"],
+                  n_global=man["n"], m_global=man["m"])

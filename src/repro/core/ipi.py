@@ -1,0 +1,169 @@
+"""Inexact policy iteration (iPI) — the paper's core algorithm.
+
+Implements the outer loop of Gargiani et al. 2024, Algorithm 3, with the
+inner policy-evaluation solve delegated to a selectable inner solver.  The
+method zoo madupite exposes maps onto one code path:
+
+  ``vi``             value iteration          (inner = 0 Richardson sweeps)
+  ``mpi``            modified policy iter.    (inner = fixed Richardson sweeps)
+  ``ipi_richardson`` iPI + Richardson         (forcing-term stopping)
+  ``ipi_gmres``      iPI + restarted GMRES    (the iGMRES-PI of the paper)
+  ``ipi_bicgstab``   iPI + BiCGStab
+  ``pi``             (near-)exact policy iteration (GMRES, tight tol)
+
+Every outer iteration does exactly one Bellman backup (greedy step + residual)
+and one inexact solve of ``(I - gamma P_pi) v = g_pi`` warm-started at
+``T v_k``; with 0 inner iterations the update *is* ``T v_k`` so VI falls out
+as the degenerate case.  A monotone safeguard (cheap, one extra backup on the
+rare rejection path) falls back to the VI step whenever an inexact Krylov
+step fails to reduce the sup-norm Bellman residual, which preserves global
+convergence for any forcing factor.
+
+The whole loop is device-side ``lax`` control flow; the host driver
+(:mod:`repro.core.driver`) runs it in bounded *chunks* for checkpointing /
+preemption tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bellman
+from repro.core.comm import Axes
+from repro.core.mdp import MDP
+from repro.core.solvers import bicgstab, gmres, richardson
+
+METHODS = ("vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab", "pi")
+
+
+@dataclasses.dataclass(frozen=True)
+class IPIOptions:
+    """Static solver options (hashable -> usable as a jit static arg)."""
+
+    method: str = "ipi_gmres"
+    atol: float = 1e-8          # stop when ||T v - v||_inf <= atol
+    max_outer: int = 500
+    max_inner: int = 500        # inner-iteration cap per outer step
+    forcing_eta: float = 0.05   # inner tol = eta * ||T v - v||_inf
+    restart: int = 32           # GMRES restart length
+    omega: float = 1.0          # Richardson damping
+    mpi_sweeps: int = 50        # L for modified policy iteration
+    safeguard: bool = True      # monotone (VI-fallback) safeguard
+    impl: str | None = None     # kernel implementation override
+    dtype: str = "float32"      # value-vector dtype; "float64" == PETSc default
+                                # (requires jax_enable_x64)
+    halo: int = 0               # banded layout: exchange only +-halo boundary
+                                # entries instead of all-gathering v
+    gather_dtype: str | None = None  # compressed (inexact) gather for INNER
+                                # matvecs only; outer backups stay exact
+
+    def __post_init__(self):
+        assert self.method in METHODS, self.method
+        assert self.dtype in ("float32", "float64"), self.dtype
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SolveState:
+    """Device-side solver state (a pytree; checkpointable)."""
+
+    v: jax.Array            # (n_local,) current value iterate
+    tv: jax.Array           # (n_local,) T v (one backup ahead)
+    pi: jax.Array           # (n_local,) int32 greedy policy (global ids)
+    res: jax.Array          # scalar f32, ||T v - v||_inf (replicated)
+    k: jax.Array            # scalar int32, outer iterations done
+    inner_total: jax.Array  # scalar int32, cumulative inner iterations
+    trace_res: jax.Array    # (max_outer + 1,) f32, residual after k outers
+    trace_inner: jax.Array  # (max_outer,) int32, inner iters per outer
+
+
+def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
+               v0: jax.Array | None = None) -> SolveState:
+    dt = jnp.dtype(opts.dtype)
+    v = jnp.zeros((mdp.n_local,), dt) if v0 is None else v0.astype(dt)
+    v_g = bellman.gather_v(v, axes, halo=opts.halo)
+    tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl, halo=opts.halo)
+    tv = tv.astype(dt)
+    res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
+    trace_res = jnp.full((opts.max_outer + 1,), jnp.nan, dt)
+    return SolveState(
+        v=v, tv=tv, pi=pi, res=res, k=jnp.int32(0),
+        inner_total=jnp.int32(0),
+        trace_res=trace_res.at[0].set(res),
+        trace_inner=jnp.full((opts.max_outer,), -1, jnp.int32))
+
+
+def _inner_solve(opts: IPIOptions, matvec, b, x0, tol, axes: Axes):
+    m = opts.method
+    if m == "vi":
+        return x0, jnp.int32(0), jnp.float32(jnp.inf)
+    if m == "mpi":
+        # x0 == T_pi v already counts as one sweep -> L - 1 more.
+        return richardson(matvec, b, x0, tol=jnp.float32(0.0),
+                          maxiter=max(opts.mpi_sweeps - 1, 0), axes=axes,
+                          omega=opts.omega)
+    if m == "ipi_richardson":
+        return richardson(matvec, b, x0, tol=tol, maxiter=opts.max_inner,
+                          axes=axes, omega=opts.omega)
+    if m == "ipi_gmres":
+        return gmres(matvec, b, x0, tol=tol, maxiter=opts.max_inner,
+                     axes=axes, restart=opts.restart)
+    if m == "ipi_bicgstab":
+        return bicgstab(matvec, b, x0, tol=tol, maxiter=opts.max_inner,
+                        axes=axes)
+    if m == "pi":
+        return gmres(matvec, b, x0, tol=jnp.float32(opts.atol) * 0.01,
+                     maxiter=opts.max_inner, axes=axes, restart=opts.restart)
+    raise ValueError(m)
+
+
+def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
+               axes: Axes) -> SolveState:
+    """One outer iPI iteration (greedy policy is already in ``state``)."""
+    rows = bellman.policy_rows(mdp, state.pi, axes)
+    b = bellman.b_pi(rows, axes).astype(state.tv.dtype)
+    gd = None if opts.gather_dtype is None else jnp.dtype(opts.gather_dtype)
+    matvec = lambda x: bellman.a_pi_matvec(rows, x, axes, impl=opts.impl,
+                                           mdp=mdp, halo=opts.halo,
+                                           gather_dtype=gd)
+    tol = jnp.maximum(opts.forcing_eta * state.res, jnp.float32(1e-30))
+    v1, inner_iters, _ = _inner_solve(opts, matvec, b, state.tv, tol, axes)
+
+    def eval_at(v):
+        v_g = bellman.gather_v(v, axes, halo=opts.halo)   # exact gather
+        tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl,
+                                halo=opts.halo)
+        res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
+        return v, tv, pi, res
+
+    cand = eval_at(v1)
+    if opts.safeguard and opts.method not in ("vi", "mpi", "ipi_richardson"):
+        # Krylov steps are not contractions; reject any step that increases
+        # the Bellman residual and take the (guaranteed) VI step instead.
+        # ``res`` is replicated across devices -> no control-flow divergence.
+        cand = jax.lax.cond(cand[3] <= state.res,
+                            lambda: cand, lambda: eval_at(state.tv))
+    v1, tv1, pi1, res1 = cand
+
+    k1 = state.k + 1
+    return SolveState(
+        v=v1, tv=tv1, pi=pi1, res=res1, k=k1,
+        inner_total=state.inner_total + inner_iters,
+        trace_res=state.trace_res.at[k1].set(res1),
+        trace_inner=state.trace_inner.at[state.k].set(inner_iters))
+
+
+@partial(jax.jit, static_argnames=("opts", "axes"))
+def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
+                opts: IPIOptions, axes: Axes) -> SolveState:
+    """Run outer iterations until convergence or ``k == k_hi`` (device-side)."""
+
+    def cond(s: SolveState):
+        return (s.res > opts.atol) & (s.k < k_hi)
+
+    return jax.lax.while_loop(
+        cond, lambda s: outer_step(mdp, s, opts, axes), state)

@@ -1,0 +1,111 @@
+"""MDP containers.
+
+Two storage layouts, both row-partitionable by state (madupite / PETSc stores
+MPIAIJ CSR rows per rank; on TPU we use layouts with static per-row shapes):
+
+* :class:`EllMDP` — padded ELLPACK sparsity: every (state, action) row keeps
+  exactly ``K`` (index, value) slots.  Padding slots carry ``val == 0`` and an
+  arbitrary in-range index (we use 0), so gathers stay in bounds and the maths
+  is exact.  This replaces CSR: fixed row shape == BlockSpec-tileable, and the
+  gather over ``v`` vectorizes on the VPU.
+* :class:`DenseMDP` — dense transition tensor ``P[(s, a), s']`` for small /
+  benchmark instances; backups become MXU matmuls.
+
+A *block* holds the locally-owned slice: ``n_local`` state rows starting at
+``row_offset`` and ``m_local`` actions starting at ``act_offset``.  Successor
+indices (``idx`` / the dense column dim) are always **global** state ids, as
+in PETSc MPIAIJ.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllMDP:
+    """Padded-ELL sparse MDP block.
+
+    idx:  (n_local, m_local, K) int32 — global successor ids (pad: 0)
+    val:  (n_local, m_local, K) f32   — transition probabilities (pad: 0)
+    cost: (n_local, m_local)    f32   — stage costs g(s, a)
+    """
+
+    idx: jax.Array
+    val: jax.Array
+    cost: jax.Array
+    gamma: float = dataclasses.field(metadata=dict(static=True))
+    n_global: int = dataclasses.field(metadata=dict(static=True))
+    m_global: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_local(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def m_local(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def nnz_per_row(self) -> int:
+        return self.idx.shape[2]
+
+    def validate(self) -> None:
+        """Host-side sanity checks (probability rows, index ranges)."""
+        idx = np.asarray(self.idx)
+        val = np.asarray(self.val)
+        assert idx.shape == val.shape, (idx.shape, val.shape)
+        assert self.cost.shape == idx.shape[:2]
+        assert idx.min() >= 0 and idx.max() < self.n_global
+        rowsum = val.sum(-1)
+        np.testing.assert_allclose(rowsum, 1.0, atol=1e-5)
+        assert (val >= -1e-7).all()
+        assert 0.0 < self.gamma < 1.0
+
+    def as_dense(self) -> "DenseMDP":
+        """Materialize the dense tensor (small instances / oracles only)."""
+        n, m, k = self.idx.shape
+        p = jnp.zeros((n, m, self.n_global), self.val.dtype)
+        s = jnp.arange(n)[:, None, None]
+        a = jnp.arange(m)[None, :, None]
+        p = p.at[s, a, self.idx].add(self.val)
+        return DenseMDP(p=p, cost=self.cost, gamma=self.gamma,
+                        n_global=self.n_global, m_global=self.m_global)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseMDP:
+    """Dense MDP block.
+
+    p:    (n_local, m_local, n_global) f32
+    cost: (n_local, m_local)           f32
+    """
+
+    p: jax.Array
+    cost: jax.Array
+    gamma: float = dataclasses.field(metadata=dict(static=True))
+    n_global: int = dataclasses.field(metadata=dict(static=True))
+    m_global: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_local(self) -> int:
+        return self.p.shape[0]
+
+    @property
+    def m_local(self) -> int:
+        return self.p.shape[1]
+
+    def validate(self) -> None:
+        p = np.asarray(self.p)
+        np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
+        assert (p >= -1e-7).all()
+        assert 0.0 < self.gamma < 1.0
+
+
+MDP = EllMDP | DenseMDP

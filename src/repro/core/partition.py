@@ -1,0 +1,115 @@
+"""Partitioning of a global MDP over the device mesh.
+
+madupite/PETSc row-partitions states over MPI ranks (1-D).  We support that
+layout and a beyond-paper 2-D (state x action) layout:
+
+  * ``layout="1d"`` — states sharded over *all* mesh axes (paper-faithful);
+  * ``layout="2d"`` — states over all-but-last axis, actions over the last
+    (``model``) axis; the greedy min and the policy-evaluation matvec gain a
+    reduction over the action axis (see :mod:`repro.core.bellman`).
+
+Padding: states are padded with absorbing zero-cost self-loops (their value
+is identically 0 and they are unreachable, so the solution and residuals on
+real states are untouched); actions are padded with cost ``BIG`` rows that
+can never be greedy.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.comm import Axes
+from repro.core.mdp import DenseMDP, EllMDP, MDP
+
+_BIG_COST = 1e30
+
+
+def mesh_axes(mesh, layout: str) -> Axes:
+    names = tuple(mesh.axis_names)
+    if layout == "1d":
+        return Axes(state=names, action=None)
+    if layout == "2d":
+        assert len(names) >= 2, "2d layout needs >= 2 mesh axes"
+        return Axes(state=names[:-1], action=names[-1])
+    raise ValueError(layout)
+
+
+def _axis_size(mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    return math.prod(mesh.shape[n] for n in names)
+
+
+def pad_mdp(mdp: EllMDP, n_mult: int, m_mult: int) -> EllMDP:
+    """Pad (host-side) to state/action multiples; exact-solution preserving."""
+    idx, val, cost = (np.asarray(mdp.idx), np.asarray(mdp.val),
+                      np.asarray(mdp.cost))
+    n, m, k = idx.shape
+    n_pad = (-n) % n_mult
+    m_pad = (-m) % m_mult
+    if m_pad:
+        idx = np.concatenate(
+            [idx, np.zeros((n, m_pad, k), idx.dtype)], axis=1)
+        pv = np.zeros((n, m_pad, k), val.dtype)
+        pv[..., 0] = 1.0  # self-transition placeholder (row sums to 1)
+        val = np.concatenate([val, pv], axis=1)
+        cost = np.concatenate(
+            [cost, np.full((n, m_pad), _BIG_COST, cost.dtype)], axis=1)
+    if n_pad:
+        m_tot = m + m_pad
+        pad_idx = np.repeat(
+            np.arange(n, n + n_pad, dtype=idx.dtype)[:, None, None],
+            m_tot, axis=1)
+        pad_idx = np.concatenate(
+            [pad_idx, np.zeros((n_pad, m_tot, k - 1), idx.dtype)], axis=2) \
+            if k > 1 else pad_idx
+        pad_val = np.zeros((n_pad, m_tot, k), val.dtype)
+        pad_val[..., 0] = 1.0
+        idx = np.concatenate([idx, pad_idx], axis=0)
+        val = np.concatenate([val, pad_val], axis=0)
+        # zero cost on the absorbing self-loop -> v_pad == 0 exactly; big cost
+        # on padded actions stays (harmless: still never greedy).
+        pad_cost = np.zeros((n_pad, m_tot), cost.dtype)
+        pad_cost[:, m:] = _BIG_COST
+        cost = np.concatenate([cost, pad_cost], axis=0)
+    return EllMDP(idx=jax.numpy.asarray(idx), val=jax.numpy.asarray(val),
+                  cost=jax.numpy.asarray(cost), gamma=mdp.gamma,
+                  n_global=n + n_pad, m_global=m + m_pad)
+
+
+def mdp_pspecs(mdp: MDP, axes: Axes):
+    """PartitionSpecs for the MDP container fields (as a matching pytree)."""
+    s, a = axes.state, axes.action
+    if isinstance(mdp, EllMDP):
+        return EllMDP(idx=P(s, a, None), val=P(s, a, None), cost=P(s, a),
+                      gamma=mdp.gamma, n_global=mdp.n_global,
+                      m_global=mdp.m_global)
+    return DenseMDP(p=P(s, a, None), cost=P(s, a), gamma=mdp.gamma,
+                    n_global=mdp.n_global, m_global=mdp.m_global)
+
+
+def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d"):
+    """Pad + place a host MDP onto ``mesh``.
+
+    Returns ``(mdp_device, axes, n_orig)``; device arrays carry
+    ``NamedSharding`` so ``shard_map`` consumes them without resharding.
+    """
+    axes = mesh_axes(mesh, layout)
+    n_mult = _axis_size(mesh, axes.state)
+    m_mult = _axis_size(mesh, axes.action)
+    n_orig = mdp.n_global
+    padded = pad_mdp(mdp, n_mult, m_mult)
+    specs = mdp_pspecs(padded, axes)
+    place = lambda arr, spec: jax.device_put(arr, NamedSharding(mesh, spec))
+    dev = EllMDP(idx=place(padded.idx, specs.idx),
+                 val=place(padded.val, specs.val),
+                 cost=place(padded.cost, specs.cost),
+                 gamma=padded.gamma, n_global=padded.n_global,
+                 m_global=padded.m_global)
+    return dev, axes, n_orig

@@ -1,0 +1,20 @@
+"""Inner solvers for the inexact policy-evaluation step.
+
+Each solver approximately solves ``A_pi x = g_pi`` with
+``A_pi = I - gamma * P_pi`` given as a distributed matvec closure, and has
+the uniform signature::
+
+    x, iters, resnorm = solve(matvec, b, x0, tol=..., maxiter=..., axes=...)
+
+``tol`` is an *absolute* residual tolerance (the iPI forcing term);
+``iters`` is the number of matvec-bearing iterations actually executed.
+All solvers are ``lax`` control flow (jit / shard_map safe); distributed
+reductions go through :class:`repro.core.comm.Axes`.
+"""
+
+from repro.core.solvers.richardson import richardson
+from repro.core.solvers.gmres import gmres
+from repro.core.solvers.bicgstab import bicgstab
+from repro.core.solvers.direct import dense_policy_value
+
+__all__ = ["richardson", "gmres", "bicgstab", "dense_policy_value"]

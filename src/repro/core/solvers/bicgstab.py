@@ -1,0 +1,58 @@
+"""BiCGStab (van der Vorst) — short-recurrence Krylov inner solver.
+
+madupite exposes PETSc's full KSP catalogue; BiCGStab is the other workhorse
+for the nonsymmetric system ``(I - gamma P_pi) x = g_pi``: two matvecs per
+iteration but O(1) memory (no stored basis), which matters when the Arnoldi
+basis of GMRES would not fit (very large state shards).  All inner products
+are distributed via ``axes.dot`` (psum over the state axis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Axes
+
+_EPS = 1e-30
+
+
+def bicgstab(matvec, b: jax.Array, x0: jax.Array, *, tol, maxiter: int,
+             axes: Axes):
+    """Returns ``(x, iters, ||b - A x||_2)``."""
+    r0 = b - matvec(x0)
+    rhat = r0
+    res0 = axes.norm2(r0)
+    zeros = jnp.zeros_like(x0)
+    one = jnp.ones((), x0.dtype)
+
+    # state: x, r, p, v, rho, alpha, omega, res, it, breakdown
+    init = (x0, r0, zeros, zeros, one, one, one, res0, jnp.int32(0),
+            jnp.bool_(False))
+
+    def cond(s):
+        *_, res, it, breakdown = s
+        return (res > tol) & (it < maxiter) & (~breakdown)
+
+    def body(s):
+        x, r, p, v, rho, alpha, omega, res, it, _ = s
+        rho_new = axes.dot(rhat, r)
+        breakdown = (jnp.abs(rho_new) < _EPS) | (jnp.abs(omega) < _EPS)
+        beta = (rho_new / jnp.where(jnp.abs(rho) < _EPS, _EPS, rho)) * \
+               (alpha / jnp.where(jnp.abs(omega) < _EPS, _EPS, omega))
+        p = r + beta * (p - omega * v)
+        v = matvec(p)
+        denom = axes.dot(rhat, v)
+        breakdown |= jnp.abs(denom) < _EPS
+        alpha = rho_new / jnp.where(jnp.abs(denom) < _EPS, _EPS, denom)
+        sres = r - alpha * v
+        t = matvec(sres)
+        tt = axes.dot(t, t)
+        omega = axes.dot(t, sres) / jnp.where(tt < _EPS, _EPS, tt)
+        x = x + alpha * p + omega * sres
+        r = sres - omega * t
+        res = axes.norm2(r)
+        return x, r, p, v, rho_new, alpha, omega, res, it + 1, breakdown
+
+    x, r, *_, res, iters, _ = jax.lax.while_loop(cond, body, init)
+    return x, iters, res

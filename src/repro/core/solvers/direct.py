@@ -1,0 +1,26 @@
+"""Dense direct policy evaluation — the single-device oracle.
+
+Used by exact policy iteration on small instances and by the test suite to
+cross-check every iterative inner solver: ``v_pi = (I - gamma P_pi)^{-1} g_pi``
+via LU.  Not distributed (materializes the dense n x n system).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mdp import DenseMDP, EllMDP, MDP
+
+
+def dense_policy_value(mdp: MDP, pi: jax.Array) -> jax.Array:
+    """Exact value of policy ``pi`` (global action ids) on an unsharded MDP."""
+    n = mdp.n_local
+    assert n == mdp.n_global, "direct solve requires the full (unsharded) MDP"
+    dense = mdp.as_dense() if isinstance(mdp, EllMDP) else mdp
+    rows = jnp.arange(n)
+    dt = jnp.result_type(jnp.float32, dense.p.dtype)
+    p_pi = dense.p[rows, pi]            # (n, n)
+    g_pi = dense.cost[rows, pi]         # (n,)
+    a = jnp.eye(n, dtype=dt) - dense.gamma * p_pi.astype(dt)
+    return jnp.linalg.solve(a, g_pi.astype(dt))

@@ -1,0 +1,133 @@
+"""Restarted GMRES with CGS2 orthogonalization and Givens rotations.
+
+This is the inner solver behind madupite's iGMRES-PI method (Gargiani et al.
+2023): for stiff / weakly-diagonally-dominant ``I - gamma P_pi`` (gamma -> 1,
+long mixing chains) Krylov acceleration beats Richardson sweeps by orders of
+magnitude in iteration count.
+
+Distribution notes (the PETSc-KSP -> JAX adaptation):
+  * basis vectors are state-sharded rows; every inner product is a
+    ``psum`` over the state axis (``axes.dot``);
+  * orthogonalization is classical Gram-Schmidt with one re-orthogonalization
+    pass (CGS2).  Unlike MGS, CGS2 needs only two ``(j, n_local) @ (n_local,)``
+    matmuls per Arnoldi step -> two collectives instead of ``j`` of them, and
+    the matmuls batch nicely on the MXU.  CGS2 is as stable as MGS in
+    practice (Giraud et al. 2005).
+  * the (restart+1, restart) Hessenberg solve is replicated on every device
+    (it is tiny), exactly like PETSc replicates it on every rank.
+
+Stopping is on the 2-norm residual estimate maintained by the Givens
+rotations; since ``||r||_inf <= ||r||_2`` this is conservative for the
+sup-norm forcing condition used by iPI.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Axes
+
+_TINY = 1e-30
+
+
+def _arnoldi_cycle(matvec, b, x, *, restart: int, tol, axes: Axes):
+    """One restart cycle. Returns (x_new, resnorm, iters_done)."""
+    n_local = x.shape[0]
+    dt = x.dtype
+    r = b - matvec(x)
+    beta = axes.norm2(r)
+    v0 = r / jnp.where(beta > _TINY, beta, 1.0)
+
+    V = jnp.zeros((restart + 1, n_local), dt).at[0].set(v0)
+    R = jnp.zeros((restart, restart), dt)   # rotated (triangular) H
+    cs = jnp.zeros((restart,), dt)
+    sn = jnp.zeros((restart,), dt)
+    g = jnp.zeros((restart + 1,), dt).at[0].set(beta)
+    row_ids = jnp.arange(restart + 1)
+
+    def body(j, carry):
+        V, R, cs, sn, g, res, it, done = carry
+        w = matvec(V[j])
+        # CGS2: two masked classical GS passes (2 collectives total).
+        mask = (row_ids <= j).astype(jnp.float32)
+        h1 = mask * axes.psum_state(V @ w)
+        w = w - h1 @ V
+        h2 = mask * axes.psum_state(V @ w)
+        w = w - h2 @ V
+        h = h1 + h2
+        hnorm = axes.norm2(w)
+        v_next = w / jnp.where(hnorm > _TINY, hnorm, 1.0)
+
+        # Apply the j previous Givens rotations to the new column.  Rotation i
+        # touches positions (i, i+1), all <= j, so position j+1 (== hnorm)
+        # stays untouched.
+        def rot(i, hv):
+            hi, hi1 = hv[i], hv[i + 1]
+            hv = hv.at[i].set(cs[i] * hi + sn[i] * hi1)
+            return hv.at[i + 1].set(-sn[i] * hi + cs[i] * hi1)
+
+        h = h.at[j + 1].set(hnorm)
+        h = jax.lax.fori_loop(
+            0, restart,
+            lambda i, hv: jnp.where(i < j, rot(i, hv), hv), h)
+        hj = jnp.take(h, j)
+        hj1 = hnorm
+
+        denom = jnp.sqrt(hj * hj + hj1 * hj1)
+        safe = denom > _TINY
+        c_new = jnp.where(safe, hj / jnp.where(safe, denom, 1.0), 1.0)
+        s_new = jnp.where(safe, hj1 / jnp.where(safe, denom, 1.0), 0.0)
+        gj = jnp.take(g, j)
+        g_new = g.at[j + 1].set(-s_new * gj).at[j].set(c_new * gj)
+        res_new = jnp.abs(-s_new * gj)
+
+        # Column j of R: rotated h (positions < j already rotated; j -> denom;
+        # the subdiagonal entry j+1 is annihilated by the new rotation).
+        col = h.at[j].set(denom).at[j + 1].set(0.0)
+        R_new = R.at[:, j].set(col[:restart])
+        V_new = V.at[j + 1].set(v_next)
+
+        keep = lambda new, old: jax.tree_util.tree_map(
+            lambda a, o: jnp.where(done, o, a), new, old)
+        V, R, cs_o, sn_o, g, res, it = keep(
+            (V_new, R_new, cs.at[j].set(c_new), sn.at[j].set(s_new), g_new,
+             res_new, it + 1),
+            (V, R, cs, sn, g, res, it))
+        done = done | (res <= tol)
+        return V, R, cs_o, sn_o, g, res, it, done
+
+    init = (V, R, cs, sn, g, beta, jnp.int32(0), beta <= tol)
+    V, R, _, _, g, res, iters, _ = jax.lax.fori_loop(0, restart, body, init)
+
+    # Solve the (iters x iters) triangular system; mask out unused columns.
+    active = jnp.arange(restart) < iters
+    diag_fix = jnp.diag(jnp.where(active, 0.0, 1.0)).astype(R.dtype)
+    R_m = jnp.where(active[None, :] & active[:, None], R, 0.0) + diag_fix
+    g_m = jnp.where(active, g[:restart], 0.0)
+    y = jax.scipy.linalg.solve_triangular(R_m, g_m, lower=False)
+    x_new = x + y @ V[:restart]
+    return x_new, res, iters
+
+
+def gmres(matvec, b: jax.Array, x0: jax.Array, *, tol, maxiter: int,
+          axes: Axes, restart: int = 32):
+    """Restarted GMRES.  Returns ``(x, iters, resnorm_2)``."""
+    restart = int(restart)
+
+    def cycle(s):
+        x, _, it = s
+        x, res, done_iters = _arnoldi_cycle(
+            matvec, b, x, restart=restart, tol=tol, axes=axes)
+        return x, res, it + done_iters
+
+    r0 = b - matvec(x0)
+    res0 = axes.norm2(r0)
+
+    def cond(s):
+        _, res, it = s
+        return (res > tol) & (it < maxiter)
+
+    x, res, iters = jax.lax.while_loop(
+        cond, cycle, (x0, res0, jnp.int32(0)))
+    return x, iters, res

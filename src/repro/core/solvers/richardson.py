@@ -1,0 +1,46 @@
+"""(Damped) Richardson iteration.
+
+For the policy-evaluation system ``(I - gamma P_pi) x = g_pi`` with
+``omega = 1`` one Richardson sweep is exactly one application of the
+policy-restricted Bellman operator ``T_pi``:
+
+    x <- x + (b - A x) = g_pi + gamma P_pi x = T_pi x
+
+so Richardson(0 sweeps from the warm start Tv) == value iteration and
+Richardson(L-1 sweeps) == modified policy iteration with L evaluations —
+the two methods mdpsolver offers are strict special cases (this is the
+madupite/iPI unification).  Stopping is on the sup-norm residual, the
+natural norm for contraction arguments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Axes
+
+
+def richardson(matvec, b: jax.Array, x0: jax.Array, *, tol, maxiter: int,
+               axes: Axes, omega: float = 1.0):
+    """Returns ``(x, iters, ||b - A x||_inf)``."""
+
+    def resid(x):
+        r = b - matvec(x)
+        return r, axes.pmax_state(jnp.max(jnp.abs(r)))
+
+    r0, n0 = resid(x0)
+
+    def cond(s):
+        _, _, norm, it = s
+        return (norm > tol) & (it < maxiter)
+
+    def body(s):
+        x, r, _, it = s
+        x = x + omega * r
+        r, norm = resid(x)
+        return x, r, norm, it + 1
+
+    x, _, norm, iters = jax.lax.while_loop(
+        cond, body, (x0, r0, n0, jnp.int32(0)))
+    return x, iters, norm

@@ -1,0 +1,74 @@
+"""Deterministic, restartable data pipeline.
+
+Two sources share one interface (``next_batch(step) -> batch dict``):
+
+  * ``SyntheticSource`` — tokens drawn with a counter-based RNG keyed on
+    ``(seed, step)``: any worker can produce any step's batch without state
+    (the property that makes checkpoint-restart and elastic re-sharding
+    trivial — the "cursor" is just the step number).
+  * ``MemmapSource`` — a flat binary token file read as overlapping windows;
+    the cursor is derived from ``step`` the same way.
+
+Modality frontends (vlm/audio) are stubs per the assignment: patch/frame
+embeddings are synthesized at the model dim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticSource:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_patches: int = 0         # vlm: prepended patch embeddings
+    d_model: int = 0
+    encoder_len: int = 0       # audio: frame embeddings
+
+    def next_batch(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        t_text = self.seq_len - self.n_patches
+        tokens = jax.random.randint(
+            key, (self.global_batch, t_text + 1), 0, self.vocab_size,
+            dtype=jnp.int32)
+        batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+        if self.n_patches:
+            kp = jax.random.fold_in(key, 1)
+            batch["patches"] = jax.random.normal(
+                kp, (self.global_batch, self.n_patches, self.d_model),
+                jnp.bfloat16)
+            # labels cover the full (patch + text) sequence
+            pad = jnp.zeros((self.global_batch, self.n_patches), jnp.int32)
+            batch["labels"] = jnp.concatenate([pad, batch["labels"]], axis=1)
+        if self.encoder_len:
+            kf = jax.random.fold_in(key, 2)
+            batch["patches"] = jax.random.normal(
+                kf, (self.global_batch, self.encoder_len, self.d_model),
+                jnp.bfloat16)
+        return batch
+
+
+@dataclasses.dataclass(frozen=True)
+class MemmapSource:
+    path: str
+    seq_len: int
+    global_batch: int
+    dtype: str = "uint16"
+
+    def next_batch(self, step: int) -> dict:
+        data = np.memmap(self.path, dtype=self.dtype, mode="r")
+        window = self.seq_len + 1
+        n_windows = (len(data) - 1) // window
+        idx = (step * self.global_batch
+               + np.arange(self.global_batch)) % max(n_windows, 1)
+        toks = np.stack([np.asarray(data[i * window:(i + 1) * window])
+                         for i in idx]).astype(np.int32)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the solver's compute hot spots.
+
+Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
+``ops.py`` (jit'd dispatch wrappers with XLA fallback), ``ref.py``
+(pure-jnp oracles; the ground truth for tests/test_kernels.py).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused ELL Bellman backup.
+
+The solver's hot spot (one per outer iteration, and the entire inner loop of
+VI).  Fuses gather -> weighted-sum -> +cost -> min/argmin over actions so the
+(n, m) Q-table never round-trips to HBM — on the XLA path the Q-table is a
+materialized intermediate, which at n=10^7, m=256 is a 10 GB HBM write+read
+per backup.  TPU adaptation of madupite's CSR row kernels (see DESIGN.md A1):
+
+  * the value vector ``v`` is staged *whole* into VMEM (BlockSpec with a
+    constant index map) — after the state-axis all-gather it is the only
+    operand reused across every row of the block, so one HBM->VMEM copy
+    serves ``TILE_N * m * K`` gathers.  VMEM budget: n_cols * 4 bytes
+    (<= ~3M states per shard; the ops.py wrapper falls back to XLA above).
+  * idx/val/cost stream through VMEM in ``(TILE_N, m, K)`` tiles.
+  * the gather is a VPU dynamic-gather over VMEM (``jnp.take``), which Mosaic
+    vectorizes; there is no MXU work in the sparse path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 256
+
+
+def _backup_kernel(idx_ref, val_ref, cost_ref, v_ref, out_v_ref, out_pi_ref,
+                   *, gamma: float):
+    v = v_ref[...]
+    idx = idx_ref[...]
+    val = val_ref[...]
+    dt = jnp.result_type(jnp.float32, val.dtype, v.dtype)
+    tn, m, k = idx.shape
+    gathered = jnp.take(v, idx.reshape(tn, m * k), axis=0).reshape(tn, m, k)
+    pv = jnp.sum(val.astype(dt) * gathered.astype(dt), axis=-1)
+    q = cost_ref[...].astype(dt) + gamma * pv
+    out_v_ref[...] = jnp.min(q, axis=-1)
+    out_pi_ref[...] = jnp.argmin(q, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "interpret", "tile_n"))
+def ell_backup(idx, val, cost, gamma: float, v, *, interpret: bool = False,
+               tile_n: int = DEFAULT_TILE_N):
+    """Fused backup on an ELL block -> ``(min_a Q (n,), argmin_a Q (n,) i32)``."""
+    n, m, k = idx.shape
+    tile = min(tile_n, n)
+    pad = (-n) % tile
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0), (0, 0)))
+        val = jnp.pad(val, ((0, pad), (0, 0), (0, 0)))
+        cost = jnp.pad(cost, ((0, pad), (0, 0)))
+    n_pad = n + pad
+    dt = jnp.result_type(jnp.float32, val.dtype, v.dtype)
+    out_v, out_pi = pl.pallas_call(
+        functools.partial(_backup_kernel, gamma=gamma),
+        grid=(n_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec(v.shape, lambda i: (0,)),   # whole v resident in VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), dt),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(idx, val, cost, v)
+    return out_v[:n], out_pi[:n]
+
+
+def ell_qvalues(idx, val, cost, gamma: float, v, *, interpret: bool = False,
+                tile_n: int = DEFAULT_TILE_N):
+    """Q-table variant (kept for parity with ref; the fused form is preferred)."""
+    from repro.kernels import spmv_ell
+    n, m, k = idx.shape
+    pv = spmv_ell.ell_matvec(idx.reshape(n * m, k), val.reshape(n * m, k), v,
+                             interpret=interpret, tile_n=tile_n)
+    return cost.astype(pv.dtype) + gamma * pv.reshape(n, m)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: dense-P Bellman backup (MXU path).
+
+For dense/benchmark MDPs the backup is ``Q = g + gamma * P @ v`` followed by a
+min over actions — a (n*m, n_cols) matvec.  The kernel tiles the contraction
+dimension so P streams HBM->VMEM exactly once per backup while the running
+``(TILE_N, m)`` accumulator stays in a VMEM scratch buffer, and fuses the
+cost-add + min/argmin into the final contraction step (the Q-table never
+exists in HBM).  MXU alignment: pick TILE_C a multiple of 128; the
+``(TILE_N * m, TILE_C) @ (TILE_C,)`` product maps onto the MXU as a skinny
+matmul (memory-bound by design — see EXPERIMENTS.md roofline: arithmetic
+intensity of a backup is ~0.25 flop/byte, so the win is bandwidth, i.e. the
+single pass over P plus no Q-table traffic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE_N = 128
+DEFAULT_TILE_C = 512
+
+
+def _dense_kernel(p_ref, cost_ref, v_ref, out_v_ref, out_pi_ref, acc_ref,
+                  *, gamma: float, c_steps: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tn, m, tc = p_ref.shape
+    p2 = p_ref[...].reshape(tn * m, tc).astype(jnp.float32)
+    x = v_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        p2, x, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(tn, m)
+
+    @pl.when(c == c_steps - 1)
+    def _finish():
+        q = cost_ref[...].astype(jnp.float32) + gamma * acc_ref[...]
+        out_v_ref[...] = q.min(axis=-1)
+        out_pi_ref[...] = jnp.argmin(q, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "interpret", "tile_n", "tile_c"))
+def dense_backup(p, cost, gamma: float, v, *, interpret: bool = False,
+                 tile_n: int = DEFAULT_TILE_N, tile_c: int = DEFAULT_TILE_C):
+    """Fused dense backup -> ``(min_a Q (n,), argmin_a Q (n,) i32)``."""
+    n, m, n_cols = p.shape
+    tn = min(tile_n, n)
+    tc = min(tile_c, n_cols)
+    pad_n = (-n) % tn
+    pad_c = (-n_cols) % tc
+    if pad_n or pad_c:
+        p = jnp.pad(p, ((0, pad_n), (0, 0), (0, pad_c)))
+        cost = jnp.pad(cost, ((0, pad_n), (0, 0)))
+    if pad_c:
+        v = jnp.pad(v, (0, pad_c))
+    np_, ncp = n + pad_n, n_cols + pad_c
+    c_steps = ncp // tc
+    out_v, out_pi = pl.pallas_call(
+        functools.partial(_dense_kernel, gamma=gamma, c_steps=c_steps),
+        grid=(np_ // tn, c_steps),
+        in_specs=[
+            pl.BlockSpec((tn, m, tc), lambda i, c: (i, 0, c)),
+            pl.BlockSpec((tn, m), lambda i, c: (i, 0)),
+            pl.BlockSpec((tc,), lambda i, c: (c,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn,), lambda i, c: (i,)),
+            pl.BlockSpec((tn,), lambda i, c: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((tn, m), jnp.float32)],
+        interpret=interpret,
+    )(p, cost, v)
+    return out_v[:n], out_pi[:n]

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: causal flash attention (GQA) — substrate hot spot.
+
+The LM substrate's training/prefill attention is the pure-JAX online-softmax
+scan in ``repro.models.attention``; on TPU the scan body becomes this fused
+kernel so scores/probs never leave VMEM.  Grid: (batch*kv_head*q_group,
+q_blocks); the kv loop runs inside the kernel body with a ``fori_loop`` over
+kv blocks up to the causal frontier, carrying (m, l, o) accumulators in VMEM
+scratch.
+
+Layout notes (MXU/VPU):
+  * block shapes (BLOCK_Q, d_head) x (BLOCK_K, d_head) put the contraction
+    on the lane dim; d_head in {64, 80, 128} for the assigned archs — all
+    <= 128, one MXU pass per (q, k) tile.
+  * accumulators are f32; inputs may be bf16.
+  * the causal mask is applied per-tile from broadcasted iotas, so fully
+    masked tiles are skipped by bounding the fori_loop at the frontier
+    (ceil((q_hi)/BLOCK_K) iterations) — the flash-2 scheduling.
+
+Oracle: ``repro.models.attention.chunked_attention`` (itself validated
+against dense softmax attention in tests/test_models.py); this kernel is
+validated against it over shape/dtype sweeps in tests/test_flash_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_k: int,
+                  scale: float, causal: bool):
+    # q_ref: (BLOCK_Q, d); k_ref/v_ref: (seq_k, d); o_ref: (BLOCK_Q, d)
+    block_q, d = q_ref.shape
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+
+    n_kv = seq_k // block_k
+    if causal:
+        # frontier: last kv block that any query in this q block can see
+        hi = jnp.minimum(((qi + 1) * block_q + block_k - 1) // block_k, n_kv)
+    else:
+        hi = n_kv
+
+    def body(ki, carry):
+        m_prev, l_prev, o_prev = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(
+            k_ref[...], ki * block_k, block_k, axis=0).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice_in_dim(
+            v_ref[...], ki * block_k, block_k, axis=0).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        o_new = o_prev * alpha[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, o_new
+
+    init = (jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32),
+            jnp.zeros((block_q, d), jnp.float32))
+    _, l, o = jax.lax.fori_loop(0, hi, body, init)
+    o_ref[...] = (o / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, T, H, d); k, v: (B, S, KV, d); returns (B, T, H, d).
+
+    GQA: H % KV == 0; query head h attends to kv head h // (H // KV).
+    T and S are padded to block multiples internally (causal masking keeps
+    padded keys inert for self-attention; for causal=False callers must
+    pass unpadded S or mask externally).
+    """
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+    bq = min(block_q, t)
+    bk = min(block_k, s)
+    pad_q = (-t) % bq
+    pad_k = (-s) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    tp, sp = t + pad_q, s + pad_k
+
+    # (B, T, H, d) -> (B*H, T, d) with h -> (kv_head, group)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, tp, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sp, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sp, d)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_k=bk, seq_k=sp, scale=scale,
+                          causal=causal),
+        grid=(b * h, tp // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, sp, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, sp, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, tp, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, tp, d).transpose(0, 2, 1, 3)
+    return out[:, :t]

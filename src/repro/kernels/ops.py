@@ -1,0 +1,80 @@
+"""Jit'd dispatch layer over the kernels.
+
+Implementations:
+  * ``"xla"``              — pure-jnp reference (ref.py); default on CPU.
+  * ``"pallas"``           — Pallas TPU kernels (compiled; TPU target).
+  * ``"pallas_interpret"`` — Pallas kernels run through the interpreter
+                             (CPU-correctness validation; used by tests).
+
+The distributed solver calls these entry points; switching ``impl`` swaps the
+compute engine without touching solver logic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+
+_DEFAULT_IMPL = "xla"
+_VALID = ("xla", "pallas", "pallas_interpret")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in _VALID, impl
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def _resolve(impl: str | None) -> str:
+    impl = impl or _DEFAULT_IMPL
+    assert impl in _VALID, impl
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "impl"))
+def ell_backup(idx, val, cost, gamma: float, v, *, impl: str | None = None):
+    """Fused Bellman backup on an ELL block -> (v_new (n,), argmin (n,) int32)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.ell_backup(idx, val, cost, gamma, v)
+    from . import bellman_ell
+    return bellman_ell.ell_backup(idx, val, cost, gamma, v,
+                                  interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "impl"))
+def ell_qvalues(idx, val, cost, gamma: float, v, *, impl: str | None = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.ell_qvalues(idx, val, cost, gamma, v)
+    from . import bellman_ell
+    return bellman_ell.ell_qvalues(idx, val, cost, gamma, v,
+                                   interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def ell_matvec(idx, val, x, *, impl: str | None = None):
+    """Policy-restricted SpMV y = P_pi @ x on (n, K) ELL rows."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.ell_matvec(idx, val, x)
+    from . import spmv_ell
+    return spmv_ell.ell_matvec(idx, val, x,
+                               interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "impl"))
+def dense_backup(p, cost, gamma: float, v, *, impl: str | None = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.dense_backup(p, cost, gamma, v)
+    from . import dense_backup as dense_backup_kernel
+    return dense_backup_kernel.dense_backup(p, cost, gamma, v,
+                                            interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the semantic ground truth: the Pallas kernels must match them
+bit-for-bit up to float tolerance (tests/test_kernels.py sweeps shapes and
+dtypes against these).  They are also the XLA fallback implementation used on
+non-TPU backends.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _acc_dtype(*arrays):
+    """Accumulation dtype: at least f32, f64 if any operand is f64 (the
+    PETSc-faithful double-precision path)."""
+    return jnp.result_type(jnp.float32, *(a.dtype for a in arrays))
+
+
+def ell_gather_dot(idx: jax.Array, val: jax.Array, v: jax.Array) -> jax.Array:
+    """sum_k val[..., k] * v[idx[..., k]]  — the ELL row-gather dot.
+
+    idx: (..., K) int32 global column ids; val: (..., K); v: (n_cols,).
+    Returns (...,) accumulated in >= f32 (f64 when v is f64).
+    """
+    dt = _acc_dtype(val, v)
+    gathered = jnp.take(v, idx, axis=0)
+    return jnp.sum(val.astype(dt) * gathered.astype(dt), axis=-1)
+
+
+def ell_qvalues(idx: jax.Array, val: jax.Array, cost: jax.Array, gamma: float,
+                v: jax.Array) -> jax.Array:
+    """Q(s, a) = g(s, a) + gamma * sum_{s'} P(s, a, s') v(s')  on an ELL block."""
+    pv = ell_gather_dot(idx, val, v)
+    return cost.astype(pv.dtype) + gamma * pv
+
+
+def ell_backup(idx: jax.Array, val: jax.Array, cost: jax.Array, gamma: float,
+               v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused Bellman backup: (min_a Q, argmin_a Q) with smallest-index tie-break."""
+    q = ell_qvalues(idx, val, cost, gamma, v)
+    return jnp.min(q, axis=-1), jnp.argmin(q, axis=-1).astype(jnp.int32)
+
+
+def ell_matvec(idx: jax.Array, val: jax.Array, x: jax.Array) -> jax.Array:
+    """y(s) = sum_{s'} P_pi(s, s') x(s') on policy-restricted ELL rows (n, K)."""
+    return ell_gather_dot(idx, val, x)
+
+
+def dense_qvalues(p: jax.Array, cost: jax.Array, gamma: float,
+                  v: jax.Array) -> jax.Array:
+    """Dense-P Q table: cost + gamma * P @ v, >= f32 accumulation (MXU path)."""
+    dt = _acc_dtype(p, v)
+    pv = jax.lax.dot_general(
+        p.astype(dt), v.astype(dt),
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST)
+    return cost.astype(dt) + gamma * pv
+
+
+def dense_backup(p: jax.Array, cost: jax.Array, gamma: float,
+                 v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    q = dense_qvalues(p, cost, gamma, v)
+    return jnp.min(q, axis=-1), jnp.argmin(q, axis=-1).astype(jnp.int32)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: ELL SpMV (policy-restricted transition matvec).
+
+The inner-solver hot spot: every Richardson sweep / Krylov iteration applies
+``A_pi x = x - gamma * P_pi x`` and ``P_pi x`` is this kernel.  Same VMEM
+strategy as :mod:`repro.kernels.bellman_ell` — ``x`` staged whole into VMEM,
+(row, K) tiles streamed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 512
+
+
+def _spmv_kernel(idx_ref, val_ref, x_ref, out_ref):
+    x = x_ref[...]
+    idx = idx_ref[...]
+    val = val_ref[...]
+    dt = jnp.result_type(jnp.float32, val.dtype, x.dtype)
+    tn, k = idx.shape
+    gathered = jnp.take(x, idx.reshape(tn * k), axis=0).reshape(tn, k)
+    out_ref[...] = jnp.sum(val.astype(dt) * gathered.astype(dt), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_n"))
+def ell_matvec(idx, val, x, *, interpret: bool = False,
+               tile_n: int = DEFAULT_TILE_N):
+    """``y[i] = sum_k val[i, k] * x[idx[i, k]]`` for (n, K) ELL rows."""
+    n, k = idx.shape
+    tile = min(tile_n, n)
+    pad = (-n) % tile
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        val = jnp.pad(val, ((0, pad), (0, 0)))
+    n_pad = n + pad
+    dt = jnp.result_type(jnp.float32, val.dtype, x.dtype)
+    out = pl.pallas_call(
+        _spmv_kernel,
+        grid=(n_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),   # whole x resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), dt),
+        interpret=interpret,
+    )(idx, val, x)
+    return out[:n]

@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state; the 512-device dry-run sets XLA_FLAGS before any
+jax import (see dryrun.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

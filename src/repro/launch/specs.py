@@ -1,0 +1,139 @@
+"""ShapeDtypeStruct input builders for every (arch x shape x mesh) cell.
+
+``input_specs`` returns sharding-annotated ShapeDtypeStructs for all inputs
+of the lowered step — weak-type-correct, shardable, zero allocation.  The
+same builders feed the dry-run, the roofline extraction, and (materialized)
+the real launchers.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_train_config
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.models import build_model
+from repro.train import sharding as shd
+from repro.train.optimizer import init_opt_state
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in shd.batch_axes(mesh)]))
+
+
+def n_microbatches(arch: str, shape: ShapeConfig, mesh) -> int:
+    tcfg = get_train_config(arch)
+    per_dev = shape.global_batch // dp_size(mesh)
+    micro = max(tcfg.microbatch, 1)
+    return max(per_dev // micro, 1)
+
+
+def _replicated_specs(shapes):
+    return jax.tree.map(lambda s: P(*([None] * len(s.shape))), shapes)
+
+
+def param_specs(arch: str, mesh, *, fsdp: bool = True):
+    """(abstract param shapes, PartitionSpec tree, sharded SDS tree)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    if get_train_config(arch).replicate_params:
+        specs = _replicated_specs(shapes)
+    else:
+        specs = shd.infer_param_specs(shapes, mesh, fsdp=fsdp)
+    sds = jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs)
+    return model, shapes, specs, sds
+
+
+def opt_specs(arch: str, mesh, param_shapes, *, fsdp: bool = True):
+    tcfg = get_train_config(arch)
+    shapes = jax.eval_shape(lambda p: init_opt_state(p, tcfg), param_shapes)
+    if tcfg.replicate_params:
+        specs = _replicated_specs(shapes)
+    else:
+        specs = shd.infer_param_specs(shapes, mesh, fsdp=fsdp)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs)
+
+
+def batch_specs(arch: str, shape: ShapeConfig, mesh):
+    """Training/prefill batch SDS: tokens/labels (+ patches/frames)."""
+    cfg = get_config(arch)
+    b, t = shape.global_batch, shape.seq_len
+    dspec = shd.data_spec(mesh, 2)
+    out = {}
+    if cfg.family == "vlm":
+        t_text = t - cfg.n_patches
+        out["tokens"] = _sds((b, t_text), jnp.int32, mesh, dspec)
+        out["labels"] = _sds((b, t), jnp.int32, mesh, dspec)
+        out["patches"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.bfloat16,
+                              mesh, shd.data_spec(mesh, 3))
+    elif cfg.family == "encdec":
+        out["tokens"] = _sds((b, t), jnp.int32, mesh, dspec)
+        out["labels"] = _sds((b, t), jnp.int32, mesh, dspec)
+        out["patches"] = _sds((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16,
+                              mesh, shd.data_spec(mesh, 3))
+    else:
+        out["tokens"] = _sds((b, t), jnp.int32, mesh, dspec)
+        out["labels"] = _sds((b, t), jnp.int32, mesh, dspec)
+    return out
+
+
+def cache_specs(arch: str, shape: ShapeConfig, mesh):
+    """Decode-cache SDS tree matching model.init_cache structure."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    cshapes = jax.eval_shape(
+        lambda: model.init_cache(b, s, dtype=jnp.bfloat16))
+    cs = shd.cache_spec(cfg, mesh, b)
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if "len" in names:
+            return _sds(leaf.shape, leaf.dtype, mesh, P())
+        if any(n in ("k", "v", "enc_k", "enc_v") for n in names):
+            return _sds(leaf.shape, leaf.dtype, mesh, cs["attn"])
+        if "conv" in names:
+            return _sds(leaf.shape, leaf.dtype, mesh, cs["conv"])
+        if "ssm" in names:
+            return _sds(leaf.shape, leaf.dtype, mesh, cs["ssm"])
+        return _sds(leaf.shape, leaf.dtype, mesh, P())
+    return jax.tree_util.tree_map_with_path(one, cshapes)
+
+
+def decode_token_specs(arch: str, shape: ShapeConfig, mesh):
+    cfg = get_config(arch)
+    b = shape.global_batch
+    dp = dp_size(mesh)
+    spec = shd.data_spec(mesh, 2) if b % dp == 0 and b >= dp else P(None, None)
+    return _sds((b, 1), jnp.int32, mesh, spec)
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> dict:
+    """All SDS inputs for the cell's step function, by kind."""
+    shape = SHAPES[shape_name]
+    model, pshapes, pspecs, psds = param_specs(arch, mesh)
+    out = dict(model=model, params=psds, param_specs=pspecs, shape=shape)
+    if shape.kind == "train":
+        out["opt"] = opt_specs(arch, mesh, pshapes)
+        out["batch"] = batch_specs(arch, shape, mesh)
+        out["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+        out["n_micro"] = n_microbatches(arch, shape, mesh)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_specs(arch, shape, mesh)
+    else:  # decode
+        out["cache"] = cache_specs(arch, shape, mesh)
+        out["token"] = decode_token_specs(arch, shape, mesh)
+    return out

@@ -1,0 +1,15 @@
+"""LM substrate: the assigned architectures as composable JAX modules.
+
+Pure-functional modules: each exposes ``init(key, cfg) -> params`` and an
+apply function; parameters are plain pytrees (dicts), layer stacks are
+scan-stacked along a leading L axis for O(1)-size HLO.
+"""
+
+from repro.models.lm import DecoderLM
+from repro.models.whisper import WhisperModel
+
+
+def build_model(cfg):
+    if cfg.family == "encdec":
+        return WhisperModel(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,150 @@
+"""GQA/MQA attention with RoPE: train (chunked-flash), prefill, decode.
+
+Memory strategy (TPU): training/prefill attention is *online-softmax over KV
+chunks* (flash-style, pure JAX ``lax.scan``) so the (T, T) score matrix never
+materializes — peak is (T_q, chunk).  The Pallas flash kernel would replace
+the scan body on real hardware; the scan form is what we lower for the
+dry-run and it bounds memory identically.  Decode reads a (B, KV, S, d) cache
+(sequence-shardable for the long-context shapes — softmax reductions over a
+sharded S are handled by SPMD with psum/pmax collectives).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"wq": _init(k1, (d, h * hd), dtype=dtype),
+            "wk": _init(k2, (d, kv * hd), dtype=dtype),
+            "wv": _init(k3, (d, kv * hd), dtype=dtype),
+            "wo": _init(k4, (h * hd, d), scale=(h * hd) ** -0.5, dtype=dtype)}
+
+
+def _split_heads(x, n_heads, d_head):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, d_head)
+
+
+def _gqa_scores(q, k):
+    """q: (B,T,H,hd), k: (B,S,KV,hd) -> (B, KV, H/KV, T, S)."""
+    b, t, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, t, kvh, h // kvh, hd)
+    return jnp.einsum("btkgh,bskh->bkgts", qg, k) * (hd ** -0.5)
+
+
+def _gqa_out(p, v):
+    """p: (B,KV,G,T,S), v: (B,S,KV,hd) -> (B,T,H,hd)."""
+    b, kvh, g, t, s = p.shape
+    o = jnp.einsum("bkgts,bskh->btkgh", p, v)
+    return o.reshape(b, t, kvh * g, v.shape[-1])
+
+
+def chunked_attention(q, k, v, *, q_offset, chunk: int, causal: bool = True,
+                      kv_len: int | None = None):
+    """Online-softmax attention over KV chunks.
+
+    q: (B,T,H,hd) at absolute positions [q_offset, q_offset+T);
+    k, v: (B,S,KV,hd).  S must be a multiple of ``chunk`` (caller pads;
+    ``kv_len`` masks padded key positions >= kv_len).
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    kvh = k.shape[2]
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd).swapaxes(0, 1)
+    q32 = q.astype(jnp.float32)
+    qpos = q_offset + jnp.arange(t)
+
+    def step(carry, xs):
+        m_prev, l_prev, o_prev = carry
+        ci, kch, vch = xs
+        sc = _gqa_scores(q32, kch.astype(jnp.float32))   # (B,KV,G,T,C)
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((t, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]       # (T, C)
+        if kv_len is not None:
+            mask &= (kpos < kv_len)[None, :]
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m_prev, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(-1)
+        o_new = o_prev * alpha[..., None] + jnp.einsum(
+            "bkgtc,bckh->bkgth", p, vch.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    g = h // kvh
+    init = (jnp.full((b, kvh, g, t), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, t), jnp.float32),
+            jnp.zeros((b, kvh, g, t, hd), jnp.float32))
+    (m, l, o), _ = jax.lax.scan(step, init, (jnp.arange(n_chunks), kc, vc))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    # (B,KV,G,T,hd) -> (B,T,H,hd)
+    return o.swapaxes(2, 3).swapaxes(1, 2).reshape(b, t, h, hd).astype(q.dtype)
+
+
+def apply_attention(params, x, cfg, *, positions, cache=None,
+                    kv_x=None, causal=True):
+    """Unified attention apply.
+
+    * train/prefill: ``cache=None`` -> returns (y, (k, v)) over x itself
+      (or over ``kv_x`` for cross-attention, non-causal).
+    * decode: ``cache=(k_cache, v_cache, length)`` -> x is (B,1,d); returns
+      (y, updated cache tuple).
+    """
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], h, hd)
+    if kv_x is None:  # cross-attention uses unrotated q/k (whisper-style)
+        q = rope(q, positions, cfg.rope_theta)
+
+    if cache is None:
+        src = x if kv_x is None else kv_x
+        k = _split_heads(src @ params["wk"], kv, hd)
+        v = _split_heads(src @ params["wv"], kv, hd)
+        if kv_x is None:  # self-attention: rotate keys
+            k = rope(k, positions, cfg.rope_theta)
+        t_kv = k.shape[1]
+        chunk = min(cfg.attn_chunk, t_kv)
+        pad = (-t_kv) % chunk
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y = chunked_attention(q, k, v, q_offset=0, chunk=chunk,
+                              causal=causal and kv_x is None,
+                              kv_len=t_kv if pad else None)
+        out = y.reshape(*y.shape[:2], h * hd) @ params["wo"]
+        return out, (k[:, :t_kv], v[:, :t_kv])
+
+    # ---- decode: one new token against the cache -------------------------- #
+    k_cache, v_cache, length = cache
+    k_new = _split_heads(x @ params["wk"], kv, hd)
+    k_new = rope(k_new, positions, cfg.rope_theta)
+    v_new = _split_heads(x @ params["wv"], kv, hd)
+    # caches are (B, S, KV, hd); write at `length` (index dtypes must match —
+    # keep everything at length.dtype so x64 mode doesn't mix int32/int64)
+    zero = jnp.zeros((), length.dtype)
+    start = (zero, jnp.asarray(length, length.dtype), zero, zero)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), start)
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), start)
+    sc = _gqa_scores(q.astype(jnp.float32), k_cache.astype(jnp.float32))
+    s = k_cache.shape[1]
+    valid = jnp.arange(s) <= length           # positions 0..length inclusive
+    sc = jnp.where(valid[None, None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    y = _gqa_out(p, v_cache.astype(jnp.float32)).astype(x.dtype)
+    out = y.reshape(*y.shape[:2], h * hd) @ params["wo"]
+    return out, (k_cache, v_cache, length + 1)

@@ -1,0 +1,73 @@
+"""Shared primitives: norms, projections, rotary embeddings, MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(w, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------- #
+# Rotary position embeddings
+# ---------------------------------------------------------------------------- #
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, n_heads, d_head); positions: broadcastable to (..., T)."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d // 2, dtype=jnp.float32) / (d // 2))
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., T, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------- #
+# MLPs (dense FFN variants)
+# ---------------------------------------------------------------------------- #
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {"w_gate": _init(k1, (d_model, d_ff), dtype=dtype),
+                "w_up": _init(k2, (d_model, d_ff), dtype=dtype),
+                "w_down": _init(k3, (d_ff, d_model), dtype=dtype)}
+    # relu2 (nemotron squared-ReLU) and gelu (whisper) share the 2-matrix shape
+    return {"w_up": _init(k1, (d_model, d_ff), dtype=dtype),
+            "w_down": _init(k2, (d_ff, d_model), dtype=dtype)}
+
+
+def apply_mlp(params, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    else:
+        raise ValueError(mlp_type)
+    return h @ params["w_down"]

@@ -1,0 +1,161 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train scan + O(1) decode.
+
+The SSD algorithm (Dao & Gu 2024): split the sequence into chunks of length
+``L``; within a chunk the recurrence is computed as a (masked, decay-weighted)
+attention-like matmul (MXU-friendly); across chunks a small recurrent state
+``(H, d_head, N)`` is carried by a ``lax.scan``.  Decode is the pure
+recurrence: ``S <- a * S + dt * B x``, ``y = C . S + D x``.
+
+Shapes: d_inner = expand * d_model; H = d_inner / head_p heads of size
+``head_p``; B/C are shared across heads (ngroups=1) with state size N.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, rms_norm
+
+
+def init_mamba2(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner = cfg.expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": _init(ks[0], (d, 2 * d_inner + 2 * n + h), dtype=dtype),
+        "conv_w": _init(ks[1], (cfg.d_conv, conv_dim),
+                        scale=cfg.d_conv ** -0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[2], (h,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))
+            ).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": _init(ks[3], (d_inner, d), dtype=dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner = cfg.expand * cfg.d_model
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over time. xbc: (B,T,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None])
+
+
+def ssd_scan(x, dt, a_log, b_mat, c_mat, chunk: int):
+    """Chunked SSD. x: (B,T,H,P); dt: (B,T,H); b_mat/c_mat: (B,T,N).
+
+    Returns y: (B,T,H,P) and the final state (B,H,P,N).
+    """
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    l = min(chunk, t)
+    pad = (-t) % l
+    if pad:
+        # state-neutral padding: dt=0 => decay exp(0)=1 and zero input
+        # contribution, so the carried state is untouched by pad tokens.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    t_pad = t + pad
+    nc = t_pad // l
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(bsz, nc, l, h, p)
+    dtc = dt.astype(f32).reshape(bsz, nc, l, h)
+    bc = b_mat.astype(f32).reshape(bsz, nc, l, n)
+    cc = c_mat.astype(f32).reshape(bsz, nc, l, n)
+
+    log_a = -jnp.exp(a_log.astype(f32))[None, None, None] * dtc   # (B,nc,L,H) <= 0
+    cum = jnp.cumsum(log_a, axis=2)                               # within-chunk
+    dtx = xc * dtc[..., None]                                     # fold dt into x
+
+    # intra-chunk: y_i += C_i.B_j * exp(cum_i - cum_j) * dtx_j  (j <= i)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)                # (B,nc,L,L)
+    ii = jnp.arange(l)
+    causal = (ii[:, None] >= ii[None, :])
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :])      # (B,nc,L,L,H)
+    m = jnp.where(causal[None, None, :, :, None], decay, 0.0) \
+        * scores[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, dtx)
+
+    # chunk-local end states: S_c = sum_j exp(cum_end - cum_j) * B_j (x) dtx_j
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                  # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bc, decay_end, dtx)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    def step(s_prev, xs):
+        st, cd = xs                                               # (B,H,P,N), (B,H)
+        s_new = s_prev * cd[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, p, n), f32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    s_prevs = s_prevs.swapaxes(0, 1)                              # (B,nc,H,P,N)
+
+    # inter-chunk: y_i += (C_i * exp(cum_i)) . S_prev
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         cc, jnp.exp(cum), s_prevs)
+    y = (y_intra + y_inter).reshape(bsz, t_pad, h, p)[:, :t]
+    return y, s_final
+
+
+def apply_mamba2(params, x, cfg, *, cache=None):
+    """cache=None: full-sequence SSD (train/prefill); returns (y, cache_out).
+    cache=(conv_state (B,K-1,C), ssm_state (B,H,P,N)): single-token decode."""
+    bsz, t, d = x.shape
+    d_inner = cfg.expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    p = d_inner // h
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+
+    if cache is None:
+        xbc_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xs, b_mat, c_mat = jnp.split(xbc_conv, [d_inner, d_inner + n], -1)
+        xh = xs.reshape(bsz, t, h, p)
+        y, s_final = ssd_scan(xh, dt, params["a_log"], b_mat, c_mat,
+                              cfg.ssm_chunk)
+        conv_state = jnp.pad(xbc, ((0, 0), (cfg.d_conv - 1, 0), (0, 0))) \
+            [:, -(cfg.d_conv - 1):, :]
+        cache_out = (conv_state.astype(x.dtype), s_final)
+    else:
+        conv_state, s_prev = cache
+        window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+        conv = sum(window[:, i:i + 1, :] * params["conv_w"][i][None, None]
+                   for i in range(cfg.d_conv))
+        xbc_conv = jax.nn.silu(conv + params["conv_b"][None, None])
+        xs, b_mat, c_mat = jnp.split(xbc_conv, [d_inner, d_inner + n], -1)
+        xh = xs.reshape(bsz, 1, h, p).astype(jnp.float32)
+        a = jnp.exp(-jnp.exp(params["a_log"]) * dt[:, 0])         # (B,H)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         b_mat[:, 0].astype(jnp.float32), xh[:, 0])
+        s_new = s_prev * a[..., None, None] + dbx
+        y = jnp.einsum("bn,bhpn->bhp",
+                       c_mat[:, 0].astype(jnp.float32), s_new)[:, None]
+        cache_out = (window[:, 1:, :], s_new)
+
+    y = y + params["d_skip"][None, None, :, None] * \
+        xs.reshape(bsz, t, h, p).astype(jnp.float32)
+    y = y.reshape(bsz, t, d_inner).astype(x.dtype)
+    y = rms_norm(params["norm_w"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"], cache_out

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts layer (GShard/Switch-style capacity dispatch).
+
+Expert-parallel design: expert weights carry a leading E axis sharded over
+the ``model`` mesh axis; tokens are grouped (G groups of S tokens, G sharded
+over ``data``), and the dispatch/combine einsums generate the all-to-all
+collectives under SPMD.  Dispatch tensors are built slot-by-slot (a Python
+loop over the top-k slots) so the peak intermediate is (G, S, E, C), never
+(G, S, k, E, C) — at arctic scale (E=128, top-2) that is the difference
+between ~170 MB and ~1.4 GB per microbatch.
+
+Aux outputs: load-balance loss (Switch) and router z-loss, returned to the
+trainer and added with configurable weights.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"router": _init(k1, (d, e), scale=d ** -0.5, dtype=jnp.float32),
+         "w_up": _init(k2, (e, d, f), scale=d ** -0.5, dtype=dtype),
+         "w_down": _init(k3, (e, f, d), scale=f ** -0.5, dtype=dtype)}
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = _init(k4, (e, d, f), scale=d ** -0.5, dtype=dtype)
+    return p
+
+
+def _capacity(s: int, top_k: int, n_experts: int, factor: float) -> int:
+    if s * top_k <= 256:
+        # decode / tiny-group regime: dropless (capacity = group size bounds
+        # any expert's intake), else single-token decode drops slots
+        return s
+    return max(1, int(s * top_k * factor / n_experts))
+
+
+def apply_moe(params, x, cfg):
+    """x: (B, T, d) -> (y, aux) with aux = {load_balance_loss, router_z_loss}."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    s = min(cfg.moe_group_size, b * t)
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    pad = (-n_tok) % s
+    if pad:  # zero-pad to a full group; padded rows are sliced off below
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    g = tokens.shape[0] // s
+    xg = tokens.reshape(g, s, d)
+    c = _capacity(s, k, e, cfg.capacity_factor)
+
+    logits = xg.astype(jnp.float32) @ params["router"]          # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)                     # (G,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (computed on slot-0 statistics, Switch-style)
+    me = probs.mean(axis=(0, 1))                                 # (E,)
+    ce = jax.nn.one_hot(experts[..., 0], e,
+                        dtype=jnp.float32).mean(axis=(0, 1))
+    load_balance = (e * jnp.sum(me * ce)).astype(jnp.float32)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) \
+        .astype(jnp.float32)
+
+    # slot-by-slot dispatch/combine construction
+    dispatch = jnp.zeros((g, s, e, c), jnp.float32)
+    combine = jnp.zeros((g, s, e, c), jnp.float32)
+    counts = jnp.zeros((g, e), jnp.float32)
+    for slot in range(k):
+        m = jax.nn.one_hot(experts[..., slot], e,
+                           dtype=jnp.float32)                    # (G,S,E)
+        pos = counts[:, None, :] + jnp.cumsum(m, axis=1) - m     # 0-based
+        keep = (pos < c) * m
+        sl = jax.nn.one_hot(pos.astype(jnp.int32), c,
+                            dtype=jnp.float32) * keep[..., None]
+        dispatch = dispatch + sl
+        combine = combine + sl * gates[..., slot, None, None]
+        counts = counts + m.sum(axis=1)
+
+    comp_dt = x.dtype
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(comp_dt), xg)
+    if cfg.mlp_type == "swiglu":
+        h = (jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, params["w_gate"]))
+             * jnp.einsum("egcd,edf->egcf", xe, params["w_up"]))
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xe, params["w_up"]))
+    ye = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(comp_dt), ye)
+    y = y.reshape(-1, d)[:n_tok]
+    aux = {"load_balance_loss": load_balance, "router_z_loss": z_loss}
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,216 @@
+"""Whisper-style encoder–decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, enc_len, d) directly into the encoder.
+Encoder: non-causal self-attention + GELU MLP.  Decoder: causal self-attn
+(cached at decode) + cross-attn over the encoder output (enc K/V precomputed
+once and carried in the cache) + GELU MLP.  Norms are LayerNorm (scale+bias)
+as in Whisper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models.layers import _init, apply_mlp, init_mlp, layer_norm
+from repro.models.lm import zero_aux
+
+
+def _init_ln(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def _init_enc_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _init_ln(cfg.d_model, dtype),
+            "attn": attn_lib.init_attention(k1, cfg, dtype),
+            "ln2": _init_ln(cfg.d_model, dtype),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def _init_dec_block(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": _init_ln(cfg.d_model, dtype),
+            "self_attn": attn_lib.init_attention(k1, cfg, dtype),
+            "ln_x": _init_ln(cfg.d_model, dtype),
+            "cross_attn": attn_lib.init_attention(k2, cfg, dtype),
+            "ln2": _init_ln(cfg.d_model, dtype),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, "gelu", dtype)}
+
+
+def _enc_block(p, x, cfg, positions):
+    h, _ = attn_lib.apply_attention(
+        p["attn"], layer_norm(p["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, causal=False)
+    x = x + h
+    return x + apply_mlp(p["mlp"], layer_norm(p["ln2"], x, cfg.norm_eps),
+                         "gelu")
+
+
+def _cross_attend(p, x, enc_k, enc_v, cfg):
+    """Full (non-chunked) cross-attention over the (short) encoder output."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(*x.shape[:2], h, hd)
+    sc = attn_lib._gqa_scores(q.astype(jnp.float32),
+                              enc_k.astype(jnp.float32))
+    pr = jax.nn.softmax(sc, axis=-1)
+    y = attn_lib._gqa_out(pr, enc_v.astype(jnp.float32)).astype(x.dtype)
+    return y.reshape(*x.shape[:2], h * hd) @ p["wo"]
+
+
+def _dec_block(p, x, cache, *, cfg, positions, enc_kv):
+    h, cache_out = attn_lib.apply_attention(
+        p["self_attn"], layer_norm(p["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, cache=cache)
+    x = x + h
+    x = x + _cross_attend(p["cross_attn"],
+                          layer_norm(p["ln_x"], x, cfg.norm_eps),
+                          enc_kv[0], enc_kv[1], cfg)
+    x = x + apply_mlp(p["mlp"], layer_norm(p["ln2"], x, cfg.norm_eps), "gelu")
+    return x, cache_out, zero_aux()
+
+
+class WhisperModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(key, 6)
+        enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+        dec_keys = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "embed": _init(ks[2], (cfg.vocab_size, cfg.d_model), scale=1.0,
+                           dtype=dtype),
+            "unembed": _init(ks[3], (cfg.d_model, cfg.vocab_size),
+                             dtype=dtype),
+            "enc_norm": _init_ln(cfg.d_model, dtype),
+            "final_norm": _init_ln(cfg.d_model, dtype),
+            "encoder": jax.vmap(
+                functools.partial(_init_enc_block, cfg=cfg, dtype=dtype)
+            )(enc_keys),
+            "decoder": jax.vmap(
+                functools.partial(_init_dec_block, cfg=cfg, dtype=dtype)
+            )(dec_keys),
+        }
+
+    def encode(self, params, frames, remat: str = "full",
+               unroll: bool = False):
+        """frames: (B, enc_len, d) precomputed conv-frontend output (stub)."""
+        cfg = self.cfg
+        b, s, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        fn = functools.partial(_enc_block, cfg=cfg, positions=positions)
+        if remat != "none":
+            fn = jax.checkpoint(fn)
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        if unroll:
+            for i in range(cfg.encoder_layers):
+                x = fn(jax.tree.map(lambda a: a[i], params["encoder"]), x)
+        else:
+            x, _ = jax.lax.scan(lambda h, p_l: (fn(p_l, h), None),
+                                x, params["encoder"])
+        return layer_norm(params["enc_norm"], x, cfg.norm_eps)
+
+    def enc_kv(self, params, enc_out):
+        """Per-decoder-layer cross K/V (L, B, S, KV, hd), computed once."""
+        cfg = self.cfg
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+        def one(p_l):
+            k = (enc_out @ p_l["cross_attn"]["wk"]).reshape(
+                *enc_out.shape[:2], kv, hd)
+            v = (enc_out @ p_l["cross_attn"]["wv"]).reshape(
+                *enc_out.shape[:2], kv, hd)
+            return k, v
+        return jax.lax.map(one, params["decoder"])
+
+    def forward(self, params, tokens, *, frames=None, enc_out=None,
+                mode: str = "train", cache=None, remat: str = "full",
+                unroll: bool = False):
+        """Returns (hidden, cache_out, aux).  decode: cache carries enc K/V."""
+        cfg = self.cfg
+        if enc_out is None and frames is not None:
+            enc_out = self.encode(params, frames, remat, unroll)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        b, t, _ = x.shape
+        if mode == "decode":
+            positions = jnp.full((b, 1), cache["len"], jnp.int32)
+            ek, ev = cache["enc_k"], cache["enc_v"]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+            ek, ev = self.enc_kv(params, enc_out)
+
+        def blk(p_l, h, c_l, ek_l, ev_l):
+            return _dec_block(p_l, h, c_l, cfg=cfg, positions=positions,
+                              enc_kv=(ek_l, ev_l))
+        fn = blk
+        if mode == "train" and remat != "none":
+            fn = jax.checkpoint(blk)
+
+        if mode in ("train", "prefill"):
+            def body(carry, xs):
+                h = carry
+                p_l, ek_l, ev_l = xs
+                h, c, _ = fn(p_l, h, None, ek_l, ev_l)
+                return h, (dict(k=c[0], v=c[1]) if mode == "prefill" else None)
+            if unroll:
+                caches = []
+                for i in range(cfg.n_layers):
+                    sl = jax.tree.map(lambda a: a[i],
+                                      (params["decoder"], ek, ev))
+                    x, c, _ = fn(sl[0], x, None, sl[1], sl[2])
+                    if mode == "prefill":
+                        caches.append(dict(k=c[0], v=c[1]))
+                caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches) \
+                    if caches else None
+            else:
+                x, caches = jax.lax.scan(body, x, (params["decoder"], ek, ev))
+            cache_out = None
+            if mode == "prefill":
+                cache_out = {"blocks": caches, "enc_k": ek, "enc_v": ev,
+                             "len": jnp.int32(t)}
+        else:
+            length = cache["len"]
+
+            def body(carry, xs):
+                h = carry
+                p_l, c_l, ek_l, ev_l = xs
+                h, (k, v, _), _ = fn(p_l, h, (c_l["k"], c_l["v"], length),
+                                     ek_l, ev_l)
+                return h, dict(k=k, v=v)
+            if unroll:
+                blocks = []
+                for i in range(cfg.n_layers):
+                    p_l, c_l, ek_l, ev_l = jax.tree.map(
+                        lambda a: a[i],
+                        (params["decoder"], cache["blocks"], ek, ev))
+                    x, (k, v, _), _ = fn(p_l, x, (c_l["k"], c_l["v"], length),
+                                         ek_l, ev_l)
+                    blocks.append(dict(k=k, v=v))
+                blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+            else:
+                x, blocks = jax.lax.scan(
+                    body, x, (params["decoder"], cache["blocks"], ek, ev))
+            cache_out = {"blocks": blocks, "enc_k": ek, "enc_v": ev,
+                         "len": length + 1}
+        hidden = layer_norm(params["final_norm"], x, cfg.norm_eps)
+        return hidden, cache_out, zero_aux()
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        return {"blocks": dict(
+            k=jnp.zeros((l, batch, max_len, kv, hd), dtype),
+            v=jnp.zeros((l, batch, max_len, kv, hd), dtype)),
+            "enc_k": jnp.zeros((l, batch, cfg.encoder_len, kv, hd), dtype),
+            "enc_v": jnp.zeros((l, batch, cfg.encoder_len, kv, hd), dtype),
+            "len": jnp.int32(0)}
+
+    def logits(self, params, hidden):
+        return hidden @ params["unembed"]

@@ -1,0 +1,113 @@
+"""Optimizers: Adam(W) and Adafactor, both with f32 master weights.
+
+Memory profile per parameter (bytes), the number that decides which archs
+fit a 16 GB v5e chip (DESIGN.md §5 / EXPERIMENTS.md):
+
+  adam:      2 (bf16 param) + 4 (master) + 4 (m) + 4 (v)  = 14
+  adafactor: 2 (bf16 param) + 4 (master) + ~0 (factored)  = ~6
+
+Optimizer state inherits the parameter sharding spec (ZeRO-3 by
+construction).  ``grad_dtype`` in TrainConfig compresses the grad-accum
+buffer (bf16 accumulation halves accumulator HBM at <1e-3 relative error on
+summed gradients — recorded as a distributed-optimization trick, default on
+only for the accumulation buffer, never for the update math).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def init_opt_state(params, tcfg):
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    if tcfg.optimizer == "adam":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"master": master,
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+    if tcfg.optimizer == "adafactor":
+        def vrow(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) \
+                if _is_factorable(p.shape) else jnp.zeros(p.shape, jnp.float32)
+
+        def vcol(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if _is_factorable(p.shape) else jnp.zeros((), jnp.float32)
+        return {"master": master,
+                "vr": jax.tree.map(vrow, params),
+                "vc": jax.tree.map(vcol, params)}
+    raise ValueError(tcfg.optimizer)
+
+
+def _schedule(step, tcfg):
+    warmup = 100.0
+    return tcfg.learning_rate * jnp.minimum(1.0, (step + 1) / warmup)
+
+
+def apply_updates(params, grads, opt_state, step, tcfg):
+    """Returns (params, opt_state).  All update math in f32."""
+    lr = _schedule(step, tcfg)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    wd = tcfg.weight_decay
+
+    # global-norm clip
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.vdot(g, g)
+                         for g in jax.tree.leaves(g32)).real)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    if tcfg.optimizer == "adam":
+        t = step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         opt_state["m"], g32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         opt_state["v"], g32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if p.ndim >= 2:
+                u = u + wd * p
+            return p - lr * u
+        master = jax.tree.map(upd, opt_state["master"], m, v)
+        new_state = {"master": master, "m": m, "v": v}
+    else:  # adafactor (beta1=0, factored second moment)
+        d = 1 - (1.0 / (step + 2)) ** 0.8  # decay-to-one schedule
+
+        def upd(p, g, vr, vc):
+            if _is_factorable(p.shape):
+                vr = d * vr + (1 - d) * (g * g).mean(-1)
+                vc = d * vc + (1 - d) * (g * g).mean(-2)
+                r = vr / jnp.maximum(vr.mean(-1, keepdims=True), 1e-30)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                         + eps)
+            else:
+                vr = d * vr + (1 - d) * g * g
+                u = g / (jnp.sqrt(vr) + eps)
+            # update clipping (Shazeer & Stern RMS-1)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                u = u + wd * p
+            return p - lr * u, vr, vc
+        out = jax.tree.map(upd, opt_state["master"], g32,
+                           opt_state["vr"], opt_state["vc"])
+        master = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        vr = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        vc = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"master": master, "vr": vr, "vc": vc}
+
+    dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda mp, dt: mp.astype(dt),
+                              new_state["master"], dtypes)
+    return new_params, new_state, gnorm

@@ -1,0 +1,129 @@
+"""Sharding-rule inference for the LM substrate.
+
+One uniform rule set (DESIGN.md §5):
+
+  * TP over the ``model`` axis — attention head projections, FFN hidden dim,
+    MoE expert axis (EP), vocab dim of embed/unembed.
+  * FSDP over the ``data`` axis — every parameter above a size threshold
+    shards its largest still-unsharded dim over ``data``; optimizer states
+    inherit the param spec (ZeRO-3 equivalent).  Under scan-over-layers the
+    per-layer all-gathers happen inside the loop, so peak memory is one
+    de-sharded layer.
+  * the leading L axis of scan-stacked block params is never sharded.
+  * the ``pod`` axis (multi-pod mesh) is pure DP: batch shards over
+    ``(pod, data)``; params are replicated across pods (cross-pod grad
+    all-reduce only).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP_THRESHOLD = 1 << 20  # params smaller than 1M entries stay unsharded
+
+# param-name -> which logical dim gets the TP ('model') axis, counted from
+# the *end* of the shape (robust to the leading L stacking axis).
+# value = negative dim index.
+_TP_RULES = {
+    "wq": -1, "wk": -1, "wv": -1, "w_gate": -1, "w_up": -1,
+    "in_proj": -1, "unembed": -1, "patch_proj": -1,
+    "wo": -2, "w_down": -2, "out_proj": -2,
+    "embed": -2,   # (V, d): shard vocab
+}
+# MoE expert tensors: shard the expert axis (EP).  These names only occur
+# under a "moe" sub-tree; detected by path.
+_EP_NAMES = {"w_gate", "w_up", "w_down"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+    return out
+
+
+def param_spec(path, shape, *, model_axis="model", data_axis="data",
+               model_size=1, data_size=1, fsdp: bool = True) -> P:
+    names = _path_names(path)
+    leaf = names[-1]
+    stacked = any(n in ("blocks", "encoder", "decoder") for n in names)
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    is_expert = "moe" in names and leaf in _EP_NAMES
+    if is_expert:
+        e_dim = 1 if stacked else 0
+        if shape[e_dim] % model_size == 0:
+            spec[e_dim] = model_axis
+    elif leaf in _TP_RULES:
+        d = nd + _TP_RULES[leaf]
+        if 0 <= d < nd and shape[d] % model_size == 0:
+            spec[d] = model_axis
+
+    if fsdp and int(np.prod(shape)) >= FSDP_THRESHOLD:
+        # largest unsharded, divisible dim; never the L stacking axis (dim 0
+        # when stacked)
+        cand = [(shape[d], d) for d in range(nd)
+                if spec[d] is None and not (stacked and d == 0)
+                and shape[d] % data_size == 0]
+        if cand:
+            _, d = max(cand)
+            spec[d] = data_axis
+    return P(*spec)
+
+
+def infer_param_specs(params_or_shapes, mesh, *, fsdp: bool = True):
+    """Pytree of PartitionSpec matching ``params_or_shapes``."""
+    model_size = mesh.shape.get("model", 1)
+    data_size = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        return param_spec(path, shape, model_size=model_size,
+                          data_size=data_size, fsdp=fsdp)
+    return jax.tree_util.tree_map_with_path(one, params_or_shapes)
+
+
+def batch_axes(mesh):
+    """Axis names over which the global batch is sharded (DP incl. pod)."""
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    return tuple(names)
+
+
+def data_spec(mesh, ndim: int) -> P:
+    """Spec for (B, ...) host data: batch over (pod, data)."""
+    return P(batch_axes(mesh), *([None] * (ndim - 1)))
+
+
+def cache_spec(cfg, mesh, batch: int):
+    """Decode-cache spec: batch over DP axes if it divides, otherwise the
+    *sequence* dim shards over data (the long_500k B=1 sequence-parallel
+    case); KV heads over model when divisible."""
+    dp = batch_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    model_size = mesh.shape.get("model", 1)
+    batch_ok = dp and batch % dp_size == 0
+    kv_ok = cfg.n_kv_heads % model_size == 0
+    b_ax = dp if batch_ok else None
+    s_ax = None if batch_ok else (dp if dp else None)
+    h_ax = "model" if kv_ok and "model" in mesh.axis_names else None
+    # attention caches: (L, B, S, KV, hd)
+    attn = P(None, b_ax, s_ax, h_ax, None)
+    # mamba caches
+    conv = P(None, b_ax, None, "model") \
+        if (cfg.d_inner + 2 * cfg.ssm_state) % max(model_size, 1) == 0 \
+        else P(None, b_ax, None, None)
+    ssm = P(None, b_ax, None, None, None)
+    return dict(attn=attn, conv=conv, ssm=ssm, batch_sharded=batch_ok)
+
+
+def place(tree, mesh, specs):
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)

@@ -1,0 +1,116 @@
+"""Train / prefill / decode step builders.
+
+``make_train_step`` returns a pure function
+``(params, opt_state, step, batch) -> (params, opt_state, metrics)`` with:
+
+  * gradient accumulation over fixed-shape microbatches (``lax.scan``) —
+    bounds activation memory AND removes data-dependent shapes (no
+    recompiles -> no compile-stragglers at scale);
+  * per-layer remat (policy from TrainConfig) inside the model;
+  * f32 (or bf16, TrainConfig.grad_dtype) gradient accumulator;
+  * MoE aux losses folded in with configurable weights.
+
+``make_prefill_step`` / ``make_decode_step`` build the serving entry points
+(prefill returns the KV cache + last-position logits; decode consumes one
+token against a full cache — the shapes the decode_32k / long_500k cells
+lower).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.losses import softmax_xent
+
+
+def _loss_fn(model, tcfg, params, tokens, labels, patches=None,
+             unroll=False):
+    if model.cfg.family == "encdec":
+        hidden, _, aux = model.forward(params, tokens, frames=patches,
+                                       mode="train", remat=tcfg.remat,
+                                       unroll=unroll)
+    else:
+        hidden, _, aux = model.forward(params, tokens, patches=patches,
+                                       mode="train", remat=tcfg.remat,
+                                       unroll=unroll)
+    w = params["embed"].T if model.cfg.tie_embeddings else params["unembed"]
+    loss, _ = softmax_xent(hidden, w, labels)
+    total = loss + tcfg.moe_aux * aux["load_balance_loss"] \
+        + tcfg.zloss * aux["router_z_loss"]
+    return total, {"loss": loss, **aux}
+
+
+def make_train_step(model, tcfg, *, n_microbatches: int = 1,
+                    unroll: bool = False):
+    """batch: {tokens (B,T), labels (B,T) [, patches|frames (B,S,d)]}."""
+    cfg = model.cfg
+    acc_dt = jnp.dtype(tcfg.grad_dtype) if tcfg.grad_dtype else jnp.float32
+
+    def train_step(params, opt_state, step, batch):
+        grad_fn = jax.grad(
+            functools.partial(_loss_fn, model, tcfg, unroll=unroll),
+            has_aux=True)
+
+        def micro(acc, mb):
+            g, aux = grad_fn(params, mb["tokens"], mb["labels"],
+                             mb.get("patches"))
+            acc = jax.tree.map(lambda a, x: a + x.astype(a.dtype), acc, g)
+            return acc, aux
+
+        if n_microbatches > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(n_microbatches,
+                                    x.shape[0] // n_microbatches,
+                                    *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            grads, auxs = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            metrics = jax.tree.map(lambda a: a.mean(), auxs)
+        else:
+            grads, metrics = grad_fn(params, batch["tokens"],
+                                     batch["labels"], batch.get("patches"))
+
+        from repro.train.optimizer import apply_updates
+        params, opt_state, gnorm = apply_updates(params, grads, opt_state,
+                                                 step, tcfg)
+        metrics = {**metrics, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, *, unroll: bool = False):
+    cfg = model.cfg
+
+    def prefill_step(params, tokens, extra=None):
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["patches"] = extra
+        if cfg.family == "encdec":
+            hidden, cache, _ = model.forward(params, tokens, frames=extra,
+                                             mode="prefill", remat="none",
+                                             unroll=unroll)
+        else:
+            hidden, cache, _ = model.forward(params, tokens, mode="prefill",
+                                             remat="none", unroll=unroll,
+                                             **kwargs)
+        logits = model.logits(params, hidden[:, -1:])
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model, *, unroll: bool = False):
+    def decode_step(params, token, cache):
+        hidden, cache, _ = model.forward(params, token, mode="decode",
+                                         cache=cache, remat="none",
+                                         unroll=unroll)
+        logits = model.logits(params, hidden)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+
+    return decode_step

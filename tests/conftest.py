@@ -1,0 +1,7 @@
+import jax
+
+# PETSc (madupite's substrate) is double precision; the MDP solver tests
+# exercise the f64 path.  LM modules are dtype-explicit so this is safe.
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# smoke tests and benches must see 1 device (the dry-run sets 512 itself).
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,59 @@
+"""Distributed solve correctness: multi-(fake-)device == single device.
+
+Runs the real shard_map path on 8 forced host devices in a subprocess
+(device count must be set before jax initializes, so these tests shell out).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, json
+from repro.core import generators, solve, IPIOptions
+
+mdp = generators.garnet(n=997, m=11, k=6, gamma=0.99, seed=7)
+opts = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64")
+r_single = solve(mdp, opts)
+out = {}
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+for layout in ("1d", "2d"):
+    r = solve(mdp, opts, mesh=mesh, layout=layout)
+    out[layout] = dict(
+        dv=float(np.abs(r.v - r_single.v).max()),
+        dpi=int((r.policy != r_single.policy).sum()),
+        converged=bool(r.converged),
+        outer=int(r.outer_iterations),
+        outer_single=int(r_single.outer_iterations))
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("layout", ["1d", "2d"])
+def test_distributed_matches_single_device(dist_results, layout):
+    r = dist_results[layout]
+    assert r["converged"]
+    assert r["dv"] < 1e-10, r
+    assert r["dpi"] == 0, r
+    assert r["outer"] == r["outer_single"], "iteration path must be identical"

@@ -1,0 +1,99 @@
+"""Pallas kernels (interpret mode) vs the pure-jnp oracles in ref.py.
+
+Sweeps shapes and dtypes per kernel; hypothesis drives random shape/content
+cases on top of the fixed grid.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels import bellman_ell, dense_backup, spmv_ell
+from repro.kernels import ops
+
+
+def _ell(rng, n, m, k, ncols, dtype):
+    idx = rng.integers(0, ncols, (n, m, k)).astype(np.int32)
+    val = rng.random((n, m, k)).astype(dtype)
+    cost = rng.random((n, m)).astype(dtype)
+    v = rng.random(ncols).astype(dtype)
+    return (jnp.asarray(idx), jnp.asarray(val), jnp.asarray(cost),
+            jnp.asarray(v))
+
+
+@pytest.mark.parametrize("n,m,k,ncols", [
+    (8, 2, 1, 16), (100, 5, 4, 100), (257, 7, 8, 333), (512, 3, 2, 64)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_ell_backup_matches_ref(n, m, k, ncols, dtype):
+    rng = np.random.default_rng(0)
+    idx, val, cost, v = _ell(rng, n, m, k, ncols, dtype)
+    a, b = bellman_ell.ell_backup(idx, val, cost, 0.9, v, interpret=True)
+    ra, rb = ref.ell_backup(idx, val, cost, 0.9, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ra), rtol=3e-6)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(rb))
+
+
+@pytest.mark.parametrize("n,k,ncols", [(8, 1, 8), (100, 4, 55), (300, 8, 300)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_spmv_matches_ref(n, k, ncols, dtype):
+    rng = np.random.default_rng(1)
+    idx = jnp.asarray(rng.integers(0, ncols, (n, k)).astype(np.int32))
+    val = jnp.asarray(rng.random((n, k)).astype(dtype))
+    x = jnp.asarray(rng.random(ncols).astype(dtype))
+    y = spmv_ell.ell_matvec(idx, val, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.ell_matvec(idx, val, x)),
+                               rtol=3e-6)
+
+
+@pytest.mark.parametrize("n,m,ncols", [(8, 2, 8), (64, 4, 200), (130, 3, 700)])
+def test_dense_backup_matches_ref(n, m, ncols):
+    rng = np.random.default_rng(2)
+    p = rng.random((n, m, ncols)).astype(np.float32)
+    p /= p.sum(-1, keepdims=True)
+    cost = jnp.asarray(rng.random((n, m)).astype(np.float32))
+    v = jnp.asarray(rng.random(ncols).astype(np.float32))
+    a, b = dense_backup.dense_backup(jnp.asarray(p), cost, 0.9, v,
+                                     interpret=True)
+    ra, rb = ref.dense_backup(jnp.asarray(p), cost, 0.9, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ra), rtol=2e-5)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(rb))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 64), m=st.integers(1, 8), k=st.integers(1, 6),
+       ncols=st.integers(1, 80), gamma=st.floats(0.1, 0.999),
+       seed=st.integers(0, 999))
+def test_ell_backup_property(n, m, k, ncols, gamma, seed):
+    rng = np.random.default_rng(seed)
+    idx, val, cost, v = _ell(rng, n, m, k, ncols, np.float32)
+    a, b = bellman_ell.ell_backup(idx, val, cost, gamma, v, interpret=True)
+    ra, rb = ref.ell_backup(idx, val, cost, gamma, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ra), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(rb))
+
+
+def test_ops_dispatch_consistency():
+    """ops.* must give identical results across implementations."""
+    rng = np.random.default_rng(3)
+    idx, val, cost, v = _ell(rng, 64, 4, 3, 64, np.float32)
+    out_x = ops.ell_backup(idx, val, cost, 0.95, v, impl="xla")
+    out_p = ops.ell_backup(idx, val, cost, 0.95, v, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(out_x[0]), np.asarray(out_p[0]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out_x[1]), np.asarray(out_p[1]))
+
+
+def test_argmin_tiebreak_smallest_action():
+    """Deterministic tie-break: duplicate optimal actions -> smallest id."""
+    n, m, k, ncols = 16, 4, 2, 16
+    idx = jnp.zeros((n, m, k), jnp.int32)
+    val = jnp.ones((n, m, k), jnp.float32) / k
+    cost = jnp.ones((n, m), jnp.float32)       # all actions identical
+    v = jnp.zeros((ncols,), jnp.float32)
+    _, pi = bellman_ell.ell_backup(idx, val, cost, 0.9, v, interpret=True)
+    assert (np.asarray(pi) == 0).all()

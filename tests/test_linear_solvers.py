@@ -1,0 +1,84 @@
+"""Inner (Krylov/Richardson) solvers vs numpy LU, incl. hypothesis sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm import Axes
+from repro.core.solvers import bicgstab, gmres, richardson
+
+AXES = Axes()
+
+
+def _mdp_like_system(n, gamma, seed):
+    """A = I - gamma * P with P row-stochastic: the exact structure the
+    inner solvers face (nonsymmetric, diagonally dominant for gamma < 1)."""
+    rng = np.random.default_rng(seed)
+    p = rng.random((n, n))
+    p /= p.sum(1, keepdims=True)
+    a = np.eye(n) - gamma * p
+    b = rng.random(n)
+    return a, b
+
+
+@pytest.mark.parametrize("solver,kw", [
+    (gmres, dict(restart=25)), (bicgstab, {}), (richardson, {})])
+@pytest.mark.parametrize("gamma", [0.5, 0.95, 0.999])
+def test_solves_mdp_system(solver, kw, gamma):
+    a, b = _mdp_like_system(150, gamma, seed=1)
+    x_true = np.linalg.solve(a, b)
+    aj = jnp.asarray(a)
+    maxiter = 200000 if solver is richardson else 5000
+    x, iters, res = solver(lambda v: aj @ v, jnp.asarray(b),
+                           jnp.zeros(150, jnp.float64), tol=1e-10,
+                           maxiter=maxiter, axes=AXES, **kw)
+    assert float(res) <= 1e-10
+    np.testing.assert_allclose(np.asarray(x), x_true, atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(5, 60), gamma=st.floats(0.1, 0.99),
+       seed=st.integers(0, 10_000))
+def test_gmres_property(n, gamma, seed):
+    """For any row-stochastic P and gamma<1, GMRES solves (I-gamma P)x=b."""
+    a, b = _mdp_like_system(n, gamma, seed)
+    aj = jnp.asarray(a)
+    x, _, res = gmres(lambda v: aj @ v, jnp.asarray(b),
+                      jnp.zeros(n, jnp.float64), tol=1e-9, maxiter=2000,
+                      axes=AXES, restart=min(n, 30))
+    true_res = np.linalg.norm(b - a @ np.asarray(x))
+    assert true_res <= 1e-6 * max(1.0, np.linalg.norm(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(5, 60), gamma=st.floats(0.1, 0.99),
+       seed=st.integers(0, 10_000))
+def test_bicgstab_property(n, gamma, seed):
+    a, b = _mdp_like_system(n, gamma, seed)
+    aj = jnp.asarray(a)
+    x, _, res = bicgstab(lambda v: aj @ v, jnp.asarray(b),
+                         jnp.zeros(n, jnp.float64), tol=1e-9, maxiter=4000,
+                         axes=AXES)
+    true_res = np.linalg.norm(b - a @ np.asarray(x))
+    assert true_res <= 1e-6 * max(1.0, np.linalg.norm(b))
+
+
+def test_gmres_zero_rhs():
+    aj = jnp.eye(10, dtype=jnp.float64)
+    x, iters, res = gmres(lambda v: aj @ v, jnp.zeros(10, jnp.float64),
+                          jnp.zeros(10, jnp.float64), tol=1e-12, maxiter=10,
+                          axes=AXES, restart=5)
+    assert float(res) == 0.0 and np.asarray(x).max() == 0.0
+
+
+def test_warm_start_exact_solution_is_noop():
+    a, b = _mdp_like_system(40, 0.9, seed=3)
+    x_true = np.linalg.solve(a, b)
+    aj = jnp.asarray(a)
+    for solver, kw in [(gmres, dict(restart=10)), (bicgstab, {}),
+                       (richardson, {})]:
+        x, iters, res = solver(lambda v: aj @ v, jnp.asarray(b),
+                               jnp.asarray(x_true), tol=1e-8, maxiter=100,
+                               axes=AXES, **kw)
+        assert int(iters) == 0, solver.__name__

@@ -1,0 +1,109 @@
+"""Correctness of the iPI solver family against exact oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IPIOptions, generators, solve
+from repro.core.solvers import dense_policy_value
+
+GAMMA = 0.95
+ALL_METHODS = ["vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab",
+               "pi"]
+
+
+def _value_iteration_oracle(mdp, tol=1e-10, iters=100000):
+    """Plain numpy VI to machine precision, on the *identical* ELL
+    arithmetic the solver uses (a dense f32 matrix would round duplicate
+    successor entries differently)."""
+    idx = np.asarray(mdp.idx)
+    val = np.asarray(mdp.val, np.float64)
+    g = np.asarray(mdp.cost, np.float64)
+    v = np.zeros(idx.shape[0])
+    for _ in range(iters):
+        q = g + mdp.gamma * (val * v[idx]).sum(-1)
+        v_new = q.min(1)
+        if np.abs(v_new - v).max() < tol:
+            return v_new, q.argmin(1)
+        v = v_new
+    raise AssertionError("oracle VI did not converge")
+
+
+@pytest.fixture(scope="module")
+def garnet_small():
+    mdp = generators.garnet(n=120, m=6, k=4, gamma=GAMMA, seed=0)
+    v_star, pi_star = _value_iteration_oracle(mdp)
+    return mdp, v_star, pi_star
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_method_reaches_optimum(garnet_small, method):
+    mdp, v_star, _ = garnet_small
+    r = solve(mdp, IPIOptions(method=method, atol=1e-9, dtype="float64",
+                              max_outer=20000))
+    assert r.converged, r.summary()
+    np.testing.assert_allclose(r.v, v_star, atol=1e-7)
+    # the returned policy must be exactly optimal-greedy: its exact value
+    # equals v*
+    v_pi = dense_policy_value(mdp, jnp.asarray(r.policy))
+    np.testing.assert_allclose(np.asarray(v_pi), v_star, atol=1e-6)
+
+
+@pytest.mark.parametrize("gen,kw", [
+    (generators.maze2d, dict(size=10, gamma=0.98)),
+    (generators.sis, dict(pop=150, n_actions=4, gamma=0.97)),
+    (generators.chain_walk, dict(n=200, gamma=0.99)),
+])
+def test_instance_families(gen, kw):
+    mdp = gen(**kw)
+    mdp.validate()
+    v_star, _ = _value_iteration_oracle(mdp)
+    r = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64"))
+    assert r.converged
+    np.testing.assert_allclose(r.v, v_star, atol=1e-6)
+
+
+def test_gap_certificate(garnet_small):
+    """||v - v*||_inf <= residual / (1 - gamma) must hold at any tolerance."""
+    mdp, v_star, _ = garnet_small
+    r = solve(mdp, IPIOptions(method="vi", atol=1e-3, dtype="float64"))
+    assert np.abs(r.v - v_star).max() <= r.gap_bound * (1 + 1e-9) + 1e-12
+
+
+def test_vi_residual_contracts(garnet_small):
+    mdp, _, _ = garnet_small
+    r = solve(mdp, IPIOptions(method="vi", atol=1e-8, dtype="float64"))
+    tr = r.trace_residual
+    # gamma-contraction of the Bellman residual (relative fp slack: the
+    # ratio sits exactly at gamma, so ulp-level noise crosses it)
+    assert (tr[1:] <= GAMMA * tr[:-1] * (1 + 1e-6) + 1e-12).all()
+
+
+def test_krylov_beats_vi_on_hard_instance():
+    """The paper's headline: on gamma->1 instances Krylov-iPI crushes VI."""
+    mdp = generators.chain_walk(n=300, gamma=0.999)
+    r_vi = solve(mdp, IPIOptions(method="vi", atol=1e-8, max_outer=30000,
+                                 dtype="float64"))
+    r_gm = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-8,
+                                 max_outer=100, dtype="float64"))
+    assert r_gm.converged
+    np.testing.assert_allclose(r_gm.v, r_vi.v, atol=1e-4)
+    assert r_gm.outer_iterations <= r_vi.outer_iterations / 100
+
+
+def test_special_case_equivalences(garnet_small):
+    """mPI with 1 sweep == VI (same iterates)."""
+    mdp, _, _ = garnet_small
+    r_vi = solve(mdp, IPIOptions(method="vi", atol=1e-6, dtype="float64"))
+    r_m1 = solve(mdp, IPIOptions(method="mpi", mpi_sweeps=1, atol=1e-6,
+                                 dtype="float64"))
+    assert r_vi.outer_iterations == r_m1.outer_iterations
+    np.testing.assert_allclose(r_vi.v, r_m1.v, atol=0)
+
+
+def test_warm_start(garnet_small):
+    mdp, v_star, _ = garnet_small
+    r = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64"),
+              v0=jnp.asarray(v_star))
+    assert r.converged and r.outer_iterations <= 1

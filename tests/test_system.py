@@ -1,0 +1,91 @@
+"""End-to-end behaviour tests for the whole system (paper workflow)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IPIOptions, generators, solve
+
+
+def test_end_to_end_epidemic_control():
+    """The paper's target workflow: model a control problem as an MDP, solve
+    it with a tailored method, get a certified policy."""
+    mdp = generators.sis(pop=300, n_actions=5, gamma=0.99)
+    r = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-8,
+                              dtype="float64"))
+    assert r.converged
+    # certified optimality gap
+    assert r.gap_bound < 1e-5
+    # sanity of the control law: at tiny infection levels strong (costly)
+    # interventions cannot be optimal under these costs
+    assert r.policy[0] == 0
+
+
+def test_method_choice_matters():
+    """madupite's raison d'etre: no single method dominates; the user-
+    selectable inner solver wins on conditioning-limited instances."""
+    hard = generators.chain_walk(n=400, gamma=0.9995)
+    r_mpi = solve(hard, IPIOptions(method="mpi", mpi_sweeps=50, atol=1e-6,
+                                   max_outer=3000, dtype="float64"))
+    r_gm = solve(hard, IPIOptions(method="ipi_gmres", atol=1e-6,
+                                  max_outer=100, dtype="float64"))
+    assert r_gm.converged
+    total_mpi = r_mpi.outer_iterations * 50 + r_mpi.inner_iterations
+    assert r_gm.inner_iterations < total_mpi / 3
+
+
+def test_lm_training_reduces_loss():
+    """Substrate end-to-end: 30 steps on a reduced arch reduce the loss."""
+    from repro.configs import get_smoke_config, get_train_config
+    from repro.data.pipeline import SyntheticSource
+    from repro.models import build_model
+    from repro.train.optimizer import init_opt_state
+    from repro.train.steps import make_train_step
+
+    import dataclasses
+    cfg = get_smoke_config("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # higher lr than the production config: 30 memorization steps must bite
+    # through the lr warmup
+    tcfg = dataclasses.replace(get_train_config("stablelm-3b"),
+                               learning_rate=3e-2)
+    src = SyntheticSource(cfg.vocab_size, 32, 8, seed=0)
+    step_fn = jax.jit(make_train_step(model, tcfg, n_microbatches=2))
+    opt = init_opt_state(params, tcfg)
+    losses = []
+    # fixed batch -> loss must drop steadily (memorization sanity)
+    batch = src.next_batch(0)
+    for step in range(30):
+        params, opt, m = step_fn(params, opt, jnp.int32(step), batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+
+def test_solve_cli(tmp_path):
+    from repro.launch.solve import main
+    rc = main(["--instance", "maze2d", "--size", "16", "--method",
+               "ipi_bicgstab", "--atol", "1e-7", "--single-device",
+               "--ckpt-dir", str(tmp_path / "ck")])
+    assert rc == 0
+
+
+def test_train_cli(tmp_path):
+    from repro.launch.train import main
+    rc = main(["--arch", "mamba2-130m", "--smoke", "--steps", "6",
+               "--batch", "4", "--seq", "32", "--ckpt-dir",
+               str(tmp_path / "t"), "--ckpt-every", "3"])
+    assert rc == 0
+    # restart from checkpoint
+    rc = main(["--arch", "mamba2-130m", "--smoke", "--steps", "8",
+               "--batch", "4", "--seq", "32", "--ckpt-dir",
+               str(tmp_path / "t")])
+    assert rc == 0
+
+
+def test_serve_cli():
+    from repro.launch.serve import main
+    rc = main(["--arch", "olmoe-1b-7b", "--smoke", "--batch", "2",
+               "--prompt-len", "16", "--gen", "4"])
+    assert rc == 0
