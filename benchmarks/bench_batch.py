@@ -1,0 +1,102 @@
+"""Fleet-solve throughput: solve_many (one batched program) vs a sequential
+Python loop of per-instance ``solve`` calls (ISSUE 1 tentpole claim:
+>= 3x for B=8 garnet instances on CPU).
+
+Two regimes, matching the two fleet workloads the batched engine serves:
+
+* ``cold``  — gamma-conditioning sweep (the paper's gamma -> 1 study).
+  ``gamma`` is a static compile-time constant of the kernels, so the
+  sequential loop pays one full dispatch/compile/solve round-trip *per
+  instance* while ``solve_many`` compiles ONE traced-gamma program for the
+  whole fleet.  Timed from a cleared jit cache: the end-to-end cost of
+  "a fleet arrives, solve it".
+* ``warm``  — seed ensemble, jit caches hot (identical statics, so the
+  sequential loop compiles only once).  What remains is per-call dispatch /
+  host-sync / result overhead, which the single fleet program amortizes.
+
+Run directly:  PYTHONPATH=src:. python -m benchmarks.bench_batch
+or via:        PYTHONPATH=src:. python -m benchmarks.run --only batch
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import IPIOptions, generators, solve, solve_many
+
+B = 8
+
+
+def _bench(fn, reps, *, cold=False):
+    if not cold:
+        fn()                      # warm-up (compile)
+    ts = []
+    for _ in range(reps):
+        if cold:
+            jax.clear_caches()
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6          # us
+
+
+def _check(fleet, opts, *, strict_iters: bool) -> bool:
+    """Fleet results must match the per-instance solves they replace.
+
+    ``strict_iters`` (homogeneous-gamma fleets: bit-identical arithmetic)
+    additionally requires exact per-instance outer counts; heterogeneous
+    gammas run the traced-gamma path, where f32 rounding near gamma -> 1 can
+    legitimately shift the Krylov iteration path — there the guarantee is
+    the convergence certificate (both converge, same policy, values close).
+    """
+    r_seq = [solve(m, opts) for m in fleet]
+    r_bat = solve_many(fleet, opts)
+    return all(rb.converged and rs.converged and
+               (rs.policy == rb.policy).all() and
+               abs(rs.v - rb.v).max() < 1e-3 and
+               (not strict_iters or
+                rs.outer_iterations == rb.outer_iterations)
+               for rs, rb in zip(r_seq, r_bat))
+
+
+def run(rows) -> None:
+    # -- cold: gamma sweep, per-instance compile vs one fleet program ------- #
+    gammas = list(1.0 - np.geomspace(0.05, 0.002, B))
+    sweep = generators.generate_many("garnet", B, n=512, m=8, k=4,
+                                     sweep={"gamma": gammas})
+    opts = IPIOptions(method="ipi_gmres", atol=1e-5, dtype="float32",
+                      max_outer=500)
+    agree = _check(sweep, opts, strict_iters=False)
+    us_seq = _bench(lambda: [solve(m, opts) for m in sweep], 2, cold=True)
+    us_bat = _bench(lambda: solve_many(sweep, opts), 2, cold=True)
+    rows.append((f"batch/gamma_sweep_cold_seq_B{B}", us_seq, "baseline"))
+    rows.append((f"batch/gamma_sweep_cold_many_B{B}", us_bat,
+                 f"speedup={us_seq / us_bat:.2f}x agree={agree}"))
+    print(f"  cold gamma sweep  B={B}: seq {us_seq/1e3:.0f} ms  "
+          f"solve_many {us_bat/1e3:.0f} ms  -> {us_seq/us_bat:.2f}x "
+          f"(agree={agree})", flush=True)
+
+    # -- warm: seed ensemble, dispatch/host-sync amortization --------------- #
+    ens = generators.generate_many("garnet", B, n=64, m=4, k=4,
+                                   gamma=0.95, seed=0)
+    opts = IPIOptions(method="vi", atol=1e-3, dtype="float32",
+                      max_outer=2000)
+    agree = _check(ens, opts, strict_iters=True)
+    us_seq = _bench(lambda: [solve(m, opts) for m in ens], 5)
+    us_bat = _bench(lambda: solve_many(ens, opts), 5)
+    rows.append((f"batch/seed_ensemble_warm_seq_B{B}", us_seq, "baseline"))
+    rows.append((f"batch/seed_ensemble_warm_many_B{B}", us_bat,
+                 f"speedup={us_seq / us_bat:.2f}x agree={agree}"))
+    print(f"  warm seed ensemble B={B}: seq {us_seq/1e3:.1f} ms  "
+          f"solve_many {us_bat/1e3:.1f} ms  -> {us_seq/us_bat:.2f}x "
+          f"(agree={agree})", flush=True)
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(r)

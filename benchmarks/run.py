@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/claim.
 
 Prints ``name,us_per_call,derived`` CSV rows (and progress to stderr-ish
-stdout).  Full suite:
+stdout), and persists the same rows machine-readably to
+``benchmarks/results/BENCH_batch.json`` so the perf trajectory accumulates
+across PRs.  Full suite:
 
     PYTHONPATH=src:. python -m benchmarks.run [--only solvers,kernels,...]
 
@@ -10,28 +12,34 @@ Tables:
   conditioning  — gamma -> 1 sweep (Krylov-iPI vs VI iteration growth)
   kernels       — fused Bellman backup vs unfused reference
   scaling       — 1 vs 8 device distributed solve
+  batch         — fleet solve_many vs sequential loop (>= 3x claim)
   lm_substrate  — per-arch smoke train-step timing
 (roofline terms live in benchmarks/roofline.py -> results/roofline.json)
 """
 
 import argparse
-import sys
+import json
+import os
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: solvers,conditioning,kernels,scaling,"
-                         "lm_substrate")
+                         "batch,lm_substrate")
+    ap.add_argument("--json-out", default=None,
+                    help="path for the machine-readable results "
+                         "(default: benchmarks/results/BENCH_batch.json)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_conditioning, bench_kernels,
+    from benchmarks import (bench_batch, bench_conditioning, bench_kernels,
                             bench_lm_substrate, bench_scaling, bench_solvers)
     suites = {
         "solvers": bench_solvers.run,
         "conditioning": bench_conditioning.run,
         "kernels": bench_kernels.run,
         "scaling": bench_scaling.run,
+        "batch": bench_batch.run,
         "lm_substrate": bench_lm_substrate.run,
     }
     pick = args.only.split(",") if args.only else list(suites)
@@ -46,6 +54,25 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    out = os.path.abspath(args.json_out or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "results",
+        "BENCH_batch.json"))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    # merge by row name: a partial (--only ...) run refreshes its own rows
+    # without clobbering the others, so the file accumulates the trajectory
+    merged = {}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                merged = {r["name"]: r for r in json.load(f)}
+        except (json.JSONDecodeError, KeyError, TypeError):
+            merged = {}
+    for name, us, derived in rows:
+        merged[name] = {"name": name, "us_per_call": us, "derived": derived}
+    with open(out, "w") as f:
+        json.dump(list(merged.values()), f, indent=2)
+    print(f"\n[run] wrote {len(rows)} rows ({len(merged)} total) -> {out}")
 
 
 if __name__ == "__main__":

@@ -8,11 +8,11 @@ The JAX/TPU reimplementation of madupite's contribution.  Public surface:
 """
 
 from repro.core.comm import Axes
-from repro.core.driver import SolveResult, solve
+from repro.core.driver import SolveResult, solve, solve_many
 from repro.core.ipi import IPIOptions, METHODS, SolveState
-from repro.core.mdp import DenseMDP, EllMDP
+from repro.core.mdp import DenseMDP, EllMDP, stack_mdps
 from repro.core import bellman, generators, partition
 
 __all__ = ["Axes", "DenseMDP", "EllMDP", "IPIOptions", "METHODS",
            "SolveResult", "SolveState", "bellman", "generators",
-           "partition", "solve"]
+           "partition", "solve", "solve_many", "stack_mdps"]

@@ -9,6 +9,18 @@ Conventions
 * ``v_local``  — (n_local,) owned slice of the value vector.
 * ``v_global`` — (n_global,) gathered value vector (``axes.allgather_state``).
 * ``pi``       — (n_local,) int32 of **global** action ids.
+
+Batched fleets
+--------------
+:func:`backup` and :func:`residual_norm` accept a batched MDP (leading ``B``
+dim, see :func:`repro.core.mdp.stack_mdps`) with correspondingly batched
+value vectors and vmap themselves over the unbatched path.  The per-instance
+operators additionally take ``gamma_t``, an optional *traced* scalar discount
+override: gamma only ever multiplies ``P v`` products, so scaling the
+gathered value window by ``gamma_t`` (and using coefficient 1 in place of the
+static ``gamma``) is algebraically exact.  This is how heterogeneous-gamma
+fleets (e.g. a gamma sweep) run through kernels whose ``gamma`` is a static
+compile-time constant.
 """
 
 from __future__ import annotations
@@ -19,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.comm import Axes
-from repro.core.mdp import DenseMDP, EllMDP, MDP
+from repro.core.mdp import DenseMDP, EllMDP, MDP, batch_parts
 from repro.kernels import ops
 
 
@@ -49,8 +61,8 @@ def _shift_idx(idx: jax.Array, mdp: MDP, axes: Axes, halo: int) -> jax.Array:
 # --------------------------------------------------------------------------- #
 
 def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
-           impl: str | None = None,
-           halo: int = 0) -> tuple[jax.Array, jax.Array]:
+           impl: str | None = None, halo: int = 0,
+           gamma_t: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
     """One Bellman backup: ``Tv`` and the greedy policy on local rows.
 
     ``v_global`` is whatever :func:`gather_v` produced (full vector or halo
@@ -58,14 +70,28 @@ def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
     pi_local (n_local,) int32 global ids)``.  With an action axis, the
     min/argmin is completed with a pmin reduction; ties break to the
     smallest global action id (deterministic across layouts).
+
+    A batched ``mdp`` (with ``v_global`` batched ``(B, n)``) vmaps over the
+    instance dim and returns ``(B, n)`` outputs.  ``gamma_t`` (traced scalar)
+    overrides the static ``mdp.gamma`` — see the module docstring.
     """
+    if mdp.batch is not None:
+        view, in_ax, g_t = batch_parts(mdp)
+        g_t = gamma_t if gamma_t is not None else g_t
+        fn = lambda m, vg, gt: backup(m, vg, axes, impl=impl, halo=halo,
+                                      gamma_t=gt)
+        return jax.vmap(fn, in_axes=(in_ax, 0, None if g_t is None else 0))(
+            view, v_global, g_t)
+    if gamma_t is not None:
+        v_global = (gamma_t * v_global).astype(v_global.dtype)
+    gamma = 1.0 if gamma_t is not None else mdp.gamma
     if isinstance(mdp, EllMDP):
         idx = _shift_idx(mdp.idx, mdp, axes, halo)
-        vmin, amin = ops.ell_backup(idx, mdp.val, mdp.cost, mdp.gamma,
+        vmin, amin = ops.ell_backup(idx, mdp.val, mdp.cost, gamma,
                                     v_global, impl=impl)
     else:
         assert halo == 0, "halo layout requires the ELL representation"
-        vmin, amin = ops.dense_backup(mdp.p, mdp.cost, mdp.gamma,
+        vmin, amin = ops.dense_backup(mdp.p, mdp.cost, gamma,
                                       v_global, impl=impl)
     a_glob = amin + mdp.m_local * axes.action_index()
     if axes.action is None:
@@ -80,11 +106,13 @@ def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
 
 def residual_norm(mdp: MDP, v_local: jax.Array, v_global: jax.Array,
                   axes: Axes, *, impl: str | None = None,
-                  halo: int = 0) -> jax.Array:
+                  halo: int = 0,
+                  gamma_t: jax.Array | None = None) -> jax.Array:
     """Global sup-norm Bellman residual ``||T v - v||_inf`` (the optimality gap
-    certificate: ``||v - v*||_inf <= residual / (1 - gamma)``)."""
-    tv, _ = backup(mdp, v_global, axes, impl=impl, halo=halo)
-    return axes.pmax_state(jnp.max(jnp.abs(tv - v_local)))
+    certificate: ``||v - v*||_inf <= residual / (1 - gamma)``).  Batched MDPs
+    return per-instance residuals ``(B,)``."""
+    tv, _ = backup(mdp, v_global, axes, impl=impl, halo=halo, gamma_t=gamma_t)
+    return axes.pmax_state(jnp.max(jnp.abs(tv - v_local), axis=-1))
 
 
 # --------------------------------------------------------------------------- #
@@ -153,17 +181,21 @@ def _rows_idx_eff(rows: PolicyRows, mdp: MDP, axes: Axes, halo: int):
 
 def t_pi(rows: PolicyRows, x_local: jax.Array, axes: Axes, *,
          impl: str | None = None, mdp: MDP | None = None, halo: int = 0,
-         gather_dtype=None) -> jax.Array:
+         gather_dtype=None, gamma_t: jax.Array | None = None) -> jax.Array:
     """Policy-restricted Bellman operator ``T_pi x = g_pi + gamma P_pi x``."""
     x_eff = gather_v(x_local, axes, halo=halo, dtype=gather_dtype)
+    if gamma_t is not None:
+        x_eff = (gamma_t * x_eff).astype(x_eff.dtype)
+    gamma = 1.0 if gamma_t is not None else rows.gamma
     y = _p_pi_matvec(rows, x_eff, axes, impl,
                      _rows_idx_eff(rows, mdp, axes, halo))
-    return axes.psum_action(rows.g) + rows.gamma * y
+    return axes.psum_action(rows.g) + gamma * y
 
 
 def a_pi_matvec(rows: PolicyRows, x_local: jax.Array, axes: Axes, *,
                 impl: str | None = None, mdp: MDP | None = None,
-                halo: int = 0, gather_dtype=None) -> jax.Array:
+                halo: int = 0, gather_dtype=None,
+                gamma_t: jax.Array | None = None) -> jax.Array:
     """Policy-evaluation system operator ``A_pi x = (I - gamma P_pi) x``.
 
     This is the matvec handed to the inner (Krylov) solvers; the value
@@ -172,9 +204,12 @@ def a_pi_matvec(rows: PolicyRows, x_local: jax.Array, axes: Axes, *,
     the outer iPI loop bounds the tolerable inner-system perturbation.
     """
     x_eff = gather_v(x_local, axes, halo=halo, dtype=gather_dtype)
+    if gamma_t is not None:
+        x_eff = (gamma_t * x_eff).astype(x_eff.dtype)
+    gamma = 1.0 if gamma_t is not None else rows.gamma
     y = _p_pi_matvec(rows, x_eff, axes, impl,
                      _rows_idx_eff(rows, mdp, axes, halo))
-    return x_local - rows.gamma * y.astype(x_local.dtype)
+    return x_local - gamma * y.astype(x_local.dtype)
 
 
 def b_pi(rows: PolicyRows, axes: Axes) -> jax.Array:

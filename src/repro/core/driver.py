@@ -6,12 +6,27 @@ chunks; between chunks the host persists the solver state (preemption /
 node-failure tolerance) and reports progress.  Distribution wraps the same
 device code in ``shard_map`` over the supplied mesh (1-D paper-faithful or
 2-D state x action layout — see :mod:`repro.core.partition`).
+
+Fleet solves — :func:`solve_many`
+---------------------------------
+Real workloads are *fleets* of related MDPs (seed ensembles, gamma sweeps,
+scenario/robustness studies).  ``solve_many(mdps, opts)`` stacks them into
+one batched container (:func:`repro.core.mdp.stack_mdps`), runs ONE compiled
+chunked loop for the whole fleet (``jax.vmap`` of the outer iteration inside
+the same ``lax.while_loop`` / ``shard_map`` machinery ``solve`` uses), and
+returns per-instance :class:`SolveResult`\\ s.  Converged instances freeze via
+a per-instance active mask, so each result carries the same ``k`` /
+``inner_total`` / traces B independent ``solve`` calls would have produced —
+while the fleet amortizes dispatch, compilation and kernel launches (the
+``benchmarks/bench_batch.py`` claim).  Heterogeneous state counts are padded
+(results are trimmed back); heterogeneous gammas run the traced-gamma path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +36,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import ipi, partition
 from repro.core.comm import Axes
 from repro.core.ipi import IPIOptions, SolveState
-from repro.core.mdp import EllMDP, MDP
+from repro.core.mdp import DenseMDP, EllMDP, MDP, gammas_of, stack_mdps
 from repro.utils import checkpoint as ckpt
+from repro.utils.jax_compat import shard_map as _shard_map
 
 
 @dataclasses.dataclass
@@ -62,17 +78,83 @@ def _result(state: SolveState, opts: IPIOptions, gamma: float,
 def _validate_banded(mdp, halo: int, mesh, layout: str) -> None:
     """The halo layout is only exact when every transition stays within
     +-halo of its source row (matrix bandwidth <= halo) and the halo fits in
-    one shard."""
-    assert isinstance(mdp, EllMDP), "halo layout requires ELL"
+    one shard.  Raises ``ValueError`` (not assert: must survive -O)."""
+    if not isinstance(mdp, EllMDP):
+        raise ValueError("halo>0 requires the ELL representation; DenseMDP "
+                         "columns are global — drop halo or convert the MDP")
     idx = np.asarray(mdp.idx)
-    rows = np.arange(mdp.n_global)[:, None, None]
+    rows = np.arange(mdp.n_global).reshape(-1, 1, 1)
     band = int(np.abs(idx - rows).max())
-    assert band <= halo, f"matrix bandwidth {band} exceeds halo {halo}"
+    if band > halo:
+        raise ValueError(
+            f"matrix bandwidth {band} exceeds halo {halo}: the banded "
+            f"exchange would silently drop transitions; set halo >= {band} "
+            f"or use the all-gather layout (halo=0)")
     if mesh is not None:
         n_shards = int(np.prod([
             mesh.shape[a] for a in partition.mesh_axes(mesh, layout).state]))
         n_local = -(-mdp.n_global // n_shards)
-        assert halo <= n_local, (halo, n_local)
+        if halo > n_local:
+            raise ValueError(
+                f"halo {halo} exceeds the per-shard state count {n_local} "
+                f"({n_shards} shards x {mdp.n_global} states): boundary "
+                f"exchange would need >1 ring hop; use fewer shards or a "
+                f"smaller halo")
+
+
+def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch):
+    """(run_chunk, init) closures for single-device or shard_map execution."""
+    if mesh is None:
+        run_chunk = partial(ipi.solve_chunk, opts=opts, axes=axes)
+        init = lambda v0: ipi.init_state(dev_mdp, axes, opts, v0)
+        return run_chunk, init
+    lead = () if batch is None else (None,)
+    mdp_specs = partition.mdp_pspecs(dev_mdp, axes)
+    state_specs = SolveState(
+        v=P(*lead, axes.state), tv=P(*lead, axes.state),
+        pi=P(*lead, axes.state),
+        res=P(), k=P(), inner_total=P(), trace_res=P(), trace_inner=P())
+    run_chunk = jax.jit(
+        _shard_map(
+            partial(ipi.solve_chunk, opts=opts, axes=axes),
+            mesh=mesh,
+            in_specs=(mdp_specs, state_specs, P()),
+            out_specs=state_specs),
+    )
+
+    def init(v0):
+        if v0 is None:
+            f = jax.jit(
+                _shard_map(
+                    lambda m: ipi.init_state(m, axes, opts),
+                    mesh=mesh, in_specs=(mdp_specs,),
+                    out_specs=state_specs))
+            return f(dev_mdp)
+        v_spec = P(*lead, axes.state)
+        v0 = jax.device_put(jnp.asarray(v0), NamedSharding(mesh, v_spec))
+        f = jax.jit(
+            _shard_map(
+                lambda m, v: ipi.init_state(m, axes, opts, v),
+                mesh=mesh, in_specs=(mdp_specs, v_spec),
+                out_specs=state_specs))
+        return f(dev_mdp, v0)
+
+    return run_chunk, init
+
+
+def _restore_or_init(init, v0, checkpoint_dir, verbose):
+    if checkpoint_dir:
+        like = jax.eval_shape(init, v0)
+        like = jax.tree_util.tree_map(
+            lambda s: np.zeros(s.shape, s.dtype), like)
+        restored = ckpt.restore(checkpoint_dir, like)
+        if restored is not None:
+            tree, _, _ = restored
+            if verbose:
+                print(f"[driver] resumed at outer k="
+                      f"{int(np.max(np.asarray(tree.k)))}")
+            return tree
+    return init(v0)
 
 
 def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
@@ -84,57 +166,31 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
     ``mesh=None`` runs single-device; otherwise the MDP is padded, sharded
     onto ``mesh`` and the identical loop runs SPMD under ``shard_map``.
     """
+    if mdp.batch is not None:
+        raise ValueError("solve() takes one MDP instance; for a batched "
+                         "fleet use solve_many()")
     n_orig = mdp.n_global
     if opts.halo:
         _validate_banded(mdp, opts.halo, mesh, layout)
     if mesh is None:
         axes = Axes()
         dev_mdp = mdp
-        run_chunk = partial(ipi.solve_chunk, opts=opts, axes=axes)
-        init = lambda: ipi.init_state(dev_mdp, axes, opts, v0)
     else:
         dev_mdp, axes, n_orig = partition.shard_mdp(mdp, mesh, layout)
-        mdp_specs = partition.mdp_pspecs(dev_mdp, axes)
-        state_specs = SolveState(
-            v=P(axes.state), tv=P(axes.state), pi=P(axes.state),
-            res=P(), k=P(), inner_total=P(), trace_res=P(), trace_inner=P())
-        run_chunk = jax.jit(
-            jax.shard_map(
-                partial(ipi.solve_chunk, opts=opts, axes=axes),
-                mesh=mesh,
-                in_specs=(mdp_specs, state_specs, P()),
-                out_specs=state_specs,
-                check_vma=False),
-        )
+        if v0 is not None:
+            v0 = jnp.pad(jnp.asarray(v0),
+                         (0, dev_mdp.n_global - n_orig))
+    run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, None)
 
-        def init():
-            f = jax.jit(
-                jax.shard_map(
-                    partial(ipi.init_state, axes=axes, opts=opts),
-                    mesh=mesh, in_specs=(mdp_specs,), out_specs=state_specs,
-                    check_vma=False))
-            return f(dev_mdp)
-
-    state = None
-    if checkpoint_dir:
-        like = jax.eval_shape(init)
-        like = jax.tree_util.tree_map(
-            lambda s: np.zeros(s.shape, s.dtype), like)
-        restored = ckpt.restore(checkpoint_dir, like)
-        if restored is not None:
-            tree, _, _ = restored
-            state = tree
-            if verbose:
-                print(f"[driver] resumed at outer k={int(state.k)}")
-    if state is None:
-        state = init()
-
+    state = _restore_or_init(init, v0, checkpoint_dir, verbose)
     while True:
         k = int(jax.device_get(state.k))
         res = float(jax.device_get(state.res))
         if verbose:
             print(f"[driver] k={k} residual={res:.3e}")
-        if res <= opts.atol or k >= opts.max_outer:
+        # NaN residual (inner-solver breakdown): neither "active" on device
+        # nor "converged" here — bail out instead of spinning forever.
+        if res <= opts.atol or k >= opts.max_outer or np.isnan(res):
             break
         k_hi = jnp.int32(min(k + chunk, opts.max_outer))
         state = run_chunk(dev_mdp, state, k_hi)
@@ -146,3 +202,82 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
         # gather the sharded fields for the host-side result
         state = jax.device_get(state)
     return _result(state, opts, mdp.gamma, n_orig)
+
+
+def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
+               mesh=None, layout: str = "1d", v0s=None,
+               checkpoint_dir: str | None = None, chunk: int = 64,
+               verbose: bool = False) -> list[SolveResult]:
+    """Solve a fleet of MDPs in one compiled batched program.
+
+    ``mdps`` is a sequence of (unbatched) MDP instances — or an
+    already-batched container from :func:`repro.core.mdp.stack_mdps`.  Every
+    instance is solved to ``opts.atol`` exactly as an individual
+    :func:`solve` call would (per-instance iteration counts and traces
+    included — converged instances freeze under the batched active mask),
+    but the whole fleet shares one device program: one ``lax.while_loop``,
+    vmapped kernels, one ``shard_map`` when ``mesh`` is given.  Returns one
+    :class:`SolveResult` per instance, padding trimmed.
+
+    ``v0s`` optionally warm-starts: a sequence of per-instance ``(n_i,)``
+    vectors (zero-padded to the fleet width) or a stacked ``(B, n)`` array.
+    """
+    if isinstance(mdps, (EllMDP, DenseMDP)):
+        if mdps.batch is None:
+            raise ValueError("solve_many() wants a fleet; for a single "
+                             "instance use solve()")
+        batched = mdps
+        n_origs = [batched.n_global] * batched.batch
+    else:
+        mdps = list(mdps)
+        n_origs = [m.n_global for m in mdps]
+        batched = stack_mdps(mdps)
+    gammas = gammas_of(batched)
+    if opts.halo:
+        _validate_banded(batched, opts.halo, mesh, layout)
+
+    v0 = None
+    if v0s is not None:
+        if isinstance(v0s, (list, tuple)):
+            n_to = batched.n_local
+            v0 = jnp.asarray(np.stack(
+                [np.pad(np.asarray(x), (0, n_to - np.asarray(x).shape[0]))
+                 for x in v0s]))
+        else:
+            v0 = jnp.asarray(v0s)
+
+    if mesh is None:
+        axes = Axes()
+        dev_mdp = batched
+    else:
+        dev_mdp, axes, _ = partition.shard_mdp(batched, mesh, layout)
+        if v0 is not None:
+            pad_n = dev_mdp.n_global - batched.n_global
+            v0 = jnp.pad(v0, ((0, 0), (0, pad_n)))
+    run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, batched.batch)
+
+    state = _restore_or_init(init, v0, checkpoint_dir, verbose)
+    while True:
+        k = np.asarray(jax.device_get(state.k))
+        res = np.asarray(jax.device_get(state.res))
+        # isnan: a broken-down lane is not device-active, so count it done
+        done = (res <= opts.atol) | (k >= opts.max_outer) | np.isnan(res)
+        if verbose:
+            n_act = int((~done).sum())
+            print(f"[driver] fleet B={len(k)} active={n_act} "
+                  f"k_max={int(k.max())} res_max={float(res.max()):.3e}")
+        if done.all():
+            break
+        k_hi = jnp.int32(min(int(k[~done].min()) + chunk, opts.max_outer))
+        state = run_chunk(dev_mdp, state, k_hi)
+        if checkpoint_dir:
+            ckpt.save(checkpoint_dir, int(np.max(np.asarray(
+                jax.device_get(state.k)))), state,
+                meta=dict(method=opts.method, batch=batched.batch))
+
+    state = jax.device_get(state)
+    out = []
+    for b in range(batched.batch):
+        sb = jax.tree_util.tree_map(lambda x: np.asarray(x)[b], state)
+        out.append(_result(sb, opts, gammas[b], n_origs[b]))
+    return out

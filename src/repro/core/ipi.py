@@ -22,6 +22,21 @@ convergence for any forcing factor.
 The whole loop is device-side ``lax`` control flow; the host driver
 (:mod:`repro.core.driver`) runs it in bounded *chunks* for checkpointing /
 preemption tolerance.
+
+Batched fleets
+--------------
+Every entry point accepts a *batched* MDP (leading ``B`` dim — see
+:func:`repro.core.mdp.stack_mdps`): :func:`init_state` then returns a
+batched :class:`SolveState` (per-instance residuals, iteration counters and
+traces) and :func:`solve_chunk` runs ONE ``lax.while_loop`` for the whole
+fleet, vmapping :func:`outer_step` over instances.  A per-instance *active
+mask* (``res > atol`` and ``k < k_hi``) freezes converged instances: their
+state fields stop updating, so per-instance ``k`` / ``inner_total`` / traces
+are exactly what B independent solves would have produced, while the shared
+loop keeps running on the instances still converging.  Homogeneous-gamma
+fleets run the bit-identical static-gamma arithmetic of the unbatched path;
+heterogeneous gammas thread a traced per-instance ``gamma_t`` through
+:mod:`repro.core.bellman` (exact algebra, fp-level rounding differences).
 """
 
 from __future__ import annotations
@@ -34,7 +49,7 @@ import jax.numpy as jnp
 
 from repro.core import bellman
 from repro.core.comm import Axes
-from repro.core.mdp import MDP
+from repro.core.mdp import MDP, batch_parts
 from repro.core.solvers import bicgstab, gmres, richardson
 
 METHODS = ("vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab", "pi")
@@ -62,14 +77,54 @@ class IPIOptions:
                                 # matvecs only; outer backups stay exact
 
     def __post_init__(self):
-        assert self.method in METHODS, self.method
-        assert self.dtype in ("float32", "float64"), self.dtype
+        # Raised (not assert'd): option validation must survive `python -O`.
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; "
+                             f"pick one of {METHODS}")
+        if self.dtype not in ("float32", "float64"):
+            raise ValueError(f"dtype must be 'float32' or 'float64' (PETSc "
+                             f"default), got {self.dtype!r}")
+        if not self.atol > 0:
+            raise ValueError(f"atol must be > 0, got {self.atol}")
+        if self.max_outer < 1:
+            raise ValueError(f"max_outer must be >= 1, got {self.max_outer}")
+        if self.max_inner < 0:
+            raise ValueError(f"max_inner must be >= 0, got {self.max_inner}")
+        if not 0.0 < self.forcing_eta < 1.0:
+            raise ValueError(f"forcing_eta must lie in (0, 1) for iPI "
+                             f"convergence, got {self.forcing_eta}")
+        if self.restart < 1:
+            raise ValueError(f"restart must be >= 1, got {self.restart}")
+        if self.mpi_sweeps < 1:
+            raise ValueError(f"mpi_sweeps must be >= 1, got {self.mpi_sweeps}")
+        if not isinstance(self.halo, int) or self.halo < 0:
+            raise ValueError(f"halo must be a non-negative int (0 disables "
+                             f"the banded layout), got {self.halo!r}")
+        if self.gather_dtype is not None:
+            try:
+                gd = jnp.dtype(self.gather_dtype)
+            except TypeError as e:
+                raise ValueError(f"gather_dtype {self.gather_dtype!r} is not "
+                                 f"a dtype: {e}") from None
+            if not jnp.issubdtype(gd, jnp.floating):
+                raise ValueError(f"gather_dtype must be a floating dtype "
+                                 f"(wire format for v), got {gd}")
+            if gd.itemsize > jnp.dtype(self.dtype).itemsize:
+                raise ValueError(
+                    f"gather_dtype {gd} is wider than the value dtype "
+                    f"{self.dtype}: the compressed gather would silently "
+                    f"upcast the wire format; drop gather_dtype or widen "
+                    f"dtype")
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SolveState:
-    """Device-side solver state (a pytree; checkpointable)."""
+    """Device-side solver state (a pytree; checkpointable).
+
+    Batched fleet: every field gains a leading ``B`` dim (``res`` / ``k`` /
+    ``inner_total`` become per-instance ``(B,)`` vectors — the ``res > atol``
+    mask is the fleet's per-instance active mask)."""
 
     v: jax.Array            # (n_local,) current value iterate
     tv: jax.Array           # (n_local,) T v (one backup ahead)
@@ -82,11 +137,20 @@ class SolveState:
 
 
 def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
-               v0: jax.Array | None = None) -> SolveState:
+               v0: jax.Array | None = None, *,
+               gamma_t: jax.Array | None = None) -> SolveState:
+    if mdp.batch is not None:
+        view, in_ax, g_t = batch_parts(mdp)
+        g_t = gamma_t if gamma_t is not None else g_t
+        fn = lambda m, v, gt: init_state(m, axes, opts, v, gamma_t=gt)
+        return jax.vmap(fn, in_axes=(in_ax, None if v0 is None else 0,
+                                     None if g_t is None else 0))(view, v0,
+                                                                  g_t)
     dt = jnp.dtype(opts.dtype)
     v = jnp.zeros((mdp.n_local,), dt) if v0 is None else v0.astype(dt)
     v_g = bellman.gather_v(v, axes, halo=opts.halo)
-    tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl, halo=opts.halo)
+    tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl, halo=opts.halo,
+                            gamma_t=gamma_t)
     tv = tv.astype(dt)
     res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
     trace_res = jnp.full((opts.max_outer + 1,), jnp.nan, dt)
@@ -121,22 +185,27 @@ def _inner_solve(opts: IPIOptions, matvec, b, x0, tol, axes: Axes):
     raise ValueError(m)
 
 
-def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
-               axes: Axes) -> SolveState:
-    """One outer iPI iteration (greedy policy is already in ``state``)."""
+def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
+                axes: Axes, gamma_t: jax.Array | None):
+    """One outer iPI iteration minus the k/trace bookkeeping.
+
+    Returns ``(v1, tv1, pi1, res1, inner_iters)`` — shared by the unbatched
+    :func:`outer_step` and the batched body of :func:`solve_chunk` (which
+    does its bookkeeping fleet-wide, outside the vmap).
+    """
     rows = bellman.policy_rows(mdp, state.pi, axes)
     b = bellman.b_pi(rows, axes).astype(state.tv.dtype)
     gd = None if opts.gather_dtype is None else jnp.dtype(opts.gather_dtype)
     matvec = lambda x: bellman.a_pi_matvec(rows, x, axes, impl=opts.impl,
                                            mdp=mdp, halo=opts.halo,
-                                           gather_dtype=gd)
+                                           gather_dtype=gd, gamma_t=gamma_t)
     tol = jnp.maximum(opts.forcing_eta * state.res, jnp.float32(1e-30))
     v1, inner_iters, _ = _inner_solve(opts, matvec, b, state.tv, tol, axes)
 
     def eval_at(v):
         v_g = bellman.gather_v(v, axes, halo=opts.halo)   # exact gather
         tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl,
-                                halo=opts.halo)
+                                halo=opts.halo, gamma_t=gamma_t)
         res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
         return v, tv, pi, res
 
@@ -148,7 +217,14 @@ def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
         cand = jax.lax.cond(cand[3] <= state.res,
                             lambda: cand, lambda: eval_at(state.tv))
     v1, tv1, pi1, res1 = cand
+    return v1, tv1, pi1, res1, inner_iters
 
+
+def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
+               axes: Axes, *, gamma_t: jax.Array | None = None) -> SolveState:
+    """One outer iPI iteration (greedy policy is already in ``state``)."""
+    v1, tv1, pi1, res1, inner_iters = _outer_core(mdp, state, opts, axes,
+                                                  gamma_t)
     k1 = state.k + 1
     return SolveState(
         v=v1, tv=tv1, pi=pi1, res=res1, k=k1,
@@ -160,10 +236,55 @@ def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
 @partial(jax.jit, static_argnames=("opts", "axes"))
 def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
                 opts: IPIOptions, axes: Axes) -> SolveState:
-    """Run outer iterations until convergence or ``k == k_hi`` (device-side)."""
+    """Run outer iterations until convergence or ``k == k_hi`` (device-side).
 
-    def cond(s: SolveState):
+    With a batched ``mdp`` + batched ``state`` this is ONE while loop for the
+    whole fleet: it spins while any instance is active and every iteration
+    vmaps the outer-step core over instances, freezing the converged ones
+    (their fields — including per-instance ``k`` / ``inner_total`` / traces —
+    stop updating, so results match B independent solves).
+
+    The fleet bookkeeping exploits a *lockstep invariant*: every state starts
+    at ``k = 0`` and ``k`` only advances while a lane is active, so all
+    active lanes always share one outer index.  Trace updates are therefore a
+    single shared-column ``dynamic_update_slice`` instead of B per-lane
+    scatters (much lighter to compile and run on every loop iteration).
+    """
+    if mdp.batch is None:
+        def cond(s: SolveState):
+            return (s.res > opts.atol) & (s.k < k_hi)
+
+        return jax.lax.while_loop(
+            cond, lambda s: outer_step(mdp, s, opts, axes), state)
+
+    view, in_ax, gamma_t = batch_parts(mdp)
+    core = jax.vmap(
+        lambda m, s, gt: _outer_core(m, s, opts, axes, gt),
+        in_axes=(in_ax, 0, None if gamma_t is None else 0))
+
+    def active(s: SolveState) -> jax.Array:
         return (s.res > opts.atol) & (s.k < k_hi)
 
+    def body(s: SolveState) -> SolveState:
+        act = active(s)
+        v1, tv1, pi1, res1, inner = core(view, s, gamma_t)
+        sel = lambda n, o: jnp.where(act[:, None] if n.ndim > 1 else act,
+                                     n, o)
+        k1 = s.k + act.astype(jnp.int32)
+        # Lockstep: all active lanes write outer index k_col; frozen lanes
+        # keep their old column value.
+        k_col = jnp.max(jnp.where(act, k1, 0))
+        res_col = jnp.where(act, res1, s.trace_res[:, k_col])
+        inner_col = jnp.where(act, inner, s.trace_inner[:, k_col - 1])
+        return SolveState(
+            v=sel(v1, s.v), tv=sel(tv1, s.tv), pi=sel(pi1, s.pi),
+            res=sel(res1, s.res), k=k1,
+            inner_total=s.inner_total + jnp.where(act, inner, 0),
+            trace_res=jax.lax.dynamic_update_slice(
+                s.trace_res, res_col[:, None], (jnp.int32(0), k_col)),
+            trace_inner=jax.lax.dynamic_update_slice(
+                s.trace_inner, inner_col[:, None], (jnp.int32(0),
+                                                    k_col - 1)))
+
     return jax.lax.while_loop(
-        cond, lambda s: outer_step(mdp, s, opts, axes), state)
+        lambda s: jnp.any(active(s)), body, state)

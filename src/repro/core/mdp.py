@@ -15,11 +15,26 @@ A *block* holds the locally-owned slice: ``n_local`` state rows starting at
 ``row_offset`` and ``m_local`` actions starting at ``act_offset``.  Successor
 indices (``idx`` / the dense column dim) are always **global** state ids, as
 in PETSc MPIAIJ.
+
+Batched fleets
+--------------
+Both containers optionally carry a leading batch dimension ``B`` (a *fleet*
+of same-shape MDP instances solved in one compiled program —
+:func:`repro.core.driver.solve_many`).  :func:`stack_mdps` builds the batched
+container from per-instance MDPs, padding heterogeneous state counts with
+absorbing zero-cost states and keeping a *shared-topology fast path*: when
+every instance has the same sparsity pattern (e.g. a gamma sweep or a
+cost-perturbation ensemble over one graph), ``idx`` is stored once,
+unbatched, and broadcast under ``vmap``.  ``gamma`` is a single float for a
+homogeneous fleet or a tuple of per-instance floats (still static /
+hashable); :func:`batch_parts` decomposes a batched MDP into the pieces the
+solver needs to compose ``jax.vmap`` over the unbatched code path.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,41 +49,68 @@ class EllMDP:
     idx:  (n_local, m_local, K) int32 — global successor ids (pad: 0)
     val:  (n_local, m_local, K) f32   — transition probabilities (pad: 0)
     cost: (n_local, m_local)    f32   — stage costs g(s, a)
+
+    Batched (``B``-instance fleet): ``val`` / ``cost`` gain a leading batch
+    dim; ``idx`` is either batched ``(B, n, m, K)`` or shared ``(n, m, K)``
+    (same topology for every instance); ``gamma`` is a float or a length-B
+    tuple of per-instance floats.
     """
 
     idx: jax.Array
     val: jax.Array
     cost: jax.Array
-    gamma: float = dataclasses.field(metadata=dict(static=True))
+    gamma: float | tuple = dataclasses.field(metadata=dict(static=True))
     n_global: int = dataclasses.field(metadata=dict(static=True))
     m_global: int = dataclasses.field(metadata=dict(static=True))
 
     @property
+    def batch(self) -> int | None:
+        """Fleet size ``B``, or ``None`` for an unbatched instance."""
+        return self.val.shape[0] if self.val.ndim == 4 else None
+
+    @property
+    def shared_topology(self) -> bool:
+        """Batched with one ``idx`` shared by every instance."""
+        return self.batch is not None and self.idx.ndim == 3
+
+    @property
     def n_local(self) -> int:
-        return self.idx.shape[0]
+        return self.val.shape[-3]
 
     @property
     def m_local(self) -> int:
-        return self.idx.shape[1]
+        return self.val.shape[-2]
 
     @property
     def nnz_per_row(self) -> int:
-        return self.idx.shape[2]
+        return self.idx.shape[-1]
+
+    def instance(self, b: int) -> "EllMDP":
+        """Extract (host-side) the unbatched instance ``b`` of a fleet."""
+        if self.batch is None:
+            raise ValueError("instance() is only defined on a batched MDP")
+        return EllMDP(idx=self.idx if self.shared_topology else self.idx[b],
+                      val=self.val[b], cost=self.cost[b],
+                      gamma=gammas_of(self)[b], n_global=self.n_global,
+                      m_global=self.m_global)
 
     def validate(self) -> None:
         """Host-side sanity checks (probability rows, index ranges)."""
         idx = np.asarray(self.idx)
         val = np.asarray(self.val)
-        assert idx.shape == val.shape, (idx.shape, val.shape)
-        assert self.cost.shape == idx.shape[:2]
+        assert idx.shape[-3:] == val.shape[-3:], (idx.shape, val.shape)
+        assert self.cost.shape == val.shape[:-1]
         assert idx.min() >= 0 and idx.max() < self.n_global
         rowsum = val.sum(-1)
         np.testing.assert_allclose(rowsum, 1.0, atol=1e-5)
         assert (val >= -1e-7).all()
-        assert 0.0 < self.gamma < 1.0
+        for g in gammas_of(self):
+            assert 0.0 < g < 1.0
 
     def as_dense(self) -> "DenseMDP":
         """Materialize the dense tensor (small instances / oracles only)."""
+        if self.batch is not None:
+            raise ValueError("as_dense() is unbatched-only; use instance(b)")
         n, m, k = self.idx.shape
         p = jnp.zeros((n, m, self.n_global), self.val.dtype)
         s = jnp.arange(n)[:, None, None]
@@ -85,27 +127,142 @@ class DenseMDP:
 
     p:    (n_local, m_local, n_global) f32
     cost: (n_local, m_local)           f32
+
+    Batched fleet: leading ``B`` dim on both arrays; ``gamma`` as in
+    :class:`EllMDP`.
     """
 
     p: jax.Array
     cost: jax.Array
-    gamma: float = dataclasses.field(metadata=dict(static=True))
+    gamma: float | tuple = dataclasses.field(metadata=dict(static=True))
     n_global: int = dataclasses.field(metadata=dict(static=True))
     m_global: int = dataclasses.field(metadata=dict(static=True))
 
     @property
+    def batch(self) -> int | None:
+        return self.p.shape[0] if self.p.ndim == 4 else None
+
+    @property
+    def shared_topology(self) -> bool:
+        return False
+
+    @property
     def n_local(self) -> int:
-        return self.p.shape[0]
+        return self.p.shape[-3]
 
     @property
     def m_local(self) -> int:
-        return self.p.shape[1]
+        return self.p.shape[-2]
+
+    def instance(self, b: int) -> "DenseMDP":
+        if self.batch is None:
+            raise ValueError("instance() is only defined on a batched MDP")
+        return DenseMDP(p=self.p[b], cost=self.cost[b],
+                        gamma=gammas_of(self)[b], n_global=self.n_global,
+                        m_global=self.m_global)
 
     def validate(self) -> None:
         p = np.asarray(self.p)
         np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
         assert (p >= -1e-7).all()
-        assert 0.0 < self.gamma < 1.0
+        for g in gammas_of(self):
+            assert 0.0 < g < 1.0
 
 
 MDP = EllMDP | DenseMDP
+
+
+# --------------------------------------------------------------------------- #
+# Fleet (batched multi-instance) construction                                 #
+# --------------------------------------------------------------------------- #
+
+def gammas_of(mdp: MDP) -> tuple:
+    """Per-instance discount factors as a tuple (length B, or 1 unbatched)."""
+    if isinstance(mdp.gamma, tuple):
+        return mdp.gamma
+    return (mdp.gamma,) * (mdp.batch or 1)
+
+
+def _pad_states_ell(mdp: EllMDP, n_to: int) -> EllMDP:
+    """Pad an unbatched ELL instance to ``n_to`` global states with absorbing
+    zero-cost self-loops (value identically 0, unreachable from real states —
+    solution-preserving).  Delegates to :func:`partition.pad_mdp` with
+    ``n_mult=n_to`` (for ``n <= n_to`` that pads to exactly ``n_to``)."""
+    if mdp.n_global == n_to:
+        return mdp
+    from repro.core import partition  # deferred: partition imports this module
+    return partition.pad_mdp(mdp, n_mult=n_to, m_mult=1)
+
+
+def stack_mdps(mdps: Sequence[MDP]) -> MDP:
+    """Stack per-instance MDPs into one batched fleet container.
+
+    All instances must share the container type, action count and (for ELL)
+    nnz/row; heterogeneous ELL state counts are padded to the max with
+    absorbing zero-cost states (trim results with the per-instance
+    ``n_global`` you kept).  When every instance shares the sparsity pattern
+    the single ``idx`` is stored unbatched (shared-topology fast path: one
+    gather table, broadcast under ``vmap``).  Heterogeneous ``gamma`` is kept
+    as a static per-instance tuple.
+    """
+    mdps = list(mdps)
+    if not mdps:
+        raise ValueError("stack_mdps needs at least one MDP")
+    first = mdps[0]
+    if any(type(m) is not type(first) for m in mdps):
+        raise ValueError("stack_mdps: all instances must share one container "
+                         f"type, got {sorted({type(m).__name__ for m in mdps})}")
+    if any(m.batch is not None for m in mdps):
+        raise ValueError("stack_mdps takes unbatched instances")
+    if any(m.m_global != first.m_global for m in mdps):
+        raise ValueError("stack_mdps: action counts differ "
+                         f"({[m.m_global for m in mdps]}); pad actions first")
+    gammas = tuple(float(m.gamma) for m in mdps)
+    gamma = gammas[0] if len(set(gammas)) == 1 else gammas
+    if isinstance(first, DenseMDP):
+        if any(m.n_global != first.n_global for m in mdps):
+            raise ValueError("stack_mdps(DenseMDP): state counts must match")
+        return DenseMDP(p=jnp.stack([m.p for m in mdps]),
+                        cost=jnp.stack([m.cost for m in mdps]),
+                        gamma=gamma, n_global=first.n_global,
+                        m_global=first.m_global)
+    if any(m.nnz_per_row != first.nnz_per_row for m in mdps):
+        raise ValueError("stack_mdps(EllMDP): nnz/row differ "
+                         f"({[m.nnz_per_row for m in mdps]})")
+    n_to = max(m.n_global for m in mdps)
+    mdps = [_pad_states_ell(m, n_to) for m in mdps]
+    idx0 = np.asarray(mdps[0].idx)
+    shared = all(np.array_equal(np.asarray(m.idx), idx0) for m in mdps[1:])
+    idx = mdps[0].idx if shared else jnp.stack([m.idx for m in mdps])
+    return EllMDP(idx=idx, val=jnp.stack([m.val for m in mdps]),
+                  cost=jnp.stack([m.cost for m in mdps]),
+                  gamma=gamma, n_global=n_to, m_global=first.m_global)
+
+
+def batch_parts(mdp: MDP):
+    """Decompose a batched MDP for ``jax.vmap`` over the unbatched solver.
+
+    Returns ``(view, in_axes, gamma_t)``:
+
+    * ``view``    — the same arrays with ``gamma`` collapsed to one static
+      float (``1.0`` when per-instance gammas differ: the caller then applies
+      ``gamma_t`` by scaling the gathered value window, which is algebraically
+      exact because gamma only ever multiplies ``P v`` terms);
+    * ``in_axes`` — a matching pytree of vmap axes (0 for batched leaves,
+      ``None`` for a shared-topology ``idx``);
+    * ``gamma_t`` — ``(B,)`` per-instance discount array, or ``None`` for a
+      homogeneous fleet (which then runs the bit-identical static-gamma
+      arithmetic of the unbatched path).
+    """
+    if mdp.batch is None:
+        raise ValueError("batch_parts() requires a batched MDP")
+    het = isinstance(mdp.gamma, tuple) and len(set(mdp.gamma)) > 1
+    gamma_static = 1.0 if het else float(gammas_of(mdp)[0])
+    gamma_t = jnp.asarray(np.asarray(mdp.gamma)) if het else None
+    view = dataclasses.replace(mdp, gamma=gamma_static)
+    if isinstance(mdp, EllMDP):
+        in_axes = dataclasses.replace(
+            view, idx=None if mdp.shared_topology else 0, val=0, cost=0)
+    else:
+        in_axes = dataclasses.replace(view, p=0, cost=0)
+    return view, in_axes, gamma_t

@@ -46,59 +46,78 @@ def _axis_size(mesh, names) -> int:
     return math.prod(mesh.shape[n] for n in names)
 
 
+def _bcast_concat(arr: np.ndarray, pad_core: np.ndarray,
+                  axis: int) -> np.ndarray:
+    """Concatenate ``pad_core`` (unbatched) onto ``arr`` along a trailing
+    ``axis``, broadcasting the pad over any leading batch dims of ``arr``."""
+    lead = arr.shape[:arr.ndim - pad_core.ndim]
+    pad = np.broadcast_to(pad_core, lead + pad_core.shape)
+    return np.concatenate([arr, pad], axis=axis)
+
+
 def pad_mdp(mdp: EllMDP, n_mult: int, m_mult: int) -> EllMDP:
-    """Pad (host-side) to state/action multiples; exact-solution preserving."""
+    """Pad (host-side) to state/action multiples; exact-solution preserving.
+
+    Batch-aware: a fleet container (leading ``B`` dim on ``val``/``cost``,
+    shared or batched ``idx``) is padded identically on every instance.
+    """
     idx, val, cost = (np.asarray(mdp.idx), np.asarray(mdp.val),
                       np.asarray(mdp.cost))
-    n, m, k = idx.shape
+    n, m, k = val.shape[-3], val.shape[-2], val.shape[-1]
     n_pad = (-n) % n_mult
     m_pad = (-m) % m_mult
     if m_pad:
-        idx = np.concatenate(
-            [idx, np.zeros((n, m_pad, k), idx.dtype)], axis=1)
+        idx = _bcast_concat(idx, np.zeros((n, m_pad, k), idx.dtype), -2)
         pv = np.zeros((n, m_pad, k), val.dtype)
         pv[..., 0] = 1.0  # self-transition placeholder (row sums to 1)
-        val = np.concatenate([val, pv], axis=1)
-        cost = np.concatenate(
-            [cost, np.full((n, m_pad), _BIG_COST, cost.dtype)], axis=1)
+        val = _bcast_concat(val, pv, -2)
+        cost = _bcast_concat(
+            cost, np.full((n, m_pad), _BIG_COST, cost.dtype), -1)
     if n_pad:
         m_tot = m + m_pad
-        pad_idx = np.repeat(
-            np.arange(n, n + n_pad, dtype=idx.dtype)[:, None, None],
-            m_tot, axis=1)
-        pad_idx = np.concatenate(
-            [pad_idx, np.zeros((n_pad, m_tot, k - 1), idx.dtype)], axis=2) \
-            if k > 1 else pad_idx
+        pad_idx = np.zeros((n_pad, m_tot, k), idx.dtype)
+        pad_idx[..., 0] = np.arange(n, n + n_pad, dtype=idx.dtype)[:, None]
         pad_val = np.zeros((n_pad, m_tot, k), val.dtype)
         pad_val[..., 0] = 1.0
-        idx = np.concatenate([idx, pad_idx], axis=0)
-        val = np.concatenate([val, pad_val], axis=0)
+        idx = _bcast_concat(idx, pad_idx, -3)
+        val = _bcast_concat(val, pad_val, -3)
         # zero cost on the absorbing self-loop -> v_pad == 0 exactly; big cost
         # on padded actions stays (harmless: still never greedy).
         pad_cost = np.zeros((n_pad, m_tot), cost.dtype)
         pad_cost[:, m:] = _BIG_COST
-        cost = np.concatenate([cost, pad_cost], axis=0)
+        cost = _bcast_concat(cost, pad_cost, -2)
     return EllMDP(idx=jax.numpy.asarray(idx), val=jax.numpy.asarray(val),
                   cost=jax.numpy.asarray(cost), gamma=mdp.gamma,
                   n_global=n + n_pad, m_global=m + m_pad)
 
 
 def mdp_pspecs(mdp: MDP, axes: Axes):
-    """PartitionSpecs for the MDP container fields (as a matching pytree)."""
+    """PartitionSpecs for the MDP container fields (as a matching pytree).
+
+    Fleet containers get a leading unsharded (replicated-layout) batch dim.
+    """
     s, a = axes.state, axes.action
+    lead = () if mdp.batch is None else (None,)
     if isinstance(mdp, EllMDP):
-        return EllMDP(idx=P(s, a, None), val=P(s, a, None), cost=P(s, a),
+        idx_spec = P(s, a, None) if mdp.idx.ndim == 3 else P(None, s, a, None)
+        return EllMDP(idx=idx_spec, val=P(*lead, s, a, None),
+                      cost=P(*lead, s, a),
                       gamma=mdp.gamma, n_global=mdp.n_global,
                       m_global=mdp.m_global)
-    return DenseMDP(p=P(s, a, None), cost=P(s, a), gamma=mdp.gamma,
+    return DenseMDP(p=P(*lead, s, a, None), cost=P(*lead, s, a),
+                    gamma=mdp.gamma,
                     n_global=mdp.n_global, m_global=mdp.m_global)
 
 
 def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d"):
-    """Pad + place a host MDP onto ``mesh``.
+    """Pad + place a host MDP (single instance or batched fleet) onto
+    ``mesh``.
 
     Returns ``(mdp_device, axes, n_orig)``; device arrays carry
     ``NamedSharding`` so ``shard_map`` consumes them without resharding.
+    States (and actions, 2-D layout) are sharded; the fleet dim, when
+    present, stays unsharded — every shard owns its row slice of all B
+    instances, which is what the vmapped solver consumes.
     """
     axes = mesh_axes(mesh, layout)
     n_mult = _axis_size(mesh, axes.state)

@@ -8,6 +8,12 @@ Implementations:
 
 The distributed solver calls these entry points; switching ``impl`` swaps the
 compute engine without touching solver logic.
+
+Batched fleets: every entry point also accepts a leading batch dim ``B`` on
+its table arguments (``val``/``cost``/``p`` rank +1; ``idx`` batched or
+shared across instances; ``v``/``x`` batched ``(B, n)`` or shared ``(n,)``)
+and vmaps the per-instance kernel — so the same Pallas/XLA kernels serve
+multi-instance solves without a batched reimplementation.
 """
 
 from __future__ import annotations
@@ -38,10 +44,12 @@ def _resolve(impl: str | None) -> str:
     return impl
 
 
-@functools.partial(jax.jit, static_argnames=("gamma", "impl"))
-def ell_backup(idx, val, cost, gamma: float, v, *, impl: str | None = None):
-    """Fused Bellman backup on an ELL block -> (v_new (n,), argmin (n,) int32)."""
-    impl = _resolve(impl)
+def _ax(arr, batched_ndim: int):
+    """vmap in_axis for an optionally-batched operand."""
+    return 0 if arr.ndim == batched_ndim else None
+
+
+def _ell_backup(idx, val, cost, gamma, v, impl):
     if impl == "xla":
         return ref.ell_backup(idx, val, cost, gamma, v)
     from . import bellman_ell
@@ -50,8 +58,17 @@ def ell_backup(idx, val, cost, gamma: float, v, *, impl: str | None = None):
 
 
 @functools.partial(jax.jit, static_argnames=("gamma", "impl"))
-def ell_qvalues(idx, val, cost, gamma: float, v, *, impl: str | None = None):
+def ell_backup(idx, val, cost, gamma: float, v, *, impl: str | None = None):
+    """Fused Bellman backup on an ELL block -> (v_new (n,), argmin (n,) int32)."""
     impl = _resolve(impl)
+    if val.ndim == 4:
+        fn = lambda i, vl, c, vv: _ell_backup(i, vl, c, gamma, vv, impl)
+        return jax.vmap(fn, in_axes=(_ax(idx, 4), 0, 0, _ax(v, 2)))(
+            idx, val, cost, v)
+    return _ell_backup(idx, val, cost, gamma, v, impl)
+
+
+def _ell_qvalues(idx, val, cost, gamma, v, impl):
     if impl == "xla":
         return ref.ell_qvalues(idx, val, cost, gamma, v)
     from . import bellman_ell
@@ -59,10 +76,17 @@ def ell_qvalues(idx, val, cost, gamma: float, v, *, impl: str | None = None):
                                    interpret=(impl == "pallas_interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def ell_matvec(idx, val, x, *, impl: str | None = None):
-    """Policy-restricted SpMV y = P_pi @ x on (n, K) ELL rows."""
+@functools.partial(jax.jit, static_argnames=("gamma", "impl"))
+def ell_qvalues(idx, val, cost, gamma: float, v, *, impl: str | None = None):
     impl = _resolve(impl)
+    if val.ndim == 4:
+        fn = lambda i, vl, c, vv: _ell_qvalues(i, vl, c, gamma, vv, impl)
+        return jax.vmap(fn, in_axes=(_ax(idx, 4), 0, 0, _ax(v, 2)))(
+            idx, val, cost, v)
+    return _ell_qvalues(idx, val, cost, gamma, v, impl)
+
+
+def _ell_matvec(idx, val, x, impl):
     if impl == "xla":
         return ref.ell_matvec(idx, val, x)
     from . import spmv_ell
@@ -70,11 +94,28 @@ def ell_matvec(idx, val, x, *, impl: str | None = None):
                                interpret=(impl == "pallas_interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("gamma", "impl"))
-def dense_backup(p, cost, gamma: float, v, *, impl: str | None = None):
+@functools.partial(jax.jit, static_argnames=("impl",))
+def ell_matvec(idx, val, x, *, impl: str | None = None):
+    """Policy-restricted SpMV y = P_pi @ x on (n, K) ELL rows."""
     impl = _resolve(impl)
+    if val.ndim == 3:
+        fn = lambda i, vl, xx: _ell_matvec(i, vl, xx, impl)
+        return jax.vmap(fn, in_axes=(_ax(idx, 3), 0, _ax(x, 2)))(idx, val, x)
+    return _ell_matvec(idx, val, x, impl)
+
+
+def _dense_backup(p, cost, gamma, v, impl):
     if impl == "xla":
         return ref.dense_backup(p, cost, gamma, v)
     from . import dense_backup as dense_backup_kernel
     return dense_backup_kernel.dense_backup(p, cost, gamma, v,
                                             interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "impl"))
+def dense_backup(p, cost, gamma: float, v, *, impl: str | None = None):
+    impl = _resolve(impl)
+    if p.ndim == 4:
+        fn = lambda pp, c, vv: _dense_backup(pp, c, gamma, vv, impl)
+        return jax.vmap(fn, in_axes=(0, 0, _ax(v, 2)))(p, cost, v)
+    return _dense_backup(p, cost, gamma, v, impl)

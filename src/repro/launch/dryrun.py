@@ -186,13 +186,14 @@ def run_mdp_cell(name: str, mesh) -> dict:
                                        sharding=sspec_tree.trace_res),
         trace_inner=jax.ShapeDtypeStruct((opts.max_outer,), jnp.int32,
                                          sharding=sspec_tree.trace_inner))
+    from repro.utils.jax_compat import shard_map as _shard_map
     fn = jax.jit(
-        jax.shard_map(
+        _shard_map(
             partial(ipi.solve_chunk, opts=opts, axes=axes),
             mesh=mesh,
             in_specs=(partition.mdp_pspecs(mdp_abs, axes),
                       state_specs, P()),
-            out_specs=state_specs, check_vma=False))
+            out_specs=state_specs))
     t0 = time.time()
     lowered = fn.lower(mdp_sds, state_sds,
                        jax.ShapeDtypeStruct((), jnp.int32))

@@ -36,9 +36,8 @@ def main(argv=None):
     opts = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64")
     ckpt_dir = tempfile.mkdtemp(prefix="elastic_")
     try:
-        mesh8 = jax.make_mesh(
-            (8, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import mesh_kwargs
+        mesh8 = jax.make_mesh((8, 1), ("data", "model"), **mesh_kwargs(2))
         short = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64",
                            max_outer=3)
         r1 = solve(mdp, short, mesh=mesh8, checkpoint_dir=ckpt_dir, chunk=1)
@@ -47,8 +46,8 @@ def main(argv=None):
 
         # "lose" half the fleet: resume on a 4-device mesh
         mesh4 = jax.make_mesh(
-            (4, 1), ("data", "model"), devices=np.array(jax.devices()[:4]),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            (4, 1), ("data", "model"),
+            **mesh_kwargs(2, devices=np.array(jax.devices()[:4])))
         r2 = solve(mdp, opts, mesh=mesh4, checkpoint_dir=ckpt_dir, chunk=16)
         print(f"[elastic] phase 2 on 4 devices: {r2.summary()}")
 

@@ -10,13 +10,19 @@ from __future__ import annotations
 import jax
 
 
+def mesh_kwargs(n_axes: int, **extra) -> dict:
+    """``jax.make_mesh`` kwargs, with ``axis_types`` only where the
+    installed jax supports it (absent pre-0.5: Auto is the default there)."""
+    if hasattr(jax.sharding, "AxisType"):
+        extra["axis_types"] = (jax.sharding.AxisType.Auto,) * n_axes
+    return extra
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -24,5 +30,4 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n, 1)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_kwargs(len(axes)))

@@ -6,6 +6,17 @@
 Generates (or loads) an instance, solves it with the selected iPI method —
 distributed over all available devices when >1 — and reports the
 convergence certificate.
+
+Fleet mode: ``--batch N`` solves N instances in ONE compiled batched program
+(:func:`repro.core.driver.solve_many`).  By default the fleet is a seed
+ensemble (``seed .. seed+N-1``); ``--sweep-gamma LO HI`` makes it a
+gamma-conditioning sweep instead (N log-spaced discount factors, the
+paper's gamma -> 1 study in one invocation):
+
+    PYTHONPATH=src python -m repro.launch.solve --instance garnet \
+        --n 5000 --batch 8 --method ipi_gmres
+    PYTHONPATH=src python -m repro.launch.solve --instance chain_walk \
+        --n 2000 --batch 6 --sweep-gamma 0.9 0.9999
 """
 
 from __future__ import annotations
@@ -14,26 +25,45 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
-from repro.core import IPIOptions, generators, solve
+from repro.core import IPIOptions, generators, solve, solve_many
 from repro.core.io import load_mdp
 from repro.launch.mesh import make_host_mesh
+
+
+def _gen_kwargs(args) -> dict:
+    if args.instance == "garnet":
+        return dict(n=args.n, m=args.m, k=args.k, gamma=args.gamma,
+                    seed=args.seed)
+    if args.instance == "maze2d":
+        return dict(size=args.size, gamma=args.gamma, seed=args.seed)
+    if args.instance == "sis":
+        return dict(pop=args.n, n_actions=args.m, gamma=args.gamma,
+                    seed=args.seed)
+    if args.instance == "chain_walk":
+        return dict(n=args.n, gamma=args.gamma)
+    raise ValueError(args.instance)
 
 
 def build_instance(args):
     if args.load:
         return load_mdp(args.load)
-    if args.instance == "garnet":
-        return generators.garnet(args.n, args.m, args.k, gamma=args.gamma,
-                                 seed=args.seed)
-    if args.instance == "maze2d":
-        return generators.maze2d(args.size, gamma=args.gamma, seed=args.seed)
-    if args.instance == "sis":
-        return generators.sis(args.n, args.m, gamma=args.gamma,
-                              seed=args.seed)
-    if args.instance == "chain_walk":
-        return generators.chain_walk(args.n, gamma=args.gamma)
-    raise ValueError(args.instance)
+    return generators.REGISTRY[args.instance](**_gen_kwargs(args))
+
+
+def build_fleet(args) -> list:
+    """``--batch N`` fleet: seed ensemble, or a gamma sweep with
+    ``--sweep-gamma``."""
+    kw = _gen_kwargs(args)
+    sweep = None
+    if args.sweep_gamma is not None:
+        lo, hi = args.sweep_gamma
+        # log-spaced in (1 - gamma): resolves the conditioning ~ 1/(1-gamma)
+        sweep = {"gamma": list(1.0 - np.geomspace(1 - lo, 1 - hi,
+                                                  args.batch))}
+    return generators.generate_many(args.instance, args.batch, sweep=sweep,
+                                    **kw)
 
 
 def main(argv=None):
@@ -54,14 +84,21 @@ def main(argv=None):
     ap.add_argument("--dtype", default="float64")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--single-device", action="store_true")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="solve a fleet of N instances in one batched "
+                         "program (seed ensemble unless --sweep-gamma)")
+    ap.add_argument("--sweep-gamma", type=float, nargs=2, default=None,
+                    metavar=("LO", "HI"),
+                    help="with --batch: gamma sweep over [LO, HI] instead "
+                         "of a seed ensemble")
     args = ap.parse_args(argv)
 
+    if args.sweep_gamma is not None and args.batch <= 1:
+        raise SystemExit("--sweep-gamma needs --batch N (the sweep IS the "
+                         "fleet); e.g. --batch 8 --sweep-gamma 0.9 0.9999")
     if args.dtype == "float64":
         jax.config.update("jax_enable_x64", True)
 
-    mdp = build_instance(args)
-    print(f"[solve] instance={args.instance} n={mdp.n_global} "
-          f"m={mdp.m_global} nnz/row={mdp.nnz_per_row} gamma={mdp.gamma}")
     opts = IPIOptions(method=args.method, atol=args.atol,
                       max_outer=args.max_outer, dtype=args.dtype)
     mesh = None
@@ -72,6 +109,27 @@ def main(argv=None):
         mesh = make_host_mesh(shape)
         print(f"[solve] distributed over mesh {dict(mesh.shape)} "
               f"layout={args.layout}")
+
+    if args.batch > 1:
+        if args.load:
+            raise SystemExit("--batch does not combine with --load")
+        fleet = build_fleet(args)
+        print(f"[solve] fleet B={args.batch} instance={args.instance} "
+              f"n={fleet[0].n_global} m={fleet[0].m_global} "
+              f"gammas={[round(float(m.gamma), 6) for m in fleet]}")
+        t0 = time.time()
+        results = solve_many(fleet, opts, mesh=mesh, layout=args.layout,
+                             checkpoint_dir=args.ckpt_dir, verbose=True)
+        wall = time.time() - t0
+        for b, r in enumerate(results):
+            print(f"[solve] [{b}] {r.summary()}")
+        print(f"[solve] fleet wall={wall:.2f}s "
+              f"({wall / args.batch:.2f}s/instance amortized)")
+        return 0 if all(r.converged for r in results) else 1
+
+    mdp = build_instance(args)
+    print(f"[solve] instance={args.instance} n={mdp.n_global} "
+          f"m={mdp.m_global} nnz/row={mdp.nnz_per_row} gamma={mdp.gamma}")
     t0 = time.time()
     r = solve(mdp, opts, mesh=mesh, layout=args.layout,
               checkpoint_dir=args.ckpt_dir, verbose=True)

@@ -1,0 +1,133 @@
+"""Batched fleet engine (solve_many) vs B independent solve calls.
+
+The contract (ISSUE 1): per-instance results must be what the per-instance
+solves produce — policy bit-for-bit, values to atol, and per-instance
+iteration counts / traces exact (this exercises the convergence-mask freeze:
+instances converge at different outer k and must stop accumulating).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (IPIOptions, generators, solve, solve_many,
+                        stack_mdps)
+from repro.core.mdp import batch_parts
+
+
+def _fleet(seeds, gamma=0.95, n=120, m=6, k=4):
+    return [generators.garnet(n=n, m=m, k=k, gamma=gamma, seed=s)
+            for s in seeds]
+
+
+def _assert_matches(singles, fleet, v_atol=1e-9):
+    assert len(singles) == len(fleet)
+    for b, (s, f) in enumerate(zip(singles, fleet)):
+        assert f.converged, f"instance {b}: {f.summary()}"
+        np.testing.assert_array_equal(f.policy, s.policy,
+                                      err_msg=f"instance {b} policy")
+        np.testing.assert_allclose(f.v, s.v, atol=v_atol,
+                                   err_msg=f"instance {b} values")
+        assert f.outer_iterations == s.outer_iterations, \
+            f"instance {b}: outer {f.outer_iterations} != " \
+            f"{s.outer_iterations} (freeze broken)"
+
+
+@pytest.mark.parametrize("method", ["vi", "mpi", "ipi_gmres", "ipi_bicgstab"])
+def test_solve_many_matches_independent(method):
+    """B=4 heterogeneous garnets; per-instance parity incl. iteration
+    counts, inner totals and traces."""
+    mdps = _fleet(seeds=[0, 1, 2, 3])
+    opts = IPIOptions(method=method, atol=1e-9, dtype="float64",
+                      max_outer=20000)
+    singles = [solve(m, opts) for m in mdps]
+    fleet = solve_many(mdps, opts)
+    _assert_matches(singles, fleet)
+    # instances must NOT all converge at the same k, else the freeze path
+    # was never exercised
+    if method in ("ipi_gmres", "ipi_bicgstab"):
+        assert len({r.outer_iterations for r in fleet}) > 1 or \
+            len({r.inner_iterations for r in fleet}) > 1
+    for s, f in zip(singles, fleet):
+        assert f.inner_iterations == s.inner_iterations
+        # Krylov dot-product reduction order may differ by ~1 ulp under vmap
+        np.testing.assert_allclose(f.trace_residual, s.trace_residual,
+                                   atol=1e-12, rtol=1e-4)
+        np.testing.assert_array_equal(f.trace_inner, s.trace_inner)
+
+
+def test_gamma_sweep_fleet():
+    """Heterogeneous gammas run the traced-gamma path (exact algebra,
+    fp-level rounding): values to tolerance, policies and counts exact."""
+    gammas = [0.9, 0.95, 0.99]
+    mdps = [generators.garnet(n=100, m=5, k=4, gamma=g, seed=1)
+            for g in gammas]
+    st = stack_mdps(mdps)
+    assert st.shared_topology            # same seed -> same sparsity
+    assert st.gamma == tuple(gammas)
+    _, _, gamma_t = batch_parts(st)
+    assert gamma_t is not None           # traced-gamma path engaged
+    opts = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64")
+    singles = [solve(m, opts) for m in mdps]
+    fleet = solve_many(mdps, opts)
+    _assert_matches(singles, fleet, v_atol=1e-7)
+
+
+def test_heterogeneous_state_counts_pad_and_trim():
+    mdps = [generators.garnet(n=90, m=4, k=3, gamma=0.95, seed=0),
+            generators.garnet(n=120, m=4, k=3, gamma=0.95, seed=1)]
+    opts = IPIOptions(method="mpi", atol=1e-8, dtype="float64")
+    fleet = solve_many(mdps, opts)
+    assert [len(r.v) for r in fleet] == [90, 120]
+    _assert_matches([solve(m, opts) for m in mdps], fleet)
+
+
+def test_stacked_container_and_instance_roundtrip():
+    mdps = _fleet(seeds=[3, 4], gamma=0.9)
+    st = stack_mdps(mdps)
+    assert st.batch == 2 and not st.shared_topology
+    st.validate()
+    for b in range(2):
+        inst = st.instance(b)
+        np.testing.assert_array_equal(np.asarray(inst.idx),
+                                      np.asarray(mdps[b].idx))
+        assert inst.gamma == mdps[b].gamma
+
+
+def test_solve_many_warm_start_and_guards():
+    mdps = _fleet(seeds=[0, 1])
+    opts = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64")
+    singles = [solve(m, opts) for m in mdps]
+    fleet = solve_many(mdps, opts, v0s=[s.v for s in singles])
+    assert all(r.outer_iterations <= 1 for r in fleet)
+    with pytest.raises(ValueError, match="solve_many"):
+        solve(stack_mdps(mdps), opts)
+    with pytest.raises(ValueError, match="solve"):
+        solve_many(mdps[0], opts)
+
+
+def test_options_validation_raises():
+    with pytest.raises(ValueError, match="method"):
+        IPIOptions(method="nope")
+    with pytest.raises(ValueError, match="dtype"):
+        IPIOptions(dtype="bfloat16")
+    with pytest.raises(ValueError, match="forcing_eta"):
+        IPIOptions(forcing_eta=1.5)
+    with pytest.raises(ValueError, match="halo"):
+        IPIOptions(halo=-1)
+    with pytest.raises(ValueError, match="gather_dtype"):
+        IPIOptions(gather_dtype="int32")
+    with pytest.raises(ValueError, match="wider"):
+        IPIOptions(dtype="float32", gather_dtype="float64")
+
+
+def test_generate_many_seed_ensemble_and_sweep():
+    ens = generators.generate_many("garnet", 3, n=50, m=3, k=2, seed=10)
+    assert len(ens) == 3
+    assert not np.array_equal(np.asarray(ens[0].cost),
+                              np.asarray(ens[1].cost))
+    sw = generators.generate_many("chain_walk", 3, n=40,
+                                  sweep={"gamma": [0.9, 0.99, 0.999]})
+    assert [m.gamma for m in sw] == [0.9, 0.99, 0.999]
+    with pytest.raises(ValueError, match="sweep"):
+        generators.generate_many("garnet", 3, n=50, m=3, k=2,
+                                 sweep={"gamma": [0.9]})

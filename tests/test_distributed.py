@@ -23,8 +23,8 @@ mdp = generators.garnet(n=997, m=11, k=6, gamma=0.99, seed=7)
 opts = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64")
 r_single = solve(mdp, opts)
 out = {}
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import mesh_kwargs
+mesh = jax.make_mesh((4, 2), ("data", "model"), **mesh_kwargs(2))
 for layout in ("1d", "2d"):
     r = solve(mdp, opts, mesh=mesh, layout=layout)
     out[layout] = dict(

@@ -3,7 +3,7 @@ beyond-paper optimization of EXPERIMENTS.md §Perf P1)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import IPIOptions, generators, solve
 
@@ -35,7 +35,7 @@ def test_halo_property(size, gamma, slip):
 def test_halo_rejects_wide_band():
     """Bandwidth violation must be caught, not silently mis-solved."""
     mdp = generators.garnet(100, 4, 3, seed=0)     # random columns: full band
-    with pytest.raises(AssertionError, match="bandwidth"):
+    with pytest.raises(ValueError, match="bandwidth"):
         solve(mdp, IPIOptions(method="vi", atol=1e-6, halo=5))
 
 
