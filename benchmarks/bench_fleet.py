@@ -1,0 +1,177 @@
+"""Fleet-sharded layout (ISSUE 2 tentpole claim): distribute the instance
+dim of a ``solve_many`` fleet over the mesh's leading ``fleet`` axis.
+
+Two measurements, matching the two halves of the claim:
+
+* **memory** — per-device *fleet memory*: the bytes that grow with B on
+  every device under the replicated layouts.  Two components:
+
+  - the replicated per-instance solver bookkeeping (``res`` / ``k`` /
+    ``inner_total`` / both trace arrays: ``B x (max_outer + 1)`` floats on
+    EVERY device under ``layout="1d"``), measured from the actual
+    ``addressable_shards`` of a live solve state;
+  - the gathered value window the Bellman backup materializes per device —
+    ``B_local x n_global`` (the all-gather runs per lane, so the replicated
+    layout materializes the FULL ``B x n_global`` value matrix on every
+    device; this is the term that caps B at single-device memory).
+
+  Both shrink by ``B / fleet_size`` under ``layout="fleet"`` — the
+  acceptance ratio reported in the ``derived`` column.  (The state/action
+  tables are invariant: they are already sharded over all devices either
+  way.)
+
+* **weak scaling** — grow the fleet with the fleet axis (B = 2 x F for
+  F = 1, 2, 4, 8) at fixed per-slice work and record wall-clock: under
+  fleet sharding each slice solves its own 2 instances independently (zero
+  cross-slice collectives in the body), so time should stay ~flat while B
+  grows 8x.  The replicated layout at the largest B is timed alongside as
+  the baseline it beats.
+
+Parity is asserted on every timed configuration (``agree=`` in the derived
+column): values bit-for-bit vs the replicated path for the elementwise
+method family, exact policies / iteration paths for Krylov.
+
+Run with a fake multi-device CPU mesh:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python -m benchmarks.run --only fleet
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import IPIOptions, generators, partition, solve_many
+from repro.core import driver as _driver
+from repro.launch.mesh import make_fleet_mesh, make_host_mesh
+
+B = 16
+N = 512
+
+
+def _fleet(b, n=N, gamma=0.95):
+    return [generators.garnet(n=n, m=6, k=4, gamma=gamma, seed=s)
+            for s in range(b)]
+
+
+def _device0_bytes(tree) -> int:
+    d0 = jax.devices()[0]
+    return sum(sh.data.nbytes for leaf in jax.tree_util.tree_leaves(tree)
+               for sh in getattr(leaf, "addressable_shards", [])
+               if sh.device == d0)
+
+
+def _fleet_state_bytes(mdps, opts, mesh, layout) -> tuple[int, int]:
+    """(bookkeeping bytes on device 0, gather-window bytes per device) for
+    a live solve state under ``layout``."""
+    from repro.core.mdp import stack_mdps
+    st = stack_mdps(mdps)
+    dev_mdp, axes, _ = partition.shard_mdp(st, mesh, layout)
+    _, init = _driver._make_runners(dev_mdp, opts, mesh, axes, dev_mdp.batch)
+    state = init(None)
+    book = _device0_bytes((state.res, state.k, state.inner_total,
+                           state.trace_res, state.trace_inner))
+    fleet_shards = partition._axis_size(mesh, axes.fleet)
+    b_local = dev_mdp.batch // fleet_shards
+    gather = b_local * dev_mdp.n_global * np.dtype(opts.dtype).itemsize
+    return book, gather
+
+
+def _agree(rs, base, *, exact: bool) -> bool:
+    # exact: bit-for-bit (elementwise method family); otherwise policies /
+    # iteration paths exact with ulp-level f32 value differences (batched
+    # Krylov dots associate differently per device-local lane count)
+    dv = max(float(np.abs(a.v - b.v).max()) for a, b in zip(rs, base))
+    ok = all(r.converged for r in rs) and \
+        all((a.policy == b.policy).all() for a, b in zip(rs, base)) and \
+        all(a.outer_iterations == b.outer_iterations
+            for a, b in zip(rs, base))
+    return ok and (dv == 0.0 if exact else dv < 1e-4)
+
+
+def _time(fn, reps=3) -> float:
+    fn()                                  # compile / warm-up
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6                  # us
+
+
+def run(rows) -> None:
+    n_dev = len(jax.devices())
+    fleet_max = 1
+    while fleet_max * 2 <= n_dev:
+        fleet_max *= 2
+    if fleet_max < 2:
+        print("  [skip] fleet bench needs >1 device; set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8", flush=True)
+        rows.append(("fleet/SKIPPED_single_device", -1, f"n_dev={n_dev}"))
+        return
+
+    opts = IPIOptions(method="ipi_gmres", atol=1e-5, dtype="float32",
+                      max_outer=500)
+
+    # -- per-device fleet memory: replicated vs fleet-sharded ---------------- #
+    mdps = _fleet(B)
+    book_r, gath_r = _fleet_state_bytes(
+        mdps, opts, make_host_mesh((n_dev, 1)), "1d")
+    book_f, gath_f = _fleet_state_bytes(
+        mdps, opts, make_fleet_mesh(fleet_max), "fleet")
+    ratio = (book_r + gath_r) / (book_f + gath_f)
+    rows.append((f"fleet/mem_per_device_replicated_B{B}",
+                 0.0, f"bytes={book_r + gath_r}"))
+    rows.append((f"fleet/mem_per_device_fleet{fleet_max}_B{B}",
+                 0.0, f"bytes={book_f + gath_f} ratio={ratio:.2f}x"))
+    print(f"  per-device fleet memory B={B}: replicated "
+          f"{(book_r + gath_r)/1e3:.1f} kB (book {book_r/1e3:.1f} + gather "
+          f"{gath_r/1e3:.1f}) vs fleet-{fleet_max} "
+          f"{(book_f + gath_f)/1e3:.1f} kB -> {ratio:.2f}x "
+          f"(ideal {fleet_max}x)", flush=True)
+
+    # -- parity: fleet-sharded == replicated --------------------------------- #
+    base = solve_many(mdps, opts)
+    vi = IPIOptions(method="vi", atol=1e-4, dtype="float32",
+                    max_outer=20000)
+    base_vi = solve_many(mdps, vi)
+    mesh = make_fleet_mesh(fleet_max)
+    ok_vi = _agree(solve_many(mdps, vi, mesh=mesh, layout="fleet"),
+                   base_vi, exact=True)
+    ok_kry = _agree(solve_many(mdps, opts, mesh=mesh, layout="fleet"),
+                    base, exact=False)
+    rows.append((f"fleet/parity_B{B}_fleet{fleet_max}", 0.0,
+                 f"vi_bit_for_bit={ok_vi} krylov={ok_kry}"))
+    print(f"  parity vs replicated: vi bit-for-bit={ok_vi} "
+          f"ipi_gmres (exact path, ulp values)={ok_kry}", flush=True)
+
+    # -- weak scaling: B grows with the fleet axis --------------------------- #
+    f, b_per = 1, 2
+    while f <= fleet_max:
+        b = b_per * f
+        sub = _fleet(b)
+        mesh_f = make_fleet_mesh(f)
+        us = _time(lambda: solve_many(sub, opts, mesh=mesh_f,
+                                      layout="fleet"))
+        rows.append((f"fleet/weak_scaling_F{f}_B{b}", us,
+                     f"per_instance_us={us / b:.0f}"))
+        print(f"  weak scaling F={f} B={b}: {us/1e3:.0f} ms "
+              f"({us/b/1e3:.1f} ms/instance)", flush=True)
+        f *= 2
+    b = b_per * fleet_max
+    sub = _fleet(b)
+    mesh_r = make_host_mesh((n_dev, 1))
+    us_rep = _time(lambda: solve_many(sub, opts, mesh=mesh_r, layout="1d"))
+    rows.append((f"fleet/weak_scaling_replicated_B{b}", us_rep,
+                 "baseline (fleet dim replicated)"))
+    print(f"  replicated layout at B={b}: {us_rep/1e3:.0f} ms", flush=True)
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(r)

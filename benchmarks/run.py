@@ -13,6 +13,9 @@ Tables:
   kernels       — fused Bellman backup vs unfused reference
   scaling       — 1 vs 8 device distributed solve
   batch         — fleet solve_many vs sequential loop (>= 3x claim)
+  fleet         — fleet-sharded layout: per-device memory ~B/fleet_size of
+                  the replicated layout + weak scaling (needs multi-device,
+                  e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
   lm_substrate  — per-arch smoke train-step timing
 (roofline terms live in benchmarks/roofline.py -> results/roofline.json)
 """
@@ -26,20 +29,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: solvers,conditioning,kernels,scaling,"
-                         "batch,lm_substrate")
+                         "batch,fleet,lm_substrate")
     ap.add_argument("--json-out", default=None,
                     help="path for the machine-readable results "
                          "(default: benchmarks/results/BENCH_batch.json)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_conditioning, bench_kernels,
-                            bench_lm_substrate, bench_scaling, bench_solvers)
+    from benchmarks import (bench_batch, bench_conditioning, bench_fleet,
+                            bench_kernels, bench_lm_substrate, bench_scaling,
+                            bench_solvers)
     suites = {
         "solvers": bench_solvers.run,
         "conditioning": bench_conditioning.run,
         "kernels": bench_kernels.run,
         "scaling": bench_scaling.run,
         "batch": bench_batch.run,
+        "fleet": bench_fleet.run,
         "lm_substrate": bench_lm_substrate.run,
     }
     pick = args.only.split(",") if args.only else list(suites)

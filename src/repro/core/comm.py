@@ -9,6 +9,13 @@ axes inside ``shard_map``:
   ``all_gather``; norms / dots are ``psum`` / ``pmax``.
 * ``action`` axis — optional 2-D layout (beyond the paper): actions are
   column-partitioned; the greedy step finishes with a min/argmin reduction.
+* ``fleet`` axis — fleet-sharded batched solves: the leading instance dim of
+  a :func:`repro.core.driver.solve_many` fleet is partitioned across this
+  axis (each device owns ``B / fleet_size`` instances on top of its state
+  slice).  The solver body needs no fleet collectives — instances are
+  independent — except the loop-convergence decision, which all-reduces the
+  per-instance active mask so every fleet shard runs the same number of
+  ``lax.while_loop`` iterations (frozen shards spin no-op iterations).
 
 When an axis name is ``None`` the collective degenerates to the identity, so
 the identical solver code runs on a single device (tests, small problems).
@@ -32,6 +39,7 @@ class Axes:
 
     state: AxisName = dataclasses.field(default=None, metadata=dict(static=True))
     action: AxisName = dataclasses.field(default=None, metadata=dict(static=True))
+    fleet: AxisName = dataclasses.field(default=None, metadata=dict(static=True))
 
     # ---- state-axis collectives -------------------------------------------------
     def allgather_state(self, x: jax.Array, dtype=None) -> jax.Array:
@@ -93,6 +101,20 @@ class Axes:
         for name in self.state:
             out *= jax.lax.axis_size(name)
         return out
+
+    # ---- fleet-axis collectives -------------------------------------------------
+    def any_fleet(self, x: jax.Array) -> jax.Array:
+        """Logical OR of a boolean across fleet shards (keeps the shared
+        ``lax.while_loop`` in lockstep when instances converge on some shards
+        before others)."""
+        if self.fleet is None:
+            return x
+        return jax.lax.psum(x.astype(jnp.int32), self.fleet) > 0
+
+    def fleet_index(self) -> jax.Array:
+        if self.fleet is None:
+            return jnp.int32(0)
+        return jax.lax.axis_index(self.fleet)
 
     # ---- action-axis collectives ------------------------------------------------
     def pmin_action(self, x):

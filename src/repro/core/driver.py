@@ -20,6 +20,17 @@ a per-instance active mask, so each result carries the same ``k`` /
 while the fleet amortizes dispatch, compilation and kernel launches (the
 ``benchmarks/bench_batch.py`` claim).  Heterogeneous state counts are padded
 (results are trimmed back); heterogeneous gammas run the traced-gamma path.
+
+Under the *fleet-sharded* layouts (``layout="fleet"`` / ``"fleet2d"``) the
+instance dim itself is partitioned over the mesh's leading ``fleet`` axis —
+per-device fleet memory is ``B / fleet_size`` of the replicated layouts, so
+fleet size scales with the mesh (``benchmarks/bench_fleet.py``).
+
+Checkpoints are mesh-agnostic: the solver state is saved *unsharded and
+unpadded* (state dims trimmed to the true ``n``, fleet dim to the true
+``B``), and restore re-pads for whatever mesh the resumed job runs on — a
+fleet solved on an 8-way fleet axis restores onto a 4-way one, and an
+``n`` that pads differently per mesh size round-trips exactly.
 """
 
 from __future__ import annotations
@@ -102,25 +113,46 @@ def _validate_banded(mdp, halo: int, mesh, layout: str) -> None:
                 f"smaller halo")
 
 
+_RUN_CHUNK_CACHE: dict = {}
+
+
 def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch):
     """(run_chunk, init) closures for single-device or shard_map execution."""
     if mesh is None:
         run_chunk = partial(ipi.solve_chunk, opts=opts, axes=axes)
         init = lambda v0: ipi.init_state(dev_mdp, axes, opts, v0)
         return run_chunk, init
-    lead = () if batch is None else (None,)
+    # Batched fleets: the leading instance dim (and the per-instance res / k
+    # / trace vectors) shard over axes.fleet — which is None (replicated)
+    # for the 1d/2d layouts, keeping their previous behavior.
+    lead = () if batch is None else (axes.fleet,)
+    scal = P() if batch is None else P(axes.fleet)
     mdp_specs = partition.mdp_pspecs(dev_mdp, axes)
     state_specs = SolveState(
         v=P(*lead, axes.state), tv=P(*lead, axes.state),
         pi=P(*lead, axes.state),
-        res=P(), k=P(), inner_total=P(), trace_res=P(), trace_inner=P())
-    run_chunk = jax.jit(
-        _shard_map(
-            partial(ipi.solve_chunk, opts=opts, axes=axes),
-            mesh=mesh,
-            in_specs=(mdp_specs, state_specs, P()),
-            out_specs=state_specs),
-    )
+        res=scal, k=scal, inner_total=scal, trace_res=scal,
+        trace_inner=scal)
+    # Reuse one jit wrapper per (mesh, opts, axes, specs) so repeated solves
+    # of same-shaped problems — a serving fleet, bench reps, the chunked
+    # restart loop — hit jax's compilation cache instead of re-tracing a
+    # fresh wrapper every call.  The specs pytree (treedef includes the MDP
+    # statics) is exactly what determines the wrapped program.
+    in_specs = (mdp_specs, state_specs, P())
+    flat, treedef = jax.tree_util.tree_flatten(in_specs)
+    key = (mesh, opts, axes, treedef, tuple(flat))
+    run_chunk = _RUN_CHUNK_CACHE.get(key)
+    if run_chunk is None:
+        if len(_RUN_CHUNK_CACHE) > 64:   # bound growth: drop the oldest
+            _RUN_CHUNK_CACHE.pop(next(iter(_RUN_CHUNK_CACHE)))
+        run_chunk = jax.jit(
+            _shard_map(
+                partial(ipi.solve_chunk, opts=opts, axes=axes),
+                mesh=mesh,
+                in_specs=in_specs,
+                out_specs=state_specs),
+        )
+        _RUN_CHUNK_CACHE[key] = run_chunk
 
     def init(v0):
         if v0 is None:
@@ -142,14 +174,65 @@ def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch):
     return run_chunk, init
 
 
-def _restore_or_init(init, v0, checkpoint_dir, verbose):
+def _trim_ckpt_state(state: SolveState, n_orig: int,
+                     b_orig: int | None) -> SolveState:
+    """Solver state in its mesh-agnostic checkpoint form: gathered to host
+    and stripped of mesh padding (state dims trimmed to the true ``n_orig``,
+    fleet dim to the true ``b_orig``).  Restore re-pads for the resuming
+    mesh, so a job may restart on a mesh that pads differently (elastic
+    restart across device counts / fleet-axis sizes)."""
+    host = jax.device_get(state)
+    lead = (lambda x: np.asarray(x)[:b_orig]) if b_orig is not None \
+        else np.asarray
+    return SolveState(
+        v=lead(host.v)[..., :n_orig], tv=lead(host.tv)[..., :n_orig],
+        pi=lead(host.pi)[..., :n_orig], res=lead(host.res),
+        k=lead(host.k), inner_total=lead(host.inner_total),
+        trace_res=lead(host.trace_res), trace_inner=lead(host.trace_inner))
+
+
+def _pad_restored(tree, like):
+    """Zero-pad a restored (unpadded) checkpoint to the current mesh's
+    padded shapes.  Zero is exact, not approximate: padded states are
+    absorbing zero-cost self-loops (``v == tv == 0``, greedy action 0 —
+    precisely the values the solver would have computed for them), and
+    padded fleet lanes get ``res == 0``, freezing them under the active
+    mask from the first restored iteration."""
+    def pad(a, l):
+        a = np.asarray(a)
+        if a.shape != l.shape:
+            if len(a.shape) != len(l.shape) or \
+                    any(s > t for s, t in zip(a.shape, l.shape)):
+                raise ValueError(
+                    f"checkpoint leaf of shape {a.shape} does not fit this "
+                    f"solve's {tuple(l.shape)}: the checkpoint was written "
+                    f"by a different problem or options (e.g. a larger "
+                    f"max_outer, n, or fleet size); point checkpoint_dir "
+                    f"at a fresh directory or re-run with the original "
+                    f"settings")
+            a = np.pad(a, [(0, t - s) for s, t in zip(a.shape, l.shape)])
+        return a.astype(l.dtype)
+    return jax.tree_util.tree_map(pad, tree, like)
+
+
+def _restore_or_init(init, v0, checkpoint_dir, verbose, expect=None):
+    """``expect`` maps checkpoint-meta keys (``n`` / ``batch``) to the
+    values this solve requires — a mismatch means the directory holds some
+    *other* problem's checkpoint, which zero-padding would otherwise
+    silently absorb."""
     if checkpoint_dir:
         like = jax.eval_shape(init, v0)
-        like = jax.tree_util.tree_map(
-            lambda s: np.zeros(s.shape, s.dtype), like)
         restored = ckpt.restore(checkpoint_dir, like)
         if restored is not None:
-            tree, _, _ = restored
+            tree, _, meta = restored
+            for key, want in (expect or {}).items():
+                got = meta.get(key)
+                if got is not None and got != want:
+                    raise ValueError(
+                        f"checkpoint in {checkpoint_dir!r} was written for "
+                        f"{key}={got} but this solve has {key}={want}; "
+                        f"refusing to resume from another problem's state")
+            tree = _pad_restored(tree, like)
             if verbose:
                 print(f"[driver] resumed at outer k="
                       f"{int(np.max(np.asarray(tree.k)))}")
@@ -169,6 +252,10 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
     if mdp.batch is not None:
         raise ValueError("solve() takes one MDP instance; for a batched "
                          "fleet use solve_many()")
+    if layout in partition.FLEET_LAYOUTS:
+        raise ValueError(f"layout={layout!r} shards the fleet (instance) "
+                         "dim, which a single solve() does not have; use "
+                         "solve_many() or layout='1d'/'2d'")
     n_orig = mdp.n_global
     if opts.halo:
         _validate_banded(mdp, opts.halo, mesh, layout)
@@ -182,7 +269,8 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
                          (0, dev_mdp.n_global - n_orig))
     run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, None)
 
-    state = _restore_or_init(init, v0, checkpoint_dir, verbose)
+    state = _restore_or_init(init, v0, checkpoint_dir, verbose,
+                             expect=dict(n=n_orig))
     while True:
         k = int(jax.device_get(state.k))
         res = float(jax.device_get(state.res))
@@ -195,8 +283,9 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
         k_hi = jnp.int32(min(k + chunk, opts.max_outer))
         state = run_chunk(dev_mdp, state, k_hi)
         if checkpoint_dir:
-            ckpt.save(checkpoint_dir, int(jax.device_get(state.k)), state,
-                      meta=dict(method=opts.method))
+            ckpt.save(checkpoint_dir, int(jax.device_get(state.k)),
+                      _trim_ckpt_state(state, n_orig, None),
+                      meta=dict(method=opts.method, n=n_orig))
 
     if mesh is not None:
         # gather the sharded fields for the host-side result
@@ -206,6 +295,7 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
 
 def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
                mesh=None, layout: str = "1d", v0s=None,
+               pad_fleet: bool = True,
                checkpoint_dir: str | None = None, chunk: int = 64,
                verbose: bool = False) -> list[SolveResult]:
     """Solve a fleet of MDPs in one compiled batched program.
@@ -219,8 +309,29 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
     vmapped kernels, one ``shard_map`` when ``mesh`` is given.  Returns one
     :class:`SolveResult` per instance, padding trimmed.
 
+    ``layout`` picks how the fleet maps onto ``mesh``:
+
+    * ``"1d"`` / ``"2d"`` — the instance dim is *replicated*: every device
+      owns its state (x action) slice of all B instances.  Simple, but
+      per-device fleet memory grows with B.
+    * ``"fleet"`` / ``"fleet2d"`` — the instance dim is *sharded* over the
+      mesh's leading ``fleet`` axis (build one with
+      :func:`repro.launch.mesh.make_fleet_mesh`); states (and actions, for
+      ``"fleet2d"``) shard over the remaining axes within each fleet slice.
+      Per-device fleet memory is ``B / fleet_size`` of the replicated
+      layouts, so B scales with the mesh.  B is padded up to a multiple of
+      the fleet-axis size with zero-cost dummy instances (trimmed from the
+      results); ``pad_fleet=False`` turns the padding into a ``ValueError``
+      for callers that need exact placement.
+
     ``v0s`` optionally warm-starts: a sequence of per-instance ``(n_i,)``
     vectors (zero-padded to the fleet width) or a stacked ``(B, n)`` array.
+
+    ``checkpoint_dir`` persists the fleet state between chunks.  Checkpoints
+    are saved **unsharded and unpadded** (true ``B`` and ``n``), so a fleet
+    checkpoint is mesh-agnostic exactly like a single-instance one: a solve
+    interrupted on an 8-way fleet axis resumes on a 4-way axis (or on a
+    replicated layout, or single-device) bit-for-bit.
     """
     if isinstance(mdps, (EllMDP, DenseMDP)):
         if mdps.batch is None:
@@ -232,7 +343,12 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
         mdps = list(mdps)
         n_origs = [m.n_global for m in mdps]
         batched = stack_mdps(mdps)
+    b_orig = batched.batch
     gammas = gammas_of(batched)
+    if layout in partition.FLEET_LAYOUTS and mesh is None:
+        raise ValueError(f"layout={layout!r} shards the fleet dim over a "
+                         "mesh; pass mesh=... (see "
+                         "repro.launch.mesh.make_fleet_mesh)")
     if opts.halo:
         _validate_banded(batched, opts.halo, mesh, layout)
 
@@ -250,13 +366,16 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
         axes = Axes()
         dev_mdp = batched
     else:
-        dev_mdp, axes, _ = partition.shard_mdp(batched, mesh, layout)
+        dev_mdp, axes, _ = partition.shard_mdp(batched, mesh, layout,
+                                               pad_fleet=pad_fleet)
         if v0 is not None:
             pad_n = dev_mdp.n_global - batched.n_global
-            v0 = jnp.pad(v0, ((0, 0), (0, pad_n)))
-    run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, batched.batch)
+            pad_b = dev_mdp.batch - b_orig
+            v0 = jnp.pad(v0, ((0, pad_b), (0, pad_n)))
+    run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, dev_mdp.batch)
 
-    state = _restore_or_init(init, v0, checkpoint_dir, verbose)
+    state = _restore_or_init(init, v0, checkpoint_dir, verbose,
+                             expect=dict(n=batched.n_global, batch=b_orig))
     while True:
         k = np.asarray(jax.device_get(state.k))
         res = np.asarray(jax.device_get(state.res))
@@ -271,13 +390,15 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
         k_hi = jnp.int32(min(int(k[~done].min()) + chunk, opts.max_outer))
         state = run_chunk(dev_mdp, state, k_hi)
         if checkpoint_dir:
-            ckpt.save(checkpoint_dir, int(np.max(np.asarray(
-                jax.device_get(state.k)))), state,
-                meta=dict(method=opts.method, batch=batched.batch))
+            trimmed = _trim_ckpt_state(state, batched.n_global, b_orig)
+            ckpt.save(checkpoint_dir, int(np.max(np.asarray(trimmed.k))),
+                      trimmed,
+                      meta=dict(method=opts.method, batch=b_orig,
+                                n=batched.n_global, layout=layout))
 
     state = jax.device_get(state)
     out = []
-    for b in range(batched.batch):
+    for b in range(b_orig):
         sb = jax.tree_util.tree_map(lambda x: np.asarray(x)[b], state)
         out.append(_result(sb, opts, gammas[b], n_origs[b]))
     return out

@@ -37,6 +37,14 @@ loop keeps running on the instances still converging.  Homogeneous-gamma
 fleets run the bit-identical static-gamma arithmetic of the unbatched path;
 heterogeneous gammas thread a traced per-instance ``gamma_t`` through
 :mod:`repro.core.bellman` (exact algebra, fp-level rounding differences).
+
+Fleet-sharded layouts (``axes.fleet`` set) place only ``B / fleet_size``
+instances on each shard.  Instances are independent, so the body needs no
+new collectives — but the ``while_loop`` condition all-reduces the active
+mask over the fleet axis (:meth:`Axes.any_fleet`) so every shard runs the
+same iteration count: a shard whose lanes have all converged spins frozen
+no-op iterations (the active mask keeps its state fixed) until the slowest
+shard finishes, instead of desynchronizing the loop.
 """
 
 from __future__ import annotations
@@ -136,12 +144,29 @@ class SolveState:
     trace_inner: jax.Array  # (max_outer,) int32, inner iters per outer
 
 
+def _local_gamma_t(gamma_t: jax.Array | None, batch: int,
+                   axes: Axes) -> jax.Array | None:
+    """This shard's block of the global per-instance discount vector.
+
+    Under a fleet-sharded layout the device-local batched MDP view carries
+    ``B_local = B / fleet_size`` instances, but ``gamma`` is static global
+    metadata (a length-``B`` tuple), so the traced ``(B,)`` vector
+    :func:`repro.core.mdp.batch_parts` builds from it must be sliced to the
+    lanes this fleet shard owns.
+    """
+    if gamma_t is None or gamma_t.shape[0] == batch:
+        return gamma_t
+    return jax.lax.dynamic_slice_in_dim(
+        gamma_t, axes.fleet_index() * batch, batch)
+
+
 def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
                v0: jax.Array | None = None, *,
                gamma_t: jax.Array | None = None) -> SolveState:
     if mdp.batch is not None:
         view, in_ax, g_t = batch_parts(mdp)
         g_t = gamma_t if gamma_t is not None else g_t
+        g_t = _local_gamma_t(g_t, mdp.batch, axes)
         fn = lambda m, v, gt: init_state(m, axes, opts, v, gamma_t=gt)
         return jax.vmap(fn, in_axes=(in_ax, None if v0 is None else 0,
                                      None if g_t is None else 0))(view, v0,
@@ -258,6 +283,7 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
             cond, lambda s: outer_step(mdp, s, opts, axes), state)
 
     view, in_ax, gamma_t = batch_parts(mdp)
+    gamma_t = _local_gamma_t(gamma_t, mdp.batch, axes)
     core = jax.vmap(
         lambda m, s, gt: _outer_core(m, s, opts, axes, gt),
         in_axes=(in_ax, 0, None if gamma_t is None else 0))
@@ -286,5 +312,10 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
                 s.trace_inner, inner_col[:, None], (jnp.int32(0),
                                                     k_col - 1)))
 
+    # The loop condition is all-reduced over the fleet axis: every fleet
+    # shard runs the same trip count (a shard whose lanes all converged
+    # spins no-op iterations — `sel` keeps its state frozen), so collectives
+    # may safely be added to the body later without desynchronizing SPMD
+    # shards.  Identity when axes.fleet is None (replicated layouts).
     return jax.lax.while_loop(
-        lambda s: jnp.any(active(s)), body, state)
+        lambda s: axes.any_fleet(jnp.any(active(s))), body, state)

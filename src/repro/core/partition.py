@@ -1,17 +1,27 @@
 """Partitioning of a global MDP over the device mesh.
 
 madupite/PETSc row-partitions states over MPI ranks (1-D).  We support that
-layout and a beyond-paper 2-D (state x action) layout:
+layout, a beyond-paper 2-D (state x action) layout, and *fleet-sharded*
+layouts that additionally partition the instance dim of a batched fleet:
 
   * ``layout="1d"`` — states sharded over *all* mesh axes (paper-faithful);
   * ``layout="2d"`` — states over all-but-last axis, actions over the last
     (``model``) axis; the greedy min and the policy-evaluation matvec gain a
-    reduction over the action axis (see :mod:`repro.core.bellman`).
+    reduction over the action axis (see :mod:`repro.core.bellman`);
+  * ``layout="fleet"`` — the leading (first) mesh axis shards the fleet's
+    instance dim ``B``; states are sharded over the remaining axes *within*
+    each fleet slice.  Per-device fleet memory drops from ``B x n_local`` to
+    ``(B / fleet_size) x n_local`` — the layout that scales fleet size
+    beyond single-device memory (``solve_many`` only);
+  * ``layout="fleet2d"`` — instances over the first axis, states over the
+    middle axes, actions over the last axis (fleet x state x action).
 
 Padding: states are padded with absorbing zero-cost self-loops (their value
 is identically 0 and they are unreachable, so the solution and residuals on
 real states are untouched); actions are padded with cost ``BIG`` rows that
-can never be greedy.
+can never be greedy; fleet-sharded batches are padded with zero-cost dummy
+instances whose optimal value is identically 0 — they converge at k=0 and
+stay frozen under the solver's active mask, so they cost one no-op lane.
 """
 
 from __future__ import annotations
@@ -27,15 +37,28 @@ from repro.core.mdp import DenseMDP, EllMDP, MDP
 
 _BIG_COST = 1e30
 
+LAYOUTS = ("1d", "2d", "fleet", "fleet2d")
+FLEET_LAYOUTS = ("fleet", "fleet2d")
+
 
 def mesh_axes(mesh, layout: str) -> Axes:
+    # Raised (not assert'd): layout validation must survive `python -O`.
     names = tuple(mesh.axis_names)
+    need = {"1d": 1, "2d": 2, "fleet": 2, "fleet2d": 3}.get(layout)
+    if need is None:
+        raise ValueError(f"unknown layout {layout!r}; pick one of {LAYOUTS}")
+    if len(names) < need:
+        hint = ("; see launch.mesh.make_fleet_mesh"
+                if layout in FLEET_LAYOUTS else "")
+        raise ValueError(f"layout {layout!r} needs >= {need} mesh axes, "
+                         f"got {names}{hint}")
     if layout == "1d":
         return Axes(state=names, action=None)
     if layout == "2d":
-        assert len(names) >= 2, "2d layout needs >= 2 mesh axes"
         return Axes(state=names[:-1], action=names[-1])
-    raise ValueError(layout)
+    if layout == "fleet":
+        return Axes(state=names[1:], action=None, fleet=names[0])
+    return Axes(state=names[1:-1], action=names[-1], fleet=names[0])
 
 
 def _axis_size(mesh, names) -> int:
@@ -91,15 +114,70 @@ def pad_mdp(mdp: EllMDP, n_mult: int, m_mult: int) -> EllMDP:
                   n_global=n + n_pad, m_global=m + m_pad)
 
 
+def fleet_padded_batch(b: int, fleet_size: int, pad: bool = True) -> int:
+    """Fleet size after padding ``b`` up to a multiple of ``fleet_size``.
+
+    Raises an actionable ``ValueError`` (instead of letting ``shard_map``
+    fail on shapes later) when ``b`` is incompatible and padding is off.
+    """
+    b_pad = -(-b // fleet_size) * fleet_size
+    if b_pad != b and not pad:
+        raise ValueError(
+            f"fleet of B={b} instances does not divide over the "
+            f"{fleet_size}-way fleet axis and fleet padding is disabled; "
+            f"either pass pad_fleet=True (adds {b_pad - b} zero-cost dummy "
+            f"instance(s), trimmed from the results), solve a B divisible "
+            f"by {fleet_size}, or build the mesh with a fleet axis that "
+            f"divides {b}")
+    return b_pad
+
+
+def pad_fleet_dim(mdp: MDP, b_to: int) -> MDP:
+    """Pad a batched fleet (host-side) to ``b_to`` instances.
+
+    Dummy instances reuse instance 0's (valid, row-stochastic) transitions
+    with identically-zero costs, so their optimal value is exactly 0: at the
+    solver's ``v0 = 0`` start their Bellman residual is 0 and the active
+    mask freezes them immediately — they never do real work and are trimmed
+    from the results.
+    """
+    b = mdp.batch
+    if b is None:
+        raise ValueError("pad_fleet_dim() requires a batched MDP")
+    if b_to == b:
+        return mdp
+    if b_to < b:
+        raise ValueError(f"cannot pad fleet of {b} down to {b_to}")
+    rep = lambda arr: np.broadcast_to(
+        np.asarray(arr)[:1], (b_to - b,) + arr.shape[1:])
+    cat = lambda arr, pad: jax.numpy.asarray(
+        np.concatenate([np.asarray(arr), pad], axis=0))
+    gamma = mdp.gamma
+    if isinstance(gamma, tuple):
+        gamma = gamma + (gamma[-1],) * (b_to - b)
+    zero_cost = np.zeros((b_to - b,) + mdp.cost.shape[1:],
+                         np.asarray(mdp.cost).dtype)
+    if isinstance(mdp, EllMDP):
+        idx = mdp.idx if mdp.shared_topology else cat(mdp.idx, rep(mdp.idx))
+        return EllMDP(idx=idx, val=cat(mdp.val, rep(mdp.val)),
+                      cost=cat(mdp.cost, zero_cost), gamma=gamma,
+                      n_global=mdp.n_global, m_global=mdp.m_global)
+    return DenseMDP(p=cat(mdp.p, rep(mdp.p)),
+                    cost=cat(mdp.cost, zero_cost), gamma=gamma,
+                    n_global=mdp.n_global, m_global=mdp.m_global)
+
+
 def mdp_pspecs(mdp: MDP, axes: Axes):
     """PartitionSpecs for the MDP container fields (as a matching pytree).
 
-    Fleet containers get a leading unsharded (replicated-layout) batch dim.
+    Fleet containers get a leading batch dim sharded over ``axes.fleet``
+    (``None`` — replicated — for the non-fleet layouts).
     """
     s, a = axes.state, axes.action
-    lead = () if mdp.batch is None else (None,)
+    lead = () if mdp.batch is None else (axes.fleet,)
     if isinstance(mdp, EllMDP):
-        idx_spec = P(s, a, None) if mdp.idx.ndim == 3 else P(None, s, a, None)
+        idx_spec = P(s, a, None) if mdp.idx.ndim == 3 \
+            else P(*lead, s, a, None)
         return EllMDP(idx=idx_spec, val=P(*lead, s, a, None),
                       cost=P(*lead, s, a),
                       gamma=mdp.gamma, n_global=mdp.n_global,
@@ -109,21 +187,32 @@ def mdp_pspecs(mdp: MDP, axes: Axes):
                     n_global=mdp.n_global, m_global=mdp.m_global)
 
 
-def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d"):
+def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d", *,
+              pad_fleet: bool = True):
     """Pad + place a host MDP (single instance or batched fleet) onto
     ``mesh``.
 
     Returns ``(mdp_device, axes, n_orig)``; device arrays carry
     ``NamedSharding`` so ``shard_map`` consumes them without resharding.
-    States (and actions, 2-D layout) are sharded; the fleet dim, when
-    present, stays unsharded — every shard owns its row slice of all B
-    instances, which is what the vmapped solver consumes.
+    States (and actions, 2-D layout) are sharded.  The fleet dim of a
+    batched container is replicated under the 1d/2d layouts (every shard
+    owns its row slice of all B instances) and sharded over the leading
+    mesh axis under the fleet layouts — padded to the fleet-axis size first
+    (``pad_fleet=False`` raises instead of padding).
     """
     axes = mesh_axes(mesh, layout)
+    if axes.fleet is not None and mdp.batch is None:
+        raise ValueError(f"layout {layout!r} shards the fleet (batch) dim "
+                         "but the MDP is unbatched; use layout='1d'/'2d' "
+                         "or solve a fleet via solve_many()")
     n_mult = _axis_size(mesh, axes.state)
     m_mult = _axis_size(mesh, axes.action)
     n_orig = mdp.n_global
     padded = pad_mdp(mdp, n_mult, m_mult)
+    if axes.fleet is not None:
+        b_to = fleet_padded_batch(padded.batch, _axis_size(mesh, axes.fleet),
+                                  pad_fleet)
+        padded = pad_fleet_dim(padded, b_to)
     specs = mdp_pspecs(padded, axes)
     place = lambda arr, spec: jax.device_put(arr, NamedSharding(mesh, spec))
     dev = EllMDP(idx=place(padded.idx, specs.idx),

@@ -13,7 +13,10 @@ Batched fleets: every entry point also accepts a leading batch dim ``B`` on
 its table arguments (``val``/``cost``/``p`` rank +1; ``idx`` batched or
 shared across instances; ``v``/``x`` batched ``(B, n)`` or shared ``(n,)``)
 and vmaps the per-instance kernel — so the same Pallas/XLA kernels serve
-multi-instance solves without a batched reimplementation.
+multi-instance solves without a batched reimplementation.  A size-1 batch
+dim — the common device-local shape under the fleet-sharded layouts, where
+each fleet shard owns ``B / fleet_size`` instances — is squeezed and run
+through the unbatched kernel directly instead of a 1-lane vmap.
 """
 
 from __future__ import annotations
@@ -49,6 +52,12 @@ def _ax(arr, batched_ndim: int):
     return 0 if arr.ndim == batched_ndim else None
 
 
+def _sq(arr, batched_ndim: int):
+    """Squeeze a (size-1) leading batch dim off an optionally-batched
+    operand — the B_local == 1 fast path of the fleet-sharded layouts."""
+    return arr[0] if arr.ndim == batched_ndim else arr
+
+
 def _ell_backup(idx, val, cost, gamma, v, impl):
     if impl == "xla":
         return ref.ell_backup(idx, val, cost, gamma, v)
@@ -62,6 +71,10 @@ def ell_backup(idx, val, cost, gamma: float, v, *, impl: str | None = None):
     """Fused Bellman backup on an ELL block -> (v_new (n,), argmin (n,) int32)."""
     impl = _resolve(impl)
     if val.ndim == 4:
+        if val.shape[0] == 1:
+            tv, am = _ell_backup(_sq(idx, 4), val[0], cost[0], gamma,
+                                 _sq(v, 2), impl)
+            return tv[None], am[None]
         fn = lambda i, vl, c, vv: _ell_backup(i, vl, c, gamma, vv, impl)
         return jax.vmap(fn, in_axes=(_ax(idx, 4), 0, 0, _ax(v, 2)))(
             idx, val, cost, v)
@@ -80,6 +93,9 @@ def _ell_qvalues(idx, val, cost, gamma, v, impl):
 def ell_qvalues(idx, val, cost, gamma: float, v, *, impl: str | None = None):
     impl = _resolve(impl)
     if val.ndim == 4:
+        if val.shape[0] == 1:
+            return _ell_qvalues(_sq(idx, 4), val[0], cost[0], gamma,
+                                _sq(v, 2), impl)[None]
         fn = lambda i, vl, c, vv: _ell_qvalues(i, vl, c, gamma, vv, impl)
         return jax.vmap(fn, in_axes=(_ax(idx, 4), 0, 0, _ax(v, 2)))(
             idx, val, cost, v)
@@ -99,6 +115,8 @@ def ell_matvec(idx, val, x, *, impl: str | None = None):
     """Policy-restricted SpMV y = P_pi @ x on (n, K) ELL rows."""
     impl = _resolve(impl)
     if val.ndim == 3:
+        if val.shape[0] == 1:
+            return _ell_matvec(_sq(idx, 3), val[0], _sq(x, 2), impl)[None]
         fn = lambda i, vl, xx: _ell_matvec(i, vl, xx, impl)
         return jax.vmap(fn, in_axes=(_ax(idx, 3), 0, _ax(x, 2)))(idx, val, x)
     return _ell_matvec(idx, val, x, impl)
@@ -116,6 +134,9 @@ def _dense_backup(p, cost, gamma, v, impl):
 def dense_backup(p, cost, gamma: float, v, *, impl: str | None = None):
     impl = _resolve(impl)
     if p.ndim == 4:
+        if p.shape[0] == 1:
+            tv, am = _dense_backup(p[0], cost[0], gamma, _sq(v, 2), impl)
+            return tv[None], am[None]
         fn = lambda pp, c, vv: _dense_backup(pp, c, gamma, vv, impl)
         return jax.vmap(fn, in_axes=(0, 0, _ax(v, 2)))(p, cost, v)
     return _dense_backup(p, cost, gamma, v, impl)

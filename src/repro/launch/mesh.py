@@ -8,6 +8,7 @@ jax import (see dryrun.py).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def mesh_kwargs(n_axes: int, **extra) -> dict:
@@ -31,3 +32,29 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     if shape is None:
         shape = (n, 1)
     return jax.make_mesh(shape, axes, **mesh_kwargs(len(axes)))
+
+
+def make_fleet_mesh(fleet: int, *, layout: str = "fleet", devices=None):
+    """Mesh with a leading ``fleet`` axis for fleet-sharded ``solve_many``.
+
+    ``fleet`` devices shard the instance dim; the remaining ``n // fleet``
+    devices shard states within each fleet slice (``layout="fleet"``), or
+    states x actions (``layout="fleet2d"``: the trailing axis of size 2 —
+    or 1 when indivisible — shards actions).
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs)
+    if fleet < 1 or n % fleet:
+        raise ValueError(f"fleet-axis size {fleet} must divide the device "
+                         f"count {n}")
+    rest = n // fleet
+    if layout == "fleet":
+        shape, names = (fleet, rest), ("fleet", "data")
+    elif layout == "fleet2d":
+        am = 2 if rest % 2 == 0 and rest >= 2 else 1
+        shape, names = (fleet, rest // am, am), ("fleet", "data", "model")
+    else:
+        raise ValueError(f"make_fleet_mesh serves the fleet layouts, "
+                         f"got {layout!r}")
+    extra = {} if devices is None else dict(devices=np.asarray(devs))
+    return jax.make_mesh(shape, names, **mesh_kwargs(len(names), **extra))

@@ -17,6 +17,15 @@ paper's gamma -> 1 study in one invocation):
         --n 5000 --batch 8 --method ipi_gmres
     PYTHONPATH=src python -m repro.launch.solve --instance chain_walk \
         --n 2000 --batch 6 --sweep-gamma 0.9 0.9999
+
+Fleet-sharded layouts: ``--layout fleet`` (or ``fleet2d``) shards the fleet's
+instance dim over the mesh's leading ``fleet`` axis (``--fleet N`` picks the
+axis size; default: all devices) so per-device fleet memory is B/N of the
+replicated layouts:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.solve --instance garnet \
+        --n 2000 --batch 16 --layout fleet --fleet 8
 """
 
 from __future__ import annotations
@@ -29,7 +38,7 @@ import numpy as np
 
 from repro.core import IPIOptions, generators, solve, solve_many
 from repro.core.io import load_mdp
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_fleet_mesh, make_host_mesh
 
 
 def _gen_kwargs(args) -> dict:
@@ -80,7 +89,12 @@ def main(argv=None):
     ap.add_argument("--method", default="ipi_gmres")
     ap.add_argument("--atol", type=float, default=1e-8)
     ap.add_argument("--max-outer", type=int, default=2000)
-    ap.add_argument("--layout", default="1d", choices=["1d", "2d"])
+    ap.add_argument("--layout", default="1d",
+                    choices=["1d", "2d", "fleet", "fleet2d"])
+    ap.add_argument("--fleet", type=int, default=None,
+                    help="fleet-axis size for --layout fleet/fleet2d "
+                         "(must divide the device count; default: all "
+                         "devices)")
     ap.add_argument("--dtype", default="float64")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--single-device", action="store_true")
@@ -96,6 +110,10 @@ def main(argv=None):
     if args.sweep_gamma is not None and args.batch <= 1:
         raise SystemExit("--sweep-gamma needs --batch N (the sweep IS the "
                          "fleet); e.g. --batch 8 --sweep-gamma 0.9 0.9999")
+    fleet_layout = args.layout in ("fleet", "fleet2d")
+    if fleet_layout and args.batch <= 1:
+        raise SystemExit(f"--layout {args.layout} shards the fleet dim; it "
+                         "needs a fleet (--batch N)")
     if args.dtype == "float64":
         jax.config.update("jax_enable_x64", True)
 
@@ -104,11 +122,19 @@ def main(argv=None):
     mesh = None
     if not args.single_device and len(jax.devices()) > 1:
         n_dev = len(jax.devices())
-        shape = (n_dev // 2, 2) if args.layout == "2d" and n_dev >= 2 \
-            else (n_dev, 1)
-        mesh = make_host_mesh(shape)
+        if fleet_layout:
+            fleet = args.fleet if args.fleet is not None else n_dev
+            mesh = make_fleet_mesh(fleet, layout=args.layout)
+        else:
+            shape = (n_dev // 2, 2) if args.layout == "2d" and n_dev >= 2 \
+                else (n_dev, 1)
+            mesh = make_host_mesh(shape)
         print(f"[solve] distributed over mesh {dict(mesh.shape)} "
               f"layout={args.layout}")
+    elif fleet_layout:
+        raise SystemExit(f"--layout {args.layout} needs >1 device (set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N"
+                         " to fake a mesh on CPU)")
 
     if args.batch > 1:
         if args.load:

@@ -3,10 +3,20 @@
 Design for scale (see DESIGN.md §3): checkpoints are *mesh-agnostic* — leaves
 are saved as full (unsharded) arrays plus a JSON-serializable manifest, so a
 restarted job may re-shard onto a different mesh (elastic restart after node
-loss).  Writes are atomic (tmp + rename); the newest complete step wins; a
-corrupt/partial newest step is skipped (crash-during-write tolerance).  At
-real 1000-node scale the same layout would be written as per-host tiles +
-manifest; the single-process container writes one file.
+loss).  Mesh-agnostic also means mesh-padding-agnostic: callers persist the
+*unpadded* truth (the solver driver trims its state to the true state count
+``n`` and fleet size ``B`` before saving, and zero-pads after restoring),
+because padded shapes depend on the mesh that wrote them — n=500 pads to 504
+on 8 state shards but to 500 on 4, and a B=5 fleet pads to 8 on a 4-way
+fleet axis.  Writes are atomic (tmp + rename); the newest complete step
+wins; a corrupt/partial newest step is skipped (crash-during-write
+tolerance).  At real 1000-node scale the same layout would be written as
+per-host tiles + manifest; the single-process container writes one file.
+
+``restore(like=...)`` only uses ``like`` for its tree *structure* (leaf
+count / treedef) — leaf shapes come from the file, so ``jax.eval_shape``
+output works as ``like`` and restored leaves may be smaller than the
+running job's padded shapes.
 """
 
 from __future__ import annotations

@@ -1,0 +1,240 @@
+"""Fleet-sharded solve layouts (instances x states) vs the replicated path.
+
+The contract (ISSUE 2): ``solve_many`` under ``layout="fleet"`` /
+``"fleet2d"`` shards the instance dim over the mesh's leading ``fleet``
+axis and must produce per-instance results matching the replicated path —
+bit-for-bit (values AND residual traces) for the elementwise method family
+(vi / mpi: no cross-lane arithmetic anywhere), and with exact policies /
+iteration paths plus ulp-level values for the Krylov methods (XLA batches
+their inner dot products over the device-local lane count, so fp
+association differs by vmap width).  Fleet checkpoints are mesh-agnostic:
+stored unpadded, so a fleet interrupted on a 4-way fleet axis resumes on a
+2-way one.
+
+Multi-device paths run the real shard_map on 8 forced host devices in a
+subprocess (device count must be set before jax initializes).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_SCRIPT = r"""
+import os, tempfile, shutil
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, json
+from repro.core import generators, solve_many, IPIOptions
+from repro.launch.mesh import make_fleet_mesh
+
+# B=5 deliberately does NOT divide the 4-way fleet axis (exercises fleet
+# padding with zero-cost dummy instances).
+mdps = [generators.garnet(n=120, m=5, k=4, gamma=0.95, seed=s)
+        for s in range(5)]
+out = {}
+
+
+def compare(rs, base):
+    return dict(
+        dv=max(float(np.abs(a.v - b.v).max()) for a, b in zip(rs, base)),
+        dpi=sum(int((a.policy != b.policy).sum()) for a, b in zip(rs, base)),
+        outer_eq=all(a.outer_iterations == b.outer_iterations
+                     for a, b in zip(rs, base)),
+        inner_eq=all(a.inner_iterations == b.inner_iterations
+                     for a, b in zip(rs, base)),
+        trace_res_eq=all(np.array_equal(a.trace_residual, b.trace_residual,
+                                        equal_nan=True)
+                         for a, b in zip(rs, base)),
+        trace_inner_eq=all(np.array_equal(a.trace_inner, b.trace_inner)
+                           for a, b in zip(rs, base)),
+        converged=all(r.converged for r in rs),
+        n_results=len(rs))
+
+
+for method in ("vi", "ipi_gmres"):
+    opts = IPIOptions(method=method, atol=1e-8, dtype="float64",
+                      max_outer=20000)
+    base = solve_many(mdps, opts)
+    for layout, fleet in (("fleet", 4), ("fleet2d", 2)):
+        mesh = make_fleet_mesh(fleet, layout=layout)
+        rs = solve_many(mdps, opts, mesh=mesh, layout=layout)
+        out[f"{method}/{layout}"] = compare(rs, base)
+
+# mixed-gamma fleet: traced-gamma path under fleet sharding (the static
+# per-instance gamma tuple is global; each fleet shard slices its block)
+gmdps = [generators.garnet(n=100, m=5, k=4, gamma=g, seed=1)
+         for g in (0.9, 0.95, 0.98, 0.99)]
+opts = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64")
+rs = solve_many(gmdps, opts, mesh=make_fleet_mesh(4), layout="fleet")
+out["mixed_gamma"] = compare(rs, solve_many(gmdps, opts))
+
+# pad_fleet=False: incompatible B must raise an actionable ValueError
+# before any device work, not a shape error inside shard_map
+try:
+    solve_many(mdps, IPIOptions(method="vi", atol=1e-6),
+               mesh=make_fleet_mesh(4), layout="fleet", pad_fleet=False)
+    out["pad_error"] = None
+except ValueError as e:
+    out["pad_error"] = str(e)
+
+# elastic fleet restart: checkpoint on a 4-way fleet axis, resume on 2-way
+opts = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64")
+base = solve_many(mdps, opts)
+d = tempfile.mkdtemp(prefix="fleet_ck_")
+try:
+    short = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64",
+                       max_outer=2)
+    part = solve_many(mdps, short, mesh=make_fleet_mesh(4), layout="fleet",
+                      checkpoint_dir=d, chunk=1)
+    resumed = solve_many(mdps, opts, mesh=make_fleet_mesh(2),
+                         layout="fleet", checkpoint_dir=d, chunk=16)
+    out["elastic"] = compare(resumed, base)
+    out["elastic"]["interrupted"] = bool(not any(r.converged for r in part))
+finally:
+    shutil.rmtree(d, ignore_errors=True)
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def fleet_results():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("layout", ["fleet", "fleet2d"])
+def test_fleet_sharded_bit_for_bit_elementwise(fleet_results, layout):
+    """vi has no cross-lane arithmetic: fleet-sharded values and residual
+    traces must equal the replicated path exactly (non-divisible B=5
+    included — the dummy pad instances must never leak into results)."""
+    r = fleet_results[f"vi/{layout}"]
+    assert r["converged"] and r["n_results"] == 5
+    assert r["dv"] == 0.0, r
+    assert r["dpi"] == 0 and r["trace_res_eq"] and r["trace_inner_eq"], r
+    assert r["outer_eq"] and r["inner_eq"], r
+
+
+@pytest.mark.parametrize("layout", ["fleet", "fleet2d"])
+def test_fleet_sharded_krylov_parity(fleet_results, layout):
+    """ipi_gmres: identical iteration path and policies; values agree to
+    ulp-level (batched dot association differs by device-local lane
+    count)."""
+    r = fleet_results[f"ipi_gmres/{layout}"]
+    assert r["converged"]
+    assert r["dv"] < 1e-12, r
+    assert r["dpi"] == 0, r
+    assert r["outer_eq"] and r["inner_eq"] and r["trace_inner_eq"], r
+
+
+def test_fleet_sharded_mixed_gamma(fleet_results):
+    r = fleet_results["mixed_gamma"]
+    assert r["converged"]
+    assert r["dv"] < 1e-8, r
+    assert r["dpi"] == 0 and r["outer_eq"], r
+
+
+def test_pad_fleet_disabled_raises_actionable(fleet_results):
+    msg = fleet_results["pad_error"]
+    assert msg is not None, "pad_fleet=False did not raise"
+    assert "B=5" in msg and "4-way" in msg and "pad_fleet" in msg, msg
+
+
+def test_fleet_checkpoint_restores_onto_smaller_fleet_axis(fleet_results):
+    """Interrupt on fleet-axis 4, resume on fleet-axis 2: same iterate
+    path as an uninterrupted solve (mesh-agnostic fleet checkpoints)."""
+    r = fleet_results["elastic"]
+    assert r["interrupted"], "phase 1 unexpectedly converged"
+    assert r["converged"]
+    assert r["dv"] < 1e-12 and r["dpi"] == 0, r
+    assert r["outer_eq"], "resume diverged from the uninterrupted path"
+
+
+def test_elastic_restart_nondivisible_n():
+    """ROADMAP open item: n=500 pads to 504 on 8 shards but to 500 on 4;
+    mesh-agnostic checkpoints must store the unpadded n so the 8 -> 4
+    restart works for every n, not just divisible ones."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.elastic", "--n", "500"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, \
+        proc.stdout[-2000:] + "\n" + proc.stderr[-2000:]
+    assert "elastic restart preserved the solve exactly" in proc.stdout
+
+
+# --------------------------------------------------------------------------- #
+# In-process guards (no multi-device mesh needed)                             #
+# --------------------------------------------------------------------------- #
+
+def test_fleet_layout_guards():
+    from repro.core import IPIOptions, generators, solve, solve_many
+    mdp = generators.garnet(n=40, m=3, k=2, gamma=0.9, seed=0)
+    with pytest.raises(ValueError, match="solve_many"):
+        solve(mdp, IPIOptions(), layout="fleet")
+    with pytest.raises(ValueError, match="mesh"):
+        solve_many([mdp, mdp], IPIOptions(), layout="fleet")
+
+
+def test_fleet_padded_batch_validation():
+    from repro.core.partition import fleet_padded_batch
+    assert fleet_padded_batch(8, 4) == 8
+    assert fleet_padded_batch(5, 4) == 8
+    assert fleet_padded_batch(5, 4, pad=True) == 8
+    with pytest.raises(ValueError, match="pad_fleet"):
+        fleet_padded_batch(5, 4, pad=False)
+    assert fleet_padded_batch(4, 4, pad=False) == 4
+
+
+def test_pad_fleet_dim_dummy_instances_are_frozen():
+    """Dummy pad instances must carry zero cost (optimal value 0, residual
+    0 at the solver's zero start -> frozen immediately) and valid
+    probability rows."""
+    from repro.core import generators, stack_mdps
+    from repro.core.mdp import gammas_of
+    from repro.core.partition import pad_fleet_dim
+    mdps = [generators.garnet(n=30, m=3, k=2, gamma=g, seed=s)
+            for s, g in enumerate((0.9, 0.95, 0.99))]
+    st = stack_mdps(mdps)
+    padded = pad_fleet_dim(st, 4)
+    assert padded.batch == 4
+    assert gammas_of(padded) == (0.9, 0.95, 0.99, 0.99)
+    pad_val = np.asarray(padded.val)[3]
+    pad_cost = np.asarray(padded.cost)[3]
+    np.testing.assert_allclose(pad_val.sum(-1), 1.0, atol=1e-6)
+    assert (pad_cost == 0.0).all()
+    # real instances untouched
+    np.testing.assert_array_equal(np.asarray(padded.val)[:3],
+                                  np.asarray(st.val))
+    with pytest.raises(ValueError, match="unbatched|batched"):
+        pad_fleet_dim(mdps[0], 4)
+
+
+def test_mesh_axes_fleet_layouts():
+    import jax
+    from repro.core.partition import mesh_axes
+    from repro.launch.mesh import mesh_kwargs
+    mesh2 = jax.make_mesh((1, 1), ("fleet", "data"), **mesh_kwargs(2))
+    ax = mesh_axes(mesh2, "fleet")
+    assert ax.fleet == "fleet" and ax.state == ("data",) and ax.action is None
+    mesh3 = jax.make_mesh((1, 1, 1), ("fleet", "data", "model"),
+                          **mesh_kwargs(3))
+    ax = mesh_axes(mesh3, "fleet2d")
+    assert ax.fleet == "fleet" and ax.state == ("data",) \
+        and ax.action == "model"
+    with pytest.raises(ValueError, match="layout"):
+        mesh_axes(mesh2, "nope")
