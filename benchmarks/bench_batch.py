@@ -25,7 +25,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import IPIOptions, generators, solve, solve_many
+from repro.core import IPIOptions, generators
+from repro.core.driver import solve, solve_many
 
 B = 8
 

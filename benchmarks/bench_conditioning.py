@@ -8,7 +8,8 @@ import time
 
 import jax
 
-from repro.core import IPIOptions, generators, solve
+from repro.core import IPIOptions, generators
+from repro.core.driver import solve
 
 GAMMAS = [0.9, 0.99, 0.999, 0.9999]
 

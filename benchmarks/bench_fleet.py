@@ -44,7 +44,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import IPIOptions, generators, partition, solve_many
+from repro.core import IPIOptions, generators, partition
+from repro.core.driver import solve_many
 from repro.core import driver as _driver
 from repro.launch.mesh import make_fleet_mesh, make_host_mesh
 

@@ -16,7 +16,8 @@ n_dev = int(sys.argv[1])
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
 import jax
 jax.config.update("jax_enable_x64", True)
-from repro.core import generators, solve, IPIOptions
+from repro.core import IPIOptions, generators
+from repro.core.driver import solve
 mdp = generators.garnet(200_000, 8, 8, gamma=0.99, seed=1)
 opts = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64")
 mesh = None

@@ -12,7 +12,8 @@ import time
 
 import jax
 
-from repro.core import IPIOptions, generators, solve
+from repro.core import IPIOptions, generators
+from repro.core.driver import solve
 
 METHODS = ["vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab"]
 

@@ -16,6 +16,8 @@ Tables:
   fleet         — fleet-sharded layout: per-device memory ~B/fleet_size of
                   the replicated layout + weak scaling (needs multi-device,
                   e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
+  api           — session-layer dispatch overhead (<5% warm) +
+                  from_functions million-state construction
   lm_substrate  — per-arch smoke train-step timing
 (roofline terms live in benchmarks/roofline.py -> results/roofline.json)
 """
@@ -29,15 +31,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: solvers,conditioning,kernels,scaling,"
-                         "batch,fleet,lm_substrate")
+                         "batch,fleet,api,lm_substrate")
     ap.add_argument("--json-out", default=None,
                     help="path for the machine-readable results "
                          "(default: benchmarks/results/BENCH_batch.json)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_conditioning, bench_fleet,
-                            bench_kernels, bench_lm_substrate, bench_scaling,
-                            bench_solvers)
+    from benchmarks import (bench_api, bench_batch, bench_conditioning,
+                            bench_fleet, bench_kernels, bench_lm_substrate,
+                            bench_scaling, bench_solvers)
     suites = {
         "solvers": bench_solvers.run,
         "conditioning": bench_conditioning.run,
@@ -45,6 +47,7 @@ def main() -> None:
         "scaling": bench_scaling.run,
         "batch": bench_batch.run,
         "fleet": bench_fleet.run,
+        "api": bench_api.run,
         "lm_substrate": bench_lm_substrate.run,
     }
     pick = args.only.split(",") if args.only else list(suites)
@@ -75,6 +78,12 @@ def main() -> None:
             merged = {}
     for name, us, derived in rows:
         merged[name] = {"name": name, "us_per_call": us, "derived": derived}
+    # a suite that ran clean this time retires its stale failure marker
+    failed = {name for name, _, _ in rows if name.endswith("/SUITE_FAILED")}
+    for suite in pick:
+        marker = f"{suite}/SUITE_FAILED"
+        if marker not in failed:
+            merged.pop(marker, None)
     with open(out, "w") as f:
         json.dump(list(merged.values()), f, indent=2)
     print(f"\n[run] wrote {len(rows)} rows ({len(merged)} total) -> {out}")

@@ -7,7 +7,8 @@ Krylov-accelerated inexact policy iteration decouples from the
 import jax
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import IPIOptions, generators, solve
+from repro.core import IPIOptions, generators
+from repro.core.driver import solve
 
 print(f"{'gamma':>8} | {'VI iters':>9} | {'iPI outer':>9} | {'iPI inner':>9}")
 print("-" * 46)

@@ -1,27 +1,49 @@
-"""Quickstart: build an MDP, solve it with two methods, inspect the policy.
+"""Quickstart on the user API: builders, options database, session layer.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Works on one device or many — the session auto-builds the mesh from the
+visible devices (try XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
-import jax
-jax.config.update("jax_enable_x64", True)
+import json
 
 import numpy as np
-from repro.core import IPIOptions, generators, solve
+
+from repro.api import MDP, madupite_session
 
 # A 10,000-state random MDP (GARNET family), discount 0.99.
-mdp = generators.garnet(n=10_000, m=16, k=8, gamma=0.99, seed=0)
+mdp = MDP.from_generator("garnet", n=10_000, m=16, k=8, gamma=0.99, seed=0)
 
-# Value iteration (the mdpsolver/pymdptoolbox baseline)...
-r_vi = solve(mdp, IPIOptions(method="vi", atol=1e-8, dtype="float64",
-                             max_outer=10_000))
-print("VI        :", r_vi.summary())
+# One options database drives the solver, the placement and the outputs.
+with madupite_session({"-atol": 1e-8, "-dtype": "float64",
+                       "-file_stats": "/tmp/quickstart_stats.json"}) as s:
+    # Value iteration (the mdpsolver/pymdptoolbox baseline)...
+    r_vi = s.solve(mdp, method="vi", max_outer=10_000)
+    print("VI        :", r_vi.summary())
 
-# ...vs inexact policy iteration with a GMRES inner solver (madupite).
-r_ipi = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-8,
-                              dtype="float64"))
-print("iPI-GMRES :", r_ipi.summary())
+    # ...vs inexact policy iteration with a GMRES inner solver (madupite).
+    r_ipi = s.solve(mdp, method="ipi_gmres")
+    print("iPI-GMRES :", r_ipi.summary())
+
+    stats = s.stats
 
 assert np.abs(r_vi.v - r_ipi.v).max() < 1e-5
 print(f"\nSame certified solution; iPI used {r_ipi.outer_iterations} outer "
       f"iterations vs VI's {r_vi.outer_iterations}.")
 print("optimal value of state 0:", r_ipi.v[0], "| action:", r_ipi.policy[0])
+
+# The run statistics were also written as JSON (-file_stats).
+entries = json.load(open("/tmp/quickstart_stats.json"))
+assert [e["method"] for e in entries] == ["vi", "ipi_gmres"]
+assert all(e["solves"][0]["converged"] for e in entries)
+print(f"\nstats JSON: {len(entries)} solves recorded, layout="
+      f"{entries[0]['layout']} mesh={entries[0]['mesh']}")
+
+# maxreward mode: read cost as reward, solve max_a (r + gamma P v).  It is
+# exactly the negation of the mincost solve on negated costs.
+reward = MDP.from_generator("garnet", n=2_000, m=8, k=6, gamma=0.99, seed=1,
+                            mode="maxreward")
+with madupite_session({"-atol": 1e-8, "-dtype": "float64"}) as s:
+    r_max = s.solve(reward, method="vi", max_outer=10_000)
+print("\nmaxreward :", r_max.summary())
+print("best reward-to-go of state 0:", r_max.v[0])

@@ -13,7 +13,8 @@ jax.config.update("jax_enable_x64", True)
 
 import shutil, tempfile
 import numpy as np
-from repro.core import IPIOptions, generators, solve
+from repro.core import IPIOptions, generators
+from repro.core.driver import solve
 
 mdp = generators.maze2d(size=250, gamma=0.999, slip=0.15)
 mesh = jax.make_mesh((4, 2), ("data", "model"),

@@ -1,0 +1,64 @@
+"""repro.api — the supported user surface (madupite-style).
+
+Three pillars over the solver core (:mod:`repro.core`):
+
+* :class:`MDP` — build problems from arrays, files, generators, or Python
+  callables (``MDP.from_functions`` materializes shard-locally on device),
+  tagged ``mode="mincost"`` or ``"maxreward"``;
+* :class:`Options` — the PETSc-style options database: validated string
+  options (``-method``, ``-atol``, ``-layout``, ``-file_stats``, ...)
+  ingested from code, ``MADUPITE_OPTIONS`` and ``--option k=v``, mapping
+  losslessly onto :class:`repro.core.ipi.IPIOptions`;
+* :class:`Session` / :func:`madupite_session` — owns mesh/layout placement,
+  fleet bucketing, the run-chunk cache lifecycle and run outputs (JSON
+  stats, policy/value files).
+
+    from repro.api import MDP, madupite_session
+
+    mdp = MDP.from_generator("garnet", n=10_000, m=16, k=8, gamma=0.99)
+    with madupite_session({"-method": "ipi_gmres", "-atol": 1e-8,
+                           "-file_stats": "run.json"}) as s:
+        result = s.solve(mdp)
+
+Module-level :func:`solve` / :func:`solve_fleet` are one-shot conveniences
+over a shared default session.
+"""
+
+from __future__ import annotations
+
+from repro.api.fleet import bucket_indices
+from repro.api.mdp import MDP
+from repro.api.options import (OPTION_SPECS, Options, OptionTypeError,
+                               UnknownOptionError, option_table)
+from repro.api.session import Session, madupite_session
+
+__all__ = ["MDP", "Options", "OptionTypeError", "OPTION_SPECS", "Session",
+           "UnknownOptionError", "bucket_indices", "madupite_session",
+           "option_table", "solve", "solve_fleet"]
+
+_default_session: Session | None = None
+
+
+def _default() -> Session:
+    global _default_session
+    if _default_session is None or _default_session._closed:
+        _default_session = Session()
+    return _default_session
+
+
+def solve(mdp, options=None, **overrides):
+    """One-shot :meth:`Session.solve` on a shared default session."""
+    if options is not None:
+        # a throwaway session must not clear the process-wide run cache on
+        # exit — that would evict the default session's warm programs
+        with Session(options, clear_cache_on_close=False) as s:
+            return s.solve(mdp, **overrides)
+    return _default().solve(mdp, **overrides)
+
+
+def solve_fleet(mdps, options=None, **overrides):
+    """One-shot :meth:`Session.solve_fleet` on a shared default session."""
+    if options is not None:
+        with Session(options, clear_cache_on_close=False) as s:
+            return s.solve_fleet(mdps, **overrides)
+    return _default().solve_fleet(mdps, **overrides)

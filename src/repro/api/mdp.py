@@ -1,0 +1,333 @@
+"""The user-facing MDP builder — madupite's ``MDP`` object.
+
+madupite builds MDPs from arrays, from files, or from *Python callables*
+(``setTransitionProbabilitiesFunc`` / ``setStageCostFunc``), and tags them
+min-cost or max-reward.  This builder mirrors that surface over the core
+containers (:class:`repro.core.mdp.EllMDP` / ``DenseMDP``):
+
+* :meth:`MDP.from_arrays` — explicit ELL (``idx``/``val``/``cost``) or dense
+  (``p``/``cost``) tensors;
+* :meth:`MDP.from_file` — the block-manifest format of
+  :mod:`repro.core.io` (each worker can load only its rows);
+* :meth:`MDP.from_generator` — the built-in instance families
+  (:data:`repro.core.generators.REGISTRY`);
+* :meth:`MDP.from_functions` — the MDP is *defined by callables*
+  ``P_fn(s, a) -> (successor ids, probabilities)`` and ``g_fn(s, a) ->
+  stage cost`` and never materialized host-side as one tensor: the session
+  layer materializes each device's ELL block **shard-locally on device**
+  (``jax.make_array_from_callback``), so million-state MDPs fit in
+  aggregate device memory even when no single host buffer could hold them.
+
+``mode="mincost"`` (default) solves ``min_a``; ``mode="maxreward"`` reads
+``cost`` as a reward and solves ``max_a`` — threaded through the solver as
+:class:`repro.core.ipi.IPIOptions` ``.mode``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core import io as core_io
+from repro.core import partition
+from repro.core.generators import REGISTRY as GENERATORS
+from repro.core.ipi import MODES
+from repro.core.mdp import DenseMDP, EllMDP
+from repro.core.mdp import MDP as CoreMDP
+
+__all__ = ["MDP"]
+
+_BIG = 1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class _FunctionSpec:
+    """Deferred MDP definition: callables + shape, materialized per mesh."""
+
+    p_fn: Callable
+    g_fn: Callable
+    n: int
+    m: int
+    nnz: int
+    gamma: float
+    vectorized: bool
+
+
+class MDP:
+    """A built (or deferred) MDP plus its solve semantics (``mode``).
+
+    Hand it to :meth:`repro.api.Session.solve`; or call :meth:`build` for
+    the raw core container.
+    """
+
+    def __init__(self, core: CoreMDP | None, *, mode: str = "mincost",
+                 spec: _FunctionSpec | None = None):
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; pick one of {MODES}")
+        if (core is None) == (spec is None):
+            raise ValueError("MDP wants exactly one of a core container or "
+                             "a function spec; use the from_* constructors")
+        self._core = core
+        self._spec = spec
+        self.mode = mode
+        self._device_cache: dict = {}
+
+    # ---- constructors ------------------------------------------------------
+    @classmethod
+    def from_arrays(cls, *, idx=None, val=None, cost=None, p=None,
+                    gamma: float = 0.99, mode: str = "mincost",
+                    validate: bool = True) -> "MDP":
+        """ELL (``idx`` + ``val`` + ``cost``) or dense (``p`` + ``cost``)."""
+        import jax.numpy as jnp
+        if cost is None:
+            raise ValueError("from_arrays requires cost (the stage "
+                             "cost/reward table g(s, a))")
+        cost = jnp.asarray(cost, jnp.float32)
+        if p is not None:
+            if idx is not None or val is not None:
+                raise ValueError("pass either dense p or ELL idx/val, "
+                                 "not both")
+            p = jnp.asarray(p, jnp.float32)
+            core = DenseMDP(p=p, cost=cost, gamma=float(gamma),
+                            n_global=p.shape[0], m_global=p.shape[1])
+        elif idx is None or val is None:
+            raise ValueError("from_arrays requires idx+val (ELL) or p "
+                             "(dense)")
+        else:
+            idx = jnp.asarray(idx, jnp.int32)
+            val = jnp.asarray(val, jnp.float32)
+            core = EllMDP(idx=idx, val=val, cost=cost, gamma=float(gamma),
+                          n_global=idx.shape[0], m_global=idx.shape[1])
+        if validate:
+            core.validate()
+        return cls(core, mode=mode)
+
+    @classmethod
+    def from_file(cls, path: str, *, mode: str | None = None,
+                  rows: tuple[int, int] | None = None) -> "MDP":
+        """Load the block-manifest format of :mod:`repro.core.io`.  The
+        manifest's stored ``mode`` (if any) is used unless overridden."""
+        if mode is None:
+            mode = core_io.load_manifest(path).get("mode") or "mincost"
+        return cls(core_io.load_mdp(path, rows=rows), mode=mode)
+
+    @classmethod
+    def from_generator(cls, name: str, *, mode: str = "mincost",
+                       **kw) -> "MDP":
+        """One of the built-in instance families
+        (``garnet``/``maze2d``/``sis``/``chain_walk``)."""
+        if name not in GENERATORS:
+            raise ValueError(f"unknown generator {name!r}; pick one of "
+                             f"{sorted(GENERATORS)}")
+        return cls(GENERATORS[name](**kw), mode=mode)
+
+    @classmethod
+    def from_functions(cls, P_fn: Callable, g_fn: Callable, n: int, m: int,
+                       *, nnz: int, gamma: float = 0.99,
+                       mode: str = "mincost",
+                       vectorized: bool = False) -> "MDP":
+        """Define the MDP by callables; materialize lazily, shard-locally.
+
+        ``P_fn(s, a) -> (ids, probs)`` gives state ``s``'s successors under
+        action ``a`` (at most ``nnz`` of them, probabilities summing to 1);
+        ``g_fn(s, a) -> float`` the stage cost (or reward, for
+        ``mode="maxreward"``).  With ``vectorized=True`` the callables take
+        a whole *array* of states at once — ``P_fn(rows, a) -> (ids
+        (len(rows), nnz), probs (len(rows), nnz))``, ``g_fn(rows, a) ->
+        (len(rows),)`` — which is strongly recommended beyond ~10^5 states.
+
+        Nothing is evaluated here.  At solve time the session materializes
+        exactly the row block each device owns (padding included) directly
+        into that device's shard, so no host-side ``(n, m, nnz)`` tensor is
+        ever built.
+        """
+        if n < 1 or m < 1 or nnz < 1:
+            raise ValueError(f"from_functions needs n, m, nnz >= 1, got "
+                             f"n={n} m={m} nnz={nnz}")
+        if not 0.0 < gamma < 1.0:
+            raise ValueError(f"gamma must lie in (0, 1), got {gamma}")
+        return cls(None, mode=mode,
+                   spec=_FunctionSpec(P_fn, g_fn, int(n), int(m), int(nnz),
+                                      float(gamma), bool(vectorized)))
+
+    # ---- introspection -----------------------------------------------------
+    @property
+    def n(self) -> int:
+        """True (unpadded) global state count."""
+        return self._spec.n if self._spec else self._core.n_global
+
+    @property
+    def m(self) -> int:
+        return self._spec.m if self._spec else self._core.m_global
+
+    @property
+    def gamma(self) -> float:
+        return self._spec.gamma if self._spec else self._core.gamma
+
+    @property
+    def deferred(self) -> bool:
+        """True for a function-backed MDP not yet materialized."""
+        return self._spec is not None
+
+    def __repr__(self) -> str:
+        kind = "functions" if self.deferred else type(self._core).__name__
+        return (f"MDP({kind}, n={self.n}, m={self.m}, "
+                f"gamma={self.gamma}, mode={self.mode!r})")
+
+    # ---- materialization ---------------------------------------------------
+    def build(self) -> CoreMDP:
+        """The core container, materialized host-side if function-backed."""
+        if self._core is not None:
+            return self._core
+        if None not in self._device_cache:
+            s = self._spec
+            idx, val, cost = self._block(np.arange(s.n), np.arange(s.m),
+                                         n_pad_to=s.n, m_pad_to=s.m)
+            import jax.numpy as jnp
+            self._device_cache[None] = EllMDP(
+                idx=jnp.asarray(idx), val=jnp.asarray(val),
+                cost=jnp.asarray(cost), gamma=s.gamma, n_global=s.n,
+                m_global=s.m)
+        return self._device_cache[None]
+
+    def place(self, mesh, layout: str = "1d", *,
+              mode: str | None = None) -> CoreMDP:
+        """The core container placed on ``mesh`` under ``layout``.
+
+        Array-backed MDPs are returned as-is (the driver pads + places
+        them).  Function-backed MDPs are materialized **shard-locally**:
+        each addressable device's padded ELL block is computed from the
+        callables and written straight into that device's shard via
+        ``jax.make_array_from_callback``, then the driver's placement
+        detects the arrays as already placed
+        (:func:`repro.core.partition.already_placed`) and passes them
+        through.
+
+        ``mode`` is the mode the *solve* will run under (defaults to this
+        builder's) — padded action columns carry a sign-dependent
+        never-greedy cost, so the padding must match the solve, not the
+        builder, when a per-call override flips it.
+        """
+        if self._core is not None:
+            return self._core
+        if mesh is None:
+            return self.build()
+        key = (mesh, layout, mode or self.mode)
+        if key not in self._device_cache:
+            self._device_cache[key] = self._place_sharded(mesh, layout,
+                                                          mode or self.mode)
+        return self._device_cache[key]
+
+    def _place_sharded(self, mesh, layout: str, mode: str) -> EllMDP:
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axes = partition.mesh_axes(mesh, layout)
+        if axes.fleet is not None:
+            raise ValueError(f"layout {layout!r} shards the fleet dim; a "
+                             "single function-backed MDP places under "
+                             "'1d'/'2d'")
+        s = self._spec
+        n_to = -(-s.n // partition._axis_size(mesh, axes.state)) \
+            * partition._axis_size(mesh, axes.state)
+        m_to = -(-s.m // partition._axis_size(mesh, axes.action)) \
+            * partition._axis_size(mesh, axes.action)
+        blocks: dict = {}
+
+        def block(index) -> tuple:
+            rs, as_ = index[0], index[1]
+            lo, hi, _ = rs.indices(n_to)
+            alo, ahi, _ = as_.indices(m_to)
+            bkey = (lo, hi, alo, ahi)
+            if bkey not in blocks:
+                blocks[bkey] = self._block(
+                    np.arange(lo, hi), np.arange(alo, ahi),
+                    n_pad_to=n_to, m_pad_to=m_to, mode=mode)
+            return blocks[bkey]
+
+        sh3 = NamedSharding(mesh, P(axes.state, axes.action, None))
+        sh2 = NamedSharding(mesh, P(axes.state, axes.action))
+        idx = jax.make_array_from_callback(
+            (n_to, m_to, s.nnz), sh3, lambda i: block(i)[0])
+        val = jax.make_array_from_callback(
+            (n_to, m_to, s.nnz), sh3, lambda i: block(i)[1])
+        cost = jax.make_array_from_callback(
+            (n_to, m_to), sh2, lambda i: block(i)[2])
+        blocks.clear()
+        return EllMDP(idx=idx, val=val, cost=cost, gamma=s.gamma,
+                      n_global=n_to, m_global=m_to)
+
+    def _block(self, rows: np.ndarray, acts: np.ndarray, *,
+               n_pad_to: int, m_pad_to: int,
+               mode: str | None = None) -> tuple:
+        """One ELL block for global ``rows`` x ``acts`` (padding included).
+
+        Padding mirrors :func:`repro.core.partition.pad_mdp` exactly:
+        padded states are zero-cost absorbing self-loops; padded actions
+        are never-greedy under the solve ``mode`` (cost ``+BIG`` for
+        mincost, ``-BIG`` for maxreward).
+        """
+        s = self._spec
+        big = _BIG if (mode or self.mode) == "mincost" else -_BIG
+        nr, na, K = len(rows), len(acts), s.nnz
+        idx = np.zeros((nr, na, K), np.int32)
+        val = np.zeros((nr, na, K), np.float32)
+        cost = np.zeros((nr, na), np.float32)
+        # pad defaults: absorbing self-loop on slot 0 (padded rows), and
+        # never-greedy cost on padded action columns
+        idx[..., 0] = rows[:, None].astype(np.int32)
+        val[..., 0] = 1.0
+        pad_a = acts >= s.m
+        cost[:, pad_a] = big
+        idx[:, pad_a, 0] = 0          # padded actions point at state 0
+        real_r = rows < s.n
+        if not real_r.any():
+            return idx, val, cost
+        rr = rows[real_r]
+        for j, a in enumerate(acts):
+            if a >= s.m:
+                continue
+            if s.vectorized:
+                ids, probs = s.p_fn(rr, int(a))
+                ids = np.asarray(ids)
+                probs = np.asarray(probs)
+                if ids.shape != (len(rr), K) or probs.shape != ids.shape:
+                    raise ValueError(
+                        f"vectorized P_fn must return (ids, probs) of "
+                        f"shape ({len(rr)}, {K}), got {ids.shape} / "
+                        f"{probs.shape}")
+                idx[real_r, j, :] = ids
+                val[real_r, j, :] = probs
+                cost[real_r, j] = np.asarray(s.g_fn(rr, int(a)))
+            else:
+                for i, r in zip(np.nonzero(real_r)[0], rr):
+                    ids, probs = s.p_fn(int(r), int(a))
+                    ids = np.atleast_1d(np.asarray(ids))
+                    probs = np.atleast_1d(np.asarray(probs))
+                    if len(ids) > K:
+                        raise ValueError(
+                            f"P_fn({r}, {a}) returned {len(ids)} "
+                            f"successors > nnz={K}")
+                    row_i = np.zeros(K, np.int32)
+                    row_v = np.zeros(K, np.float32)
+                    row_i[:len(ids)] = ids
+                    row_v[:len(probs)] = probs
+                    idx[i, j, :] = row_i
+                    val[i, j, :] = row_v
+                    cost[i, j] = float(s.g_fn(int(r), int(a)))
+        # validate only the real (row, action) entries: padding self-loops
+        # legitimately point at padded state ids >= s.n
+        real = idx[real_r][:, acts < s.m]
+        if real.size and ((real < 0).any() or (real >= s.n).any()):
+            raise ValueError("P_fn produced successor ids outside "
+                             f"[0, {s.n})")
+        return idx, val, cost
+
+    # ---- persistence -------------------------------------------------------
+    def save(self, path: str, n_blocks: int = 1) -> None:
+        """Write the block-manifest format (materializes if deferred)."""
+        core = self.build()
+        if not isinstance(core, EllMDP):
+            raise ValueError("save() supports the ELL representation only")
+        core_io.save_mdp(path, core, n_blocks=n_blocks, mode=self.mode)

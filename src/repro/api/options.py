@@ -1,0 +1,409 @@
+"""PETSc-style options database — the madupite configuration surface.
+
+madupite configures everything through a flat string-keyed options database
+(``setOption("-ksp_type", "gmres")``), seeded from the command line and the
+environment, and hands PETSc one consistent view of solver + placement +
+output settings.  This module is that database for the JAX reproduction:
+
+* a **typed registry** (:data:`OPTION_SPECS`) of every supported key with
+  type, default, choices and documentation — unknown keys and badly-typed
+  values raise errors that *name the offending key* (and suggest near
+  misses);
+* **ingestion** from the environment (``MADUPITE_OPTIONS="-method vi
+  -atol 1e-6"``) and the CLI (repeated ``--option key=value``), with a
+  fixed precedence: explicit :meth:`Options.set` > CLI > environment >
+  registry default;
+* a **lossless mapping** to/from the solver-core
+  :class:`repro.core.ipi.IPIOptions` (:meth:`Options.to_ipi` /
+  :meth:`Options.from_ipi`), so one options dict drives the solver, the
+  session's mesh/layout placement and the output files.
+
+    >>> opts = Options({"-method": "vi", "-atol": 1e-6})
+    >>> opts.set("-file_stats", "run.json")
+    >>> opts.to_ipi()
+    IPIOptions(method='vi', ... atol=1e-06, ...)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import os
+import shlex
+from typing import Any, Callable, Iterator, Mapping
+
+from repro.core.ipi import IPIOptions, METHODS, MODES
+
+__all__ = ["OptionSpec", "OPTION_SPECS", "Options", "UnknownOptionError",
+           "OptionTypeError", "option_table"]
+
+ENV_VAR = "MADUPITE_OPTIONS"
+
+# precedence levels (higher wins); `set()` without a source is "user"
+_SOURCES = {"default": 0, "env": 1, "cli": 2, "user": 3}
+
+_LAYOUT_CHOICES = ("auto", "single", "1d", "2d", "fleet", "fleet2d")
+
+# -ksp_type: madupite's inner-linear-solver selector.  It is sugar over
+# -method: when -method is not explicitly set, the ksp choice picks the
+# matching iPI variant.
+_KSP_TO_METHOD = {"gmres": "ipi_gmres", "richardson": "ipi_richardson",
+                  "bicgstab": "ipi_bicgstab", "none": "vi"}
+
+
+class UnknownOptionError(KeyError):
+    """Raised for a key absent from the registry; names the key and the
+    closest registered spellings."""
+
+
+class OptionTypeError(ValueError):
+    """Raised when a value cannot be coerced to the key's declared type (or
+    violates its choices/validator); names the key."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OptionSpec:
+    """One registered option: its type, default and constraints."""
+
+    name: str                    # "-atol"
+    type: type                   # float / int / bool / str
+    default: Any
+    doc: str
+    choices: tuple | None = None
+    nullable: bool = False       # None is a legal value ("unset")
+    validate: Callable[[Any], str | None] | None = None  # -> error or None
+
+    def coerce(self, value: Any) -> Any:
+        """Coerce (possibly a string from env/CLI) to the declared type."""
+        if value is None:
+            if self.nullable:
+                return None
+            raise OptionTypeError(
+                f"option {self.name!r} does not accept None "
+                f"(expected {self.type.__name__})")
+        if self.nullable and isinstance(value, str) \
+                and value.lower() in ("none", "") \
+                and not (self.choices and value.lower() in self.choices):
+            return None
+        try:
+            if self.type is bool:
+                out = _coerce_bool(self.name, value)
+            elif isinstance(value, str) and self.type is not str:
+                out = self.type(value)
+            elif self.type is float and isinstance(value, int) \
+                    and not isinstance(value, bool):
+                out = float(value)
+            elif not isinstance(value, self.type) \
+                    or isinstance(value, bool) is not (self.type is bool):
+                raise TypeError(
+                    f"got {type(value).__name__} {value!r}")
+            else:
+                out = value
+        except OptionTypeError:
+            raise
+        except (TypeError, ValueError) as e:
+            raise OptionTypeError(
+                f"option {self.name!r} expects {self.type.__name__}, "
+                f"{e}") from None
+        if self.choices is not None and out not in self.choices:
+            raise OptionTypeError(
+                f"option {self.name!r} must be one of {self.choices}, "
+                f"got {out!r}")
+        if self.validate is not None:
+            err = self.validate(out)
+            if err:
+                raise OptionTypeError(f"option {self.name!r}: {err}")
+        return out
+
+
+def _coerce_bool(name: str, value: Any) -> bool:
+    if isinstance(value, bool):
+        return value
+    if isinstance(value, int) and value in (0, 1):
+        return bool(value)
+    if isinstance(value, str):
+        low = value.lower()
+        if low in ("1", "true", "yes", "on"):
+            return True
+        if low in ("0", "false", "no", "off"):
+            return False
+    raise OptionTypeError(f"option {name!r} expects a bool "
+                          f"(true/false/1/0), got {value!r}")
+
+
+def _positive(what: str):
+    return lambda v: None if v > 0 else f"must be > 0, got {v}"
+
+
+def _non_negative(what: str):
+    return lambda v: None if v >= 0 else f"must be >= 0, got {v}"
+
+
+_SPECS = [
+    # ---- solver (maps losslessly onto IPIOptions) --------------------------
+    OptionSpec("-method", str, "ipi_gmres",
+               "outer/inner method", choices=METHODS),
+    OptionSpec("-mode", str, "mincost",
+               "argmin (mincost) vs argmax (maxreward) Bellman backup",
+               choices=MODES),
+    OptionSpec("-ksp_type", str, None,
+               "inner linear solver (PETSc-style sugar: picks -method "
+               "ipi_<ksp> unless -method is set explicitly)",
+               choices=tuple(_KSP_TO_METHOD), nullable=True),
+    OptionSpec("-atol", float, 1e-8,
+               "stop when ||T v - v||_inf <= atol",
+               validate=_positive("atol")),
+    OptionSpec("-max_outer", int, 500, "outer-iteration cap",
+               validate=_positive("max_outer")),
+    OptionSpec("-max_inner", int, 500, "inner-iteration cap per outer step",
+               validate=_non_negative("max_inner")),
+    OptionSpec("-inner_forcing", float, 0.05,
+               "forcing factor eta: inner tol = eta * ||T v - v||_inf",
+               validate=lambda v: None if 0.0 < v < 1.0
+               else f"must lie in (0, 1), got {v}"),
+    OptionSpec("-restart", int, 32, "GMRES restart length",
+               validate=_positive("restart")),
+    OptionSpec("-omega", float, 1.0, "Richardson damping factor"),
+    OptionSpec("-mpi_sweeps", int, 50, "Richardson sweeps for method=mpi",
+               validate=_positive("mpi_sweeps")),
+    OptionSpec("-safeguard", bool, True,
+               "monotone (VI-fallback) safeguard for Krylov steps"),
+    OptionSpec("-impl", str, None, "kernel implementation override",
+               choices=("xla", "pallas", "pallas_interpret"), nullable=True),
+    OptionSpec("-dtype", str, "float32", "value-vector dtype",
+               choices=("float32", "float64")),
+    OptionSpec("-halo", int, 0,
+               "banded layout: exchange only +-halo boundary entries",
+               validate=_non_negative("halo")),
+    OptionSpec("-gather_dtype", str, None,
+               "compressed (inexact) gather wire dtype for inner matvecs",
+               nullable=True),
+    # ---- placement (owned by the session layer) ----------------------------
+    OptionSpec("-layout", str, "auto",
+               "mesh layout; 'auto' picks from problem shape and fleet "
+               "size, 'single' forces single-device",
+               choices=_LAYOUT_CHOICES),
+    OptionSpec("-fleet", int, None,
+               "fleet-axis size for the fleet layouts (default: largest "
+               "device-count divisor <= B)", nullable=True,
+               validate=_positive("fleet")),
+    OptionSpec("-chunk", int, 64,
+               "outer iterations per device chunk (checkpoint cadence)",
+               validate=_positive("chunk")),
+    OptionSpec("-pad_fleet", bool, True,
+               "pad B up to the fleet-axis size with dummy instances"),
+    OptionSpec("-fleet_bucketing", str, "auto",
+               "group ragged fleets by state count into pad-efficient "
+               "buckets (one compiled program per bucket)",
+               choices=("auto", "off")),
+    OptionSpec("-checkpoint_dir", str, None,
+               "persist solver state between chunks", nullable=True),
+    OptionSpec("-verbose", bool, False, "per-chunk progress lines"),
+    # ---- output ------------------------------------------------------------
+    OptionSpec("-file_stats", str, None,
+               "write JSON run statistics here after each solve",
+               nullable=True),
+    OptionSpec("-file_policy", str, None,
+               "write the optimal policy (.npy/.npz) here", nullable=True),
+    OptionSpec("-file_cost", str, None,
+               "write the optimal value vector (.npy/.npz) here",
+               nullable=True),
+]
+
+OPTION_SPECS: dict[str, OptionSpec] = {s.name: s for s in _SPECS}
+
+# the IPIOptions field each solver option maps onto (lossless, 1:1)
+_IPI_FIELDS = {
+    "-method": "method", "-mode": "mode", "-atol": "atol",
+    "-max_outer": "max_outer", "-max_inner": "max_inner",
+    "-inner_forcing": "forcing_eta", "-restart": "restart",
+    "-omega": "omega", "-mpi_sweeps": "mpi_sweeps",
+    "-safeguard": "safeguard", "-impl": "impl", "-dtype": "dtype",
+    "-halo": "halo", "-gather_dtype": "gather_dtype",
+}
+
+
+def _normalize(key: Any) -> str:
+    if not isinstance(key, str) or not key:
+        raise UnknownOptionError(f"option keys are strings like '-atol', "
+                                 f"got {key!r}")
+    name = key if key.startswith("-") else "-" + key
+    if name not in OPTION_SPECS:
+        close = difflib.get_close_matches(name, OPTION_SPECS, n=3)
+        hint = f"; did you mean {' / '.join(close)}?" if close else ""
+        raise UnknownOptionError(
+            f"unknown option {key!r}{hint} (see repro.api.option_table() "
+            f"for the full registry)")
+    return name
+
+
+class Options:
+    """The options database: a validated, precedence-aware flat key store.
+
+    Construct empty, from a mapping, from the environment and/or CLI
+    (:meth:`from_sources`), or from an :class:`IPIOptions`
+    (:meth:`from_ipi`).  Keys may be given with or without the leading
+    dash.  Reads return the registry default for unset keys.
+    """
+
+    def __init__(self, values: Mapping[str, Any] | None = None):
+        # name -> (coerced value, source priority)
+        self._values: dict[str, tuple[Any, int]] = {}
+        for k, v in (values or {}).items():
+            self.set(k, v)
+
+    # ---- core accessors ----------------------------------------------------
+    def set(self, key: str, value: Any, *, source: str = "user") -> "Options":
+        """Set (and validate) one option.  A lower-precedence ``source``
+        never overrides a higher-precedence value already present."""
+        name = _normalize(key)
+        prio = _SOURCES[source]
+        coerced = OPTION_SPECS[name].coerce(value)
+        if name in self._values and self._values[name][1] > prio:
+            return self
+        self._values[name] = (coerced, prio)
+        return self
+
+    def get(self, key: str) -> Any:
+        name = _normalize(key)
+        if name in self._values:
+            return self._values[name][0]
+        return OPTION_SPECS[name].default
+
+    def is_set(self, key: str) -> bool:
+        """True when the key was explicitly provided (any source)."""
+        return _normalize(key) in self._values
+
+    def unset(self, key: str) -> None:
+        self._values.pop(_normalize(key), None)
+
+    __getitem__ = get
+
+    def __setitem__(self, key: str, value: Any) -> None:
+        self.set(key, value)
+
+    def __contains__(self, key: str) -> bool:
+        try:
+            return self.is_set(key)
+        except UnknownOptionError:
+            return False
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(OPTION_SPECS)
+
+    def __repr__(self) -> str:
+        kv = ", ".join(f"{k}={v[0]!r}"
+                       for k, v in sorted(self._values.items()))
+        return f"Options({kv})"
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Options):
+            return NotImplemented
+        return self.as_dict() == other.as_dict()
+
+    def copy(self) -> "Options":
+        out = Options()
+        out._values = dict(self._values)
+        return out
+
+    def as_dict(self, *, explicit_only: bool = False) -> dict[str, Any]:
+        """Flat ``{name: value}`` view (all keys, or only explicitly-set)."""
+        if explicit_only:
+            return {k: v for k, (v, _) in sorted(self._values.items())}
+        return {name: self.get(name) for name in OPTION_SPECS}
+
+    # ---- ingestion ---------------------------------------------------------
+    def ingest_env(self, env: Mapping[str, str] | None = None) -> "Options":
+        """Parse ``MADUPITE_OPTIONS`` (shell-style ``-key value`` pairs, or
+        ``-key=value`` tokens) at "env" precedence."""
+        raw = (env if env is not None else os.environ).get(ENV_VAR, "")
+        for key, value in _parse_pairs(shlex.split(raw), where=ENV_VAR):
+            self.set(key, value, source="env")
+        return self
+
+    def ingest_cli(self, pairs) -> "Options":
+        """Ingest ``--option key=value`` arguments (an iterable of
+        ``"key=value"`` strings) at "cli" precedence."""
+        for item in pairs or ():
+            if "=" not in item:
+                raise OptionTypeError(
+                    f"--option expects key=value, got {item!r}")
+            key, value = item.split("=", 1)
+            self.set(key.strip(), value.strip(), source="cli")
+        return self
+
+    @classmethod
+    def from_sources(cls, values: Mapping[str, Any] | None = None, *,
+                     cli=None, env: Mapping[str, str] | None = None) -> \
+            "Options":
+        """Build a database from every source at once.  Precedence (low to
+        high): registry defaults, environment, CLI, explicit ``values``."""
+        out = cls()
+        out.ingest_env(env)
+        out.ingest_cli(cli)
+        for k, v in (values or {}).items():
+            out.set(k, v)
+        return out
+
+    # ---- IPIOptions mapping ------------------------------------------------
+    def to_ipi(self) -> IPIOptions:
+        """The solver-core view of this database (lossless for the solver
+        keys).  ``-ksp_type`` picks the method when ``-method`` is unset."""
+        kw = {field: self.get(name) for name, field in _IPI_FIELDS.items()}
+        ksp = self.get("-ksp_type")
+        if ksp is not None and not self.is_set("-method"):
+            kw["method"] = _KSP_TO_METHOD[ksp]
+        try:
+            return IPIOptions(**kw)
+        except ValueError as e:
+            # IPIOptions cross-validates (e.g. gather_dtype vs dtype);
+            # re-raise naming the options-database keys
+            raise OptionTypeError(str(e)) from None
+
+    @classmethod
+    def from_ipi(cls, ipi: IPIOptions) -> "Options":
+        """Database holding exactly ``ipi``'s settings (round-trips:
+        ``Options.from_ipi(o).to_ipi() == o``)."""
+        out = cls()
+        for name, field in _IPI_FIELDS.items():
+            out.set(name, getattr(ipi, field))
+        return out
+
+    def with_overrides(self, overrides: Mapping[str, Any]) -> "Options":
+        """Copy with ``overrides`` applied at user precedence (keys with or
+        without the leading dash)."""
+        out = self.copy()
+        for k, v in overrides.items():
+            out.set(k, v)
+        return out
+
+
+def _parse_pairs(tokens, where: str):
+    """``["-method", "vi", "-atol=1e-6"]`` -> ``[("-method", "vi"), ...]``."""
+    out = []
+    it = iter(tokens)
+    for tok in it:
+        if "=" in tok:
+            key, value = tok.split("=", 1)
+            out.append((key, value))
+            continue
+        try:
+            out.append((tok, next(it)))
+        except StopIteration:
+            raise OptionTypeError(
+                f"{where}: option {tok!r} is missing a value") from None
+    return out
+
+
+def option_table() -> str:
+    """The full registry rendered as a markdown table (README / docs)."""
+    lines = ["| option | type | default | description |",
+             "|--------|------|---------|-------------|"]
+    for spec in OPTION_SPECS.values():
+        typ = spec.type.__name__
+        if spec.choices:
+            typ = " \\| ".join(f"`{c}`" for c in spec.choices)
+        default = "—" if spec.default is None else f"`{spec.default}`"
+        doc = spec.doc.replace("|", "\\|")
+        lines.append(f"| `{spec.name}` | {typ} | {default} | {doc} |")
+    return "\n".join(lines)

@@ -1,0 +1,330 @@
+"""The session layer: mesh/layout placement, solve dispatch, run outputs.
+
+madupite hides PETSc's communicator setup behind ``madupite.initialize()``;
+this module is the analogue for the JAX mesh machinery.  A
+:class:`Session` owns
+
+* **placement** — it builds the device mesh from the visible devices and
+  picks the layout (``1d``/``2d``/``fleet``/``fleet2d``) from the problem
+  shape and fleet size, overridable via ``-layout`` / ``-fleet``;
+* **dispatch** — :meth:`Session.solve` / :meth:`Session.solve_fleet` run
+  the core engines (:mod:`repro.core.driver`) with one consistent options
+  view, materializing function-backed MDPs shard-locally on the session's
+  mesh;
+* **bucketing** — ragged fleets are grouped by state count into
+  pad-efficient buckets (``-fleet_bucketing auto``), one compiled program
+  per bucket;
+* **outputs** — JSON run statistics (``-file_stats``), the optimal policy
+  (``-file_policy``) and value vector (``-file_cost``);
+* the **run-chunk cache lifecycle** — closing the session releases the
+  compiled ``run_chunk`` programs (:func:`repro.core.driver.clear_run_cache`).
+
+    from repro.api import MDP, Options, madupite_session
+
+    with madupite_session({"-method": "ipi_gmres", "-atol": 1e-8}) as s:
+        result = s.solve(MDP.from_generator("garnet", n=10_000, m=16, k=8))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.api.fleet import bucket_indices
+from repro.api.mdp import MDP
+from repro.api.options import Options
+from repro.core import driver
+from repro.core.driver import SolveResult
+from repro.core.mdp import DenseMDP, EllMDP
+from repro.core.mdp import MDP as CoreMDP
+
+__all__ = ["Session", "madupite_session"]
+
+
+class Session:
+    """A solve context: options database + device placement + outputs.
+
+    ``options`` may be an :class:`Options` database, a plain mapping of
+    option keys, or ``None`` (registry defaults + ``MADUPITE_OPTIONS``
+    from the environment).  ``mesh`` optionally pins an explicit
+    ``jax.sharding.Mesh`` instead of the auto-built one.
+    """
+
+    def __init__(self, options: Options | Mapping[str, Any] | None = None,
+                 *, mesh=None, clear_cache_on_close: bool = True):
+        if isinstance(options, Options):
+            self.options = options
+        else:
+            self.options = Options.from_sources(options)
+        self._mesh_override = mesh
+        self._mesh_cache: dict = {}
+        self._stats: list[dict] = []
+        self._closed = False
+        self._clear_cache = clear_cache_on_close
+        _sync_x64(self.options)
+
+    # ---- lifecycle ---------------------------------------------------------
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Release the compiled run-chunk programs and cached meshes.
+
+        ``clear_cache_on_close=False`` (the one-shot convenience wrappers)
+        leaves the process-wide run-chunk cache alone so other live
+        sessions keep their warm programs; the cache itself is bounded
+        (:data:`repro.core.driver._RUN_CHUNK_CACHE` evicts past 64)."""
+        if not self._closed:
+            if self._clear_cache:
+                driver.clear_run_cache()
+            self._mesh_cache.clear()
+            self._closed = True
+
+    @property
+    def stats(self) -> list[dict]:
+        """Accumulated per-solve statistics (what ``-file_stats`` holds)."""
+        return list(self._stats)
+
+    # ---- placement ---------------------------------------------------------
+    def placement(self, opts: Options | None = None, *,
+                  fleet_size: int | None = None):
+        """``(mesh, layout)`` for a solve: auto-built unless overridden.
+
+        Auto policy: one device -> single-device (no mesh); a single solve
+        -> the paper-faithful ``1d`` layout over all devices; a fleet of
+        B > 1 -> ``fleet`` layout, instance dim over a leading fleet axis
+        whose size is the largest device-count divisor <= B.  ``-layout``
+        forces a specific layout ('single' forces no mesh) and ``-fleet``
+        the fleet-axis size.
+        """
+        import jax
+        opts = opts or self.options
+        layout = opts.get("-layout")
+        if layout == "single":
+            return None, "1d"
+        if self._mesh_override is not None:
+            mesh = self._mesh_override
+            if layout == "auto":
+                has_fleet = "fleet" in mesh.axis_names
+                if has_fleet:
+                    layout = "fleet2d" if len(mesh.axis_names) > 2 \
+                        else "fleet"
+                else:
+                    layout = "1d"
+            return mesh, layout
+        n_dev = len(jax.devices())
+        if n_dev == 1:
+            if layout in ("fleet", "fleet2d"):
+                raise ValueError(
+                    f"-layout {layout} shards over a multi-device mesh but "
+                    f"only one device is visible (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=N to fake a "
+                    f"mesh on CPU)")
+            return None, "1d"
+        if layout == "auto":
+            layout = "fleet" if (fleet_size or 0) > 1 else "1d"
+        if layout in ("fleet", "fleet2d"):
+            f = opts.get("-fleet")
+            if f is None:
+                f = _largest_divisor(n_dev, at_most=max(fleet_size or 1, 1))
+            key = (layout, f)
+            if key not in self._mesh_cache:
+                from repro.launch.mesh import make_fleet_mesh
+                self._mesh_cache[key] = make_fleet_mesh(f, layout=layout)
+            return self._mesh_cache[key], layout
+        shape = (n_dev // 2, 2) if layout == "2d" and n_dev >= 2 \
+            else (n_dev, 1)
+        key = (layout, shape)
+        if key not in self._mesh_cache:
+            from repro.launch.mesh import make_host_mesh
+            self._mesh_cache[key] = make_host_mesh(shape)
+        return self._mesh_cache[key], layout
+
+    # ---- solving -----------------------------------------------------------
+    def solve(self, mdp: MDP | CoreMDP, **overrides) -> SolveResult:
+        """Solve one MDP through the session's placement and options.
+
+        ``overrides`` are per-call option overrides (keys with or without
+        the leading dash): ``s.solve(mdp, method="vi", atol=1e-6)``.
+        """
+        opts = self._opts(overrides)
+        mdp = self._wrap(mdp, opts)
+        ipi = self._ipi(opts, mdp.mode)
+        mesh, layout = self.placement(opts)
+        core = mdp.place(mesh, layout, mode=ipi.mode)
+        t0 = time.time()
+        r = driver.solve(core, ipi, mesh=mesh, layout=layout,
+                         checkpoint_dir=opts.get("-checkpoint_dir"),
+                         chunk=opts.get("-chunk"),
+                         verbose=opts.get("-verbose"))
+        wall = time.time() - t0
+        r = _trim(r, mdp.n)
+        self._record([r], [mdp], ipi, opts, mesh, layout, wall, fleet=None)
+        self._write_outputs([r], opts)
+        return r
+
+    def solve_fleet(self, mdps: Sequence[MDP | CoreMDP],
+                    **overrides) -> list[SolveResult]:
+        """Solve a fleet of MDPs in batched compiled programs.
+
+        Ragged fleets (instances with very different state counts) are
+        grouped into pad-efficient buckets (``-fleet_bucketing auto``) and
+        each bucket runs one :func:`repro.core.driver.solve_many` program;
+        results come back in input order.  All instances must share one
+        ``mode``.
+        """
+        if not mdps:
+            return []
+        opts = self._opts(overrides)
+        wrapped = [self._wrap(m, opts) for m in mdps]
+        modes = {m.mode for m in wrapped}
+        if len(modes) > 1:
+            raise ValueError(f"solve_fleet needs one shared mode, got "
+                             f"{sorted(modes)}; solve mixed-mode instances "
+                             f"separately")
+        ipi = self._ipi(opts, modes.pop())
+        cores = [m.build() for m in wrapped]
+        buckets = bucket_indices([m.n for m in wrapped],
+                                 policy=opts.get("-fleet_bucketing"))
+        ckpt = opts.get("-checkpoint_dir")
+        results: list[SolveResult | None] = [None] * len(wrapped)
+        t0 = time.time()
+        for j, bucket in enumerate(buckets):
+            mesh, layout = self.placement(opts, fleet_size=len(bucket))
+            bucket_ckpt = ckpt if ckpt is None or len(buckets) == 1 \
+                else os.path.join(ckpt, f"bucket{j}")
+            rs = driver.solve_many(
+                [cores[i] for i in bucket], ipi, mesh=mesh, layout=layout,
+                pad_fleet=opts.get("-pad_fleet"),
+                checkpoint_dir=bucket_ckpt, chunk=opts.get("-chunk"),
+                verbose=opts.get("-verbose"))
+            for i, r in zip(bucket, rs):
+                results[i] = _trim(r, wrapped[i].n)
+        wall = time.time() - t0
+        mesh, layout = self.placement(opts, fleet_size=len(wrapped))
+        self._record(results, wrapped, ipi, opts, mesh, layout, wall,
+                     fleet=dict(size=len(wrapped),
+                                buckets=[sorted(b) for b in buckets]))
+        self._write_outputs(results, opts)
+        return results  # type: ignore[return-value]
+
+    # ---- internals ---------------------------------------------------------
+    def _opts(self, overrides: Mapping[str, Any]) -> Options:
+        if self._closed:
+            raise RuntimeError("this Session is closed; create a new one")
+        if not overrides:
+            return self.options
+        opts = self.options.with_overrides(overrides)
+        _sync_x64(opts)        # a per-call dtype override must flip x64 too
+        return opts
+
+    def _wrap(self, mdp: MDP | CoreMDP, opts: Options) -> MDP:
+        if isinstance(mdp, MDP):
+            return mdp
+        if isinstance(mdp, (EllMDP, DenseMDP)):
+            return MDP(mdp, mode=opts.get("-mode"))
+        raise TypeError(f"solve wants a repro.api.MDP (or a core "
+                        f"EllMDP/DenseMDP), got {type(mdp).__name__}")
+
+    def _ipi(self, opts: Options, mdp_mode: str):
+        """IPIOptions from the database; the MDP's mode wins unless the
+        user explicitly set ``-mode``."""
+        ipi = opts.to_ipi()
+        if not opts.is_set("-mode") and ipi.mode != mdp_mode:
+            ipi = dataclasses.replace(ipi, mode=mdp_mode)
+        return ipi
+
+    def _record(self, results, mdps, ipi, opts: Options, mesh, layout: str,
+                wall: float, *, fleet) -> None:
+        entry = {
+            "method": ipi.method,
+            "mode": ipi.mode,
+            "layout": layout if mesh is not None else "single",
+            "mesh": dict(mesh.shape) if mesh is not None else None,
+            "options": _jsonable(opts.as_dict(explicit_only=True)),
+            "wall_s": round(wall, 6),
+            "fleet": fleet,
+            "solves": [
+                {
+                    "n": int(m.n), "m": int(m.m),
+                    "gamma": float(m.gamma),
+                    "converged": bool(r.converged),
+                    "outer_iterations": int(r.outer_iterations),
+                    "inner_iterations": int(r.inner_iterations),
+                    "residual": float(r.residual),
+                    "gap_bound": float(r.gap_bound),
+                }
+                for m, r in zip(mdps, results)
+            ],
+        }
+        self._stats.append(entry)
+
+    def _write_outputs(self, results, opts: Options) -> None:
+        stats_path = opts.get("-file_stats")
+        if stats_path:
+            _ensure_dir(stats_path)
+            with open(stats_path, "w") as f:
+                json.dump(self._stats, f, indent=1)
+        for key, field in (("-file_policy", "policy"), ("-file_cost", "v")):
+            path = opts.get(key)
+            if not path:
+                continue
+            _ensure_dir(path)
+            arrays = [np.asarray(getattr(r, field)) for r in results]
+            if len(arrays) == 1:
+                np.save(path, arrays[0])
+            else:
+                np.savez(path, **{f"instance_{i}": a
+                                  for i, a in enumerate(arrays)})
+
+
+def madupite_session(options: Options | Mapping[str, Any] | None = None, *,
+                     mesh=None) -> Session:
+    """Open a solve session (the ``madupite.initialize()`` analogue)::
+
+        with madupite_session({"-method": "vi"}) as s:
+            r = s.solve(mdp)
+    """
+    return Session(options, mesh=mesh)
+
+
+def _sync_x64(opts: Options) -> None:
+    """``-dtype float64`` requires jax_enable_x64, or every array silently
+    truncates to f32 while the result claims f64."""
+    if opts.get("-dtype") == "float64":
+        import jax
+        jax.config.update("jax_enable_x64", True)
+
+
+def _largest_divisor(n: int, *, at_most: int) -> int:
+    for d in range(min(n, at_most), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _trim(r: SolveResult, n: int) -> SolveResult:
+    """Trim a result solved on a padded (device-materialized) MDP back to
+    the true state count."""
+    if len(r.v) <= n:
+        return r
+    return dataclasses.replace(r, v=r.v[:n], policy=r.policy[:n])
+
+
+def _jsonable(d: dict) -> dict:
+    return {k: (v if isinstance(v, (int, float, str, bool, type(None)))
+                else repr(v)) for k, v in d.items()}
+
+
+def _ensure_dir(path: str) -> None:
+    parent = os.path.dirname(os.path.abspath(path))
+    if parent:
+        os.makedirs(parent, exist_ok=True)

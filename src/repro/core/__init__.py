@@ -1,18 +1,48 @@
 """repro.core — distributed inexact policy iteration for large-scale MDPs.
 
-The JAX/TPU reimplementation of madupite's contribution.  Public surface:
+The solver *engine* layer.  The supported user surface is
+:mod:`repro.api` (MDP builders, the options database, sessions)::
 
-    from repro.core import EllMDP, IPIOptions, solve, generators
-    mdp = generators.garnet(n=10_000, m=16, k=8, gamma=0.99)
-    result = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-8))
+    from repro.api import MDP, madupite_session
+    mdp = MDP.from_generator("garnet", n=10_000, m=16, k=8, gamma=0.99)
+    with madupite_session({"-method": "ipi_gmres", "-atol": 1e-8}) as s:
+        result = s.solve(mdp)
+
+``repro.core.solve`` / ``repro.core.solve_many`` remain as deprecated
+aliases of the engine entry points (:mod:`repro.core.driver`); they keep
+working unchanged but emit a ``DeprecationWarning`` pointing at the new
+API.
 """
 
+import functools
+import warnings
+
 from repro.core.comm import Axes
-from repro.core.driver import SolveResult, solve, solve_many
-from repro.core.ipi import IPIOptions, METHODS, SolveState
+from repro.core.driver import SolveResult
+from repro.core.driver import solve as _driver_solve
+from repro.core.driver import solve_many as _driver_solve_many
+from repro.core.ipi import IPIOptions, METHODS, MODES, SolveState
 from repro.core.mdp import DenseMDP, EllMDP, stack_mdps
 from repro.core import bellman, generators, partition
 
-__all__ = ["Axes", "DenseMDP", "EllMDP", "IPIOptions", "METHODS",
+__all__ = ["Axes", "DenseMDP", "EllMDP", "IPIOptions", "METHODS", "MODES",
            "SolveResult", "SolveState", "bellman", "generators",
            "partition", "solve", "solve_many", "stack_mdps"]
+
+
+def _deprecated_shim(fn, name):
+    @functools.wraps(fn)
+    def shim(*args, **kwargs):
+        warnings.warn(
+            f"repro.core.{name} is deprecated as a user entry point; use "
+            f"repro.api (MDP builders + madupite_session / Session."
+            f"{'solve_fleet' if name == 'solve_many' else 'solve'}), which "
+            f"owns mesh/layout placement and the options database. "
+            f"Internal callers should import repro.core.driver.{name}.",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    return shim
+
+
+solve = _deprecated_shim(_driver_solve, "solve")
+solve_many = _deprecated_shim(_driver_solve_many, "solve_many")

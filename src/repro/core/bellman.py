@@ -62,7 +62,8 @@ def _shift_idx(idx: jax.Array, mdp: MDP, axes: Axes, halo: int) -> jax.Array:
 
 def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
            impl: str | None = None, halo: int = 0,
-           gamma_t: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+           gamma_t: jax.Array | None = None,
+           mode: str = "mincost") -> tuple[jax.Array, jax.Array]:
     """One Bellman backup: ``Tv`` and the greedy policy on local rows.
 
     ``v_global`` is whatever :func:`gather_v` produced (full vector or halo
@@ -74,44 +75,57 @@ def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
     A batched ``mdp`` (with ``v_global`` batched ``(B, n)``) vmaps over the
     instance dim and returns ``(B, n)`` outputs.  ``gamma_t`` (traced scalar)
     overrides the static ``mdp.gamma`` — see the module docstring.
+
+    ``mode="maxreward"`` reads ``cost`` as a *reward* and takes the argmax
+    backup ``Tv = max_a (r + gamma P v)`` instead of the argmin.  It is
+    implemented by negation — the backup runs on ``(-cost, -v)`` and the
+    result is negated — so a maxreward solve is bit-for-bit the negation of
+    the mincost solve on negated costs (IEEE negation is exact), and the
+    action-axis pmin/tie-break reduction is reused unchanged.
     """
     if mdp.batch is not None:
         view, in_ax, g_t = batch_parts(mdp)
         g_t = gamma_t if gamma_t is not None else g_t
         fn = lambda m, vg, gt: backup(m, vg, axes, impl=impl, halo=halo,
-                                      gamma_t=gt)
+                                      gamma_t=gt, mode=mode)
         return jax.vmap(fn, in_axes=(in_ax, 0, None if g_t is None else 0))(
             view, v_global, g_t)
     if gamma_t is not None:
         v_global = (gamma_t * v_global).astype(v_global.dtype)
     gamma = 1.0 if gamma_t is not None else mdp.gamma
+    neg = mode == "maxreward"
+    cost = -mdp.cost if neg else mdp.cost
+    if neg:
+        v_global = -v_global
     if isinstance(mdp, EllMDP):
         idx = _shift_idx(mdp.idx, mdp, axes, halo)
-        vmin, amin = ops.ell_backup(idx, mdp.val, mdp.cost, gamma,
+        vmin, amin = ops.ell_backup(idx, mdp.val, cost, gamma,
                                     v_global, impl=impl)
     else:
         assert halo == 0, "halo layout requires the ELL representation"
-        vmin, amin = ops.dense_backup(mdp.p, mdp.cost, gamma,
+        vmin, amin = ops.dense_backup(mdp.p, cost, gamma,
                                       v_global, impl=impl)
     a_glob = amin + mdp.m_local * axes.action_index()
     if axes.action is None:
-        return vmin, a_glob
+        return (-vmin if neg else vmin), a_glob
     tv = axes.pmin_action(vmin)
     # argmin across shards: owner shards (vmin == tv exactly, since pmin picks
     # one of the exact local minima) propose their id, others propose m_global.
     cand = jnp.where(vmin == tv, a_glob, jnp.int32(mdp.m_global))
     pi = axes.pmin_action(cand)
-    return tv, pi
+    return (-tv if neg else tv), pi
 
 
 def residual_norm(mdp: MDP, v_local: jax.Array, v_global: jax.Array,
                   axes: Axes, *, impl: str | None = None,
                   halo: int = 0,
-                  gamma_t: jax.Array | None = None) -> jax.Array:
+                  gamma_t: jax.Array | None = None,
+                  mode: str = "mincost") -> jax.Array:
     """Global sup-norm Bellman residual ``||T v - v||_inf`` (the optimality gap
     certificate: ``||v - v*||_inf <= residual / (1 - gamma)``).  Batched MDPs
     return per-instance residuals ``(B,)``."""
-    tv, _ = backup(mdp, v_global, axes, impl=impl, halo=halo, gamma_t=gamma_t)
+    tv, _ = backup(mdp, v_global, axes, impl=impl, halo=halo, gamma_t=gamma_t,
+                   mode=mode)
     return axes.pmax_state(jnp.max(jnp.abs(tv - v_local), axis=-1))
 
 

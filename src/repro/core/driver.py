@@ -116,6 +116,16 @@ def _validate_banded(mdp, halo: int, mesh, layout: str) -> None:
 _RUN_CHUNK_CACHE: dict = {}
 
 
+def clear_run_cache() -> None:
+    """Drop every cached jit'd ``run_chunk`` wrapper.
+
+    The session layer (:mod:`repro.api.session`) owns the cache lifecycle:
+    a closing session releases the compiled programs (and the device MDPs
+    they pin via their sharding closures) instead of letting them accumulate
+    for the life of the process."""
+    _RUN_CHUNK_CACHE.clear()
+
+
 def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch):
     """(run_chunk, init) closures for single-device or shard_map execution."""
     if mesh is None:
@@ -263,7 +273,8 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
         axes = Axes()
         dev_mdp = mdp
     else:
-        dev_mdp, axes, n_orig = partition.shard_mdp(mdp, mesh, layout)
+        dev_mdp, axes, n_orig = partition.shard_mdp(mdp, mesh, layout,
+                                                    mode=opts.mode)
         if v0 is not None:
             v0 = jnp.pad(jnp.asarray(v0),
                          (0, dev_mdp.n_global - n_orig))
@@ -367,7 +378,8 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
         dev_mdp = batched
     else:
         dev_mdp, axes, _ = partition.shard_mdp(batched, mesh, layout,
-                                               pad_fleet=pad_fleet)
+                                               pad_fleet=pad_fleet,
+                                               mode=opts.mode)
         if v0 is not None:
             pad_n = dev_mdp.n_global - batched.n_global
             pad_b = dev_mdp.batch - b_orig

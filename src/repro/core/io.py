@@ -15,7 +15,11 @@ import numpy as np
 from repro.core.mdp import EllMDP
 
 
-def save_mdp(path: str, mdp: EllMDP, n_blocks: int = 1) -> None:
+def save_mdp(path: str, mdp: EllMDP, n_blocks: int = 1,
+             mode: str | None = None) -> None:
+    """``mode`` optionally records the solve semantics ("mincost" /
+    "maxreward") in the manifest, so ``repro.api.MDP.from_file`` restores
+    the full builder state."""
     os.makedirs(path, exist_ok=True)
     n = mdp.n_global
     idx, val, cost = (np.asarray(mdp.idx), np.asarray(mdp.val),
@@ -30,16 +34,24 @@ def save_mdp(path: str, mdp: EllMDP, n_blocks: int = 1) -> None:
         blocks.append(dict(block=b, row_lo=lo, row_hi=hi))
     manifest = dict(n=int(n), m=int(mdp.m_global), k=int(mdp.nnz_per_row),
                     gamma=float(mdp.gamma), n_blocks=n_blocks, blocks=blocks)
+    if mode is not None:
+        manifest["mode"] = mode
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+
+
+def load_manifest(path: str) -> dict:
+    """The manifest (global shape / gamma / mode / block table) alone —
+    cheap metadata reads without touching the blocks."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
 
 
 def load_mdp(path: str, rows: tuple[int, int] | None = None) -> EllMDP:
     """Load the full MDP or just the ``rows=(lo, hi)`` slice (block-aligned
     reads; each distributed worker calls this with its own range)."""
     import jax.numpy as jnp
-    with open(os.path.join(path, "manifest.json")) as f:
-        man = json.load(f)
+    man = load_manifest(path)
     lo, hi = rows or (0, man["n"])
     parts = []
     for blk in man["blocks"]:

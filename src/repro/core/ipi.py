@@ -61,6 +61,7 @@ from repro.core.mdp import MDP, batch_parts
 from repro.core.solvers import bicgstab, gmres, richardson
 
 METHODS = ("vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab", "pi")
+MODES = ("mincost", "maxreward")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +69,8 @@ class IPIOptions:
     """Static solver options (hashable -> usable as a jit static arg)."""
 
     method: str = "ipi_gmres"
+    mode: str = "mincost"       # "mincost" (argmin backup) | "maxreward"
+                                # (argmax backup; cost is read as reward)
     atol: float = 1e-8          # stop when ||T v - v||_inf <= atol
     max_outer: int = 500
     max_inner: int = 500        # inner-iteration cap per outer step
@@ -89,6 +92,9 @@ class IPIOptions:
         if self.method not in METHODS:
             raise ValueError(f"unknown method {self.method!r}; "
                              f"pick one of {METHODS}")
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             f"pick one of {MODES}")
         if self.dtype not in ("float32", "float64"):
             raise ValueError(f"dtype must be 'float32' or 'float64' (PETSc "
                              f"default), got {self.dtype!r}")
@@ -175,7 +181,7 @@ def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
     v = jnp.zeros((mdp.n_local,), dt) if v0 is None else v0.astype(dt)
     v_g = bellman.gather_v(v, axes, halo=opts.halo)
     tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl, halo=opts.halo,
-                            gamma_t=gamma_t)
+                            gamma_t=gamma_t, mode=opts.mode)
     tv = tv.astype(dt)
     res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
     trace_res = jnp.full((opts.max_outer + 1,), jnp.nan, dt)
@@ -230,7 +236,8 @@ def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
     def eval_at(v):
         v_g = bellman.gather_v(v, axes, halo=opts.halo)   # exact gather
         tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl,
-                                halo=opts.halo, gamma_t=gamma_t)
+                                halo=opts.halo, gamma_t=gamma_t,
+                                mode=opts.mode)
         res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
         return v, tv, pi, res
 

@@ -78,12 +78,20 @@ def _bcast_concat(arr: np.ndarray, pad_core: np.ndarray,
     return np.concatenate([arr, pad], axis=axis)
 
 
-def pad_mdp(mdp: EllMDP, n_mult: int, m_mult: int) -> EllMDP:
+def pad_mdp(mdp: EllMDP, n_mult: int, m_mult: int, *,
+            mode: str = "mincost") -> EllMDP:
     """Pad (host-side) to state/action multiples; exact-solution preserving.
 
     Batch-aware: a fleet container (leading ``B`` dim on ``val``/``cost``,
     shared or batched ``idx``) is padded identically on every instance.
+
+    ``mode`` matches the solve's :class:`~repro.core.ipi.IPIOptions.mode`:
+    padded actions carry cost ``+BIG`` under the argmin (``"mincost"``)
+    backup but ``-BIG`` under the argmax (``"maxreward"``) backup, so they
+    can never be greedy in either mode.  State padding (zero-cost absorbing
+    self-loops, value identically 0) is mode-independent.
     """
+    big = _BIG_COST if mode == "mincost" else -_BIG_COST
     idx, val, cost = (np.asarray(mdp.idx), np.asarray(mdp.val),
                       np.asarray(mdp.cost))
     n, m, k = val.shape[-3], val.shape[-2], val.shape[-1]
@@ -95,7 +103,7 @@ def pad_mdp(mdp: EllMDP, n_mult: int, m_mult: int) -> EllMDP:
         pv[..., 0] = 1.0  # self-transition placeholder (row sums to 1)
         val = _bcast_concat(val, pv, -2)
         cost = _bcast_concat(
-            cost, np.full((n, m_pad), _BIG_COST, cost.dtype), -1)
+            cost, np.full((n, m_pad), big, cost.dtype), -1)
     if n_pad:
         m_tot = m + m_pad
         pad_idx = np.zeros((n_pad, m_tot, k), idx.dtype)
@@ -107,7 +115,7 @@ def pad_mdp(mdp: EllMDP, n_mult: int, m_mult: int) -> EllMDP:
         # zero cost on the absorbing self-loop -> v_pad == 0 exactly; big cost
         # on padded actions stays (harmless: still never greedy).
         pad_cost = np.zeros((n_pad, m_tot), cost.dtype)
-        pad_cost[:, m:] = _BIG_COST
+        pad_cost[:, m:] = big
         cost = _bcast_concat(cost, pad_cost, -2)
     return EllMDP(idx=jax.numpy.asarray(idx), val=jax.numpy.asarray(val),
                   cost=jax.numpy.asarray(cost), gamma=mdp.gamma,
@@ -187,8 +195,39 @@ def mdp_pspecs(mdp: MDP, axes: Axes):
                     n_global=mdp.n_global, m_global=mdp.m_global)
 
 
+def already_placed(mdp: MDP, mesh, axes: Axes) -> bool:
+    """True when every MDP array is a committed device array carrying
+    exactly the ``NamedSharding`` :func:`shard_mdp` would assign and the
+    global shape needs no padding — the fast path for MDPs materialized
+    shard-locally on device (``repro.api.MDP.from_functions``) or re-solved
+    after a previous placement: ``shard_mdp`` then skips the host-side
+    ``np.asarray`` round-trip that would gather the whole MDP."""
+    if mdp.n_global % _axis_size(mesh, axes.state):
+        return False
+    if mdp.m_global % _axis_size(mesh, axes.action):
+        return False
+    if (mdp.batch or 1) % _axis_size(mesh, axes.fleet):
+        return False
+    specs = mdp_pspecs(mdp, axes)
+    fields = (("idx", "val", "cost") if isinstance(mdp, EllMDP)
+              else ("p", "cost"))
+    for f in fields:
+        arr = getattr(mdp, f)
+        sh = getattr(arr, "sharding", None)
+        if sh is None or not getattr(arr, "committed", False):
+            return False
+        want = NamedSharding(mesh, getattr(specs, f))
+        try:
+            if not sh.is_equivalent_to(want, arr.ndim):
+                return False
+        except (AttributeError, TypeError):
+            if sh != want:
+                return False
+    return True
+
+
 def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d", *,
-              pad_fleet: bool = True):
+              pad_fleet: bool = True, mode: str = "mincost"):
     """Pad + place a host MDP (single instance or batched fleet) onto
     ``mesh``.
 
@@ -199,16 +238,22 @@ def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d", *,
     owns its row slice of all B instances) and sharded over the leading
     mesh axis under the fleet layouts — padded to the fleet-axis size first
     (``pad_fleet=False`` raises instead of padding).
+
+    An MDP whose arrays are already device-placed with exactly the target
+    sharding (and no padding needed) passes through untouched — see
+    :func:`already_placed`.
     """
     axes = mesh_axes(mesh, layout)
     if axes.fleet is not None and mdp.batch is None:
         raise ValueError(f"layout {layout!r} shards the fleet (batch) dim "
                          "but the MDP is unbatched; use layout='1d'/'2d' "
                          "or solve a fleet via solve_many()")
+    if already_placed(mdp, mesh, axes):
+        return mdp, axes, mdp.n_global
     n_mult = _axis_size(mesh, axes.state)
     m_mult = _axis_size(mesh, axes.action)
     n_orig = mdp.n_global
-    padded = pad_mdp(mdp, n_mult, m_mult)
+    padded = pad_mdp(mdp, n_mult, m_mult, mode=mode)
     if axes.fleet is not None:
         b_to = fleet_padded_batch(padded.batch, _axis_size(mesh, axes.fleet),
                                   pad_fleet)

@@ -30,7 +30,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     jax.config.update("jax_enable_x64", True)
-    from repro.core import IPIOptions, generators, solve
+    from repro.core import IPIOptions, generators
+    from repro.core.driver import solve
 
     mdp = generators.garnet(args.n, 12, 6, gamma=args.gamma, seed=5)
     opts = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64")

@@ -1,31 +1,29 @@
-"""MDP solve driver — the madupite CLI equivalent.
+"""MDP solve CLI — a thin shell over the options database + session layer.
+
+Every solver/placement/output setting is an options-database key
+(:mod:`repro.api.options`); the named flags below are convenience aliases
+for the common ones, and ``--option key=value`` (repeatable) reaches the
+full registry.  ``MADUPITE_OPTIONS`` in the environment is ingested first
+(precedence: explicit flag / ``--option`` > environment > defaults):
 
     PYTHONPATH=src python -m repro.launch.solve --instance maze2d --size 64 \
         --method ipi_gmres --atol 1e-8 --ckpt-dir /tmp/mdp_run
 
-Generates (or loads) an instance, solves it with the selected iPI method —
-distributed over all available devices when >1 — and reports the
-convergence certificate.
+    MADUPITE_OPTIONS="-method vi -atol 1e-6" \
+    PYTHONPATH=src python -m repro.launch.solve --instance garnet --n 5000
 
-Fleet mode: ``--batch N`` solves N instances in ONE compiled batched program
-(:func:`repro.core.driver.solve_many`).  By default the fleet is a seed
-ensemble (``seed .. seed+N-1``); ``--sweep-gamma LO HI`` makes it a
-gamma-conditioning sweep instead (N log-spaced discount factors, the
-paper's gamma -> 1 study in one invocation):
+    PYTHONPATH=src python -m repro.launch.solve --instance sis --n 2000 \
+        --option mode=maxreward --option file_stats=run.json
 
-    PYTHONPATH=src python -m repro.launch.solve --instance garnet \
-        --n 5000 --batch 8 --method ipi_gmres
-    PYTHONPATH=src python -m repro.launch.solve --instance chain_walk \
-        --n 2000 --batch 6 --sweep-gamma 0.9 0.9999
-
-Fleet-sharded layouts: ``--layout fleet`` (or ``fleet2d``) shards the fleet's
-instance dim over the mesh's leading ``fleet`` axis (``--fleet N`` picks the
-axis size; default: all devices) so per-device fleet memory is B/N of the
-replicated layouts:
+Fleet mode: ``--batch N`` solves N instances in batched compiled programs
+(``Session.solve_fleet``; a seed ensemble, or a gamma-conditioning sweep
+with ``--sweep-gamma LO HI``).  The session auto-picks the mesh layout —
+``fleet``-sharded over >1 device — overridable with ``--option layout=...``
+/ ``--option fleet=F``:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.solve --instance garnet \
-        --n 2000 --batch 16 --layout fleet --fleet 8
+        --n 2000 --batch 16 --option layout=fleet --option fleet=8
 """
 
 from __future__ import annotations
@@ -33,12 +31,10 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.core import IPIOptions, generators, solve, solve_many
-from repro.core.io import load_mdp
-from repro.launch.mesh import make_fleet_mesh, make_host_mesh
+from repro.api import MDP, Options, Session
+from repro.core import generators
 
 
 def _gen_kwargs(args) -> dict:
@@ -55,10 +51,10 @@ def _gen_kwargs(args) -> dict:
     raise ValueError(args.instance)
 
 
-def build_instance(args):
+def build_instance(args) -> MDP:
     if args.load:
-        return load_mdp(args.load)
-    return generators.REGISTRY[args.instance](**_gen_kwargs(args))
+        return MDP.from_file(args.load)
+    return MDP.from_generator(args.instance, **_gen_kwargs(args))
 
 
 def build_fleet(args) -> list:
@@ -75,8 +71,36 @@ def build_fleet(args) -> list:
                                     **kw)
 
 
+def build_options(args) -> Options:
+    """Flags -> options database (env < flags/--option; flags the user did
+    not pass fall back to CLI-flavored soft defaults, which still lose to
+    ``MADUPITE_OPTIONS``)."""
+    opts = Options.from_sources()                    # env ingested here
+    flag_map = {"method": "-method", "atol": "-atol",
+                "max_outer": "-max_outer", "dtype": "-dtype",
+                "layout": "-layout", "fleet": "-fleet",
+                "ckpt_dir": "-checkpoint_dir", "mode": "-mode"}
+    for flag, key in flag_map.items():
+        val = getattr(args, flag)
+        if val is not None:
+            opts.set(key, val, source="cli")
+    if args.single_device:
+        opts.set("-layout", "single", source="cli")
+    opts.ingest_cli(args.option)
+    # the CLI has always defaulted to PETSc-style f64 and a deep outer cap;
+    # keep that, but let the environment override
+    if not opts.is_set("-dtype"):
+        opts.set("-dtype", "float64", source="default")
+    if not opts.is_set("-max_outer"):
+        opts.set("-max_outer", 2000, source="default")
+    if not opts.is_set("-verbose"):
+        opts.set("-verbose", True, source="default")
+    return opts
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--instance", default="garnet",
                     choices=["garnet", "maze2d", "sis", "chain_walk"])
     ap.add_argument("--load", default=None, help="load an MDP saved by io.py")
@@ -86,21 +110,30 @@ def main(argv=None):
     ap.add_argument("--size", type=int, default=64)
     ap.add_argument("--gamma", type=float, default=0.99)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--method", default="ipi_gmres")
-    ap.add_argument("--atol", type=float, default=1e-8)
-    ap.add_argument("--max-outer", type=int, default=2000)
-    ap.add_argument("--layout", default="1d",
-                    choices=["1d", "2d", "fleet", "fleet2d"])
+    ap.add_argument("--method", default=None, help="option -method")
+    ap.add_argument("--mode", default=None,
+                    choices=["mincost", "maxreward"], help="option -mode")
+    ap.add_argument("--atol", type=float, default=None, help="option -atol")
+    ap.add_argument("--max-outer", type=int, default=None,
+                    help="option -max_outer")
+    ap.add_argument("--layout", default=None,
+                    choices=["auto", "single", "1d", "2d", "fleet",
+                             "fleet2d"], help="option -layout")
     ap.add_argument("--fleet", type=int, default=None,
-                    help="fleet-axis size for --layout fleet/fleet2d "
-                         "(must divide the device count; default: all "
-                         "devices)")
-    ap.add_argument("--dtype", default="float64")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--single-device", action="store_true")
+                    help="option -fleet (fleet-axis size)")
+    ap.add_argument("--dtype", default=None, help="option -dtype")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="option -checkpoint_dir")
+    ap.add_argument("--single-device", action="store_true",
+                    help="option -layout=single")
+    ap.add_argument("--option", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="set any options-database key (repeatable; the "
+                         "leading dash is optional), e.g. "
+                         "--option mode=maxreward")
     ap.add_argument("--batch", type=int, default=1,
-                    help="solve a fleet of N instances in one batched "
-                         "program (seed ensemble unless --sweep-gamma)")
+                    help="solve a fleet of N instances in batched "
+                         "programs (seed ensemble unless --sweep-gamma)")
     ap.add_argument("--sweep-gamma", type=float, nargs=2, default=None,
                     metavar=("LO", "HI"),
                     help="with --batch: gamma sweep over [LO, HI] instead "
@@ -110,58 +143,42 @@ def main(argv=None):
     if args.sweep_gamma is not None and args.batch <= 1:
         raise SystemExit("--sweep-gamma needs --batch N (the sweep IS the "
                          "fleet); e.g. --batch 8 --sweep-gamma 0.9 0.9999")
-    fleet_layout = args.layout in ("fleet", "fleet2d")
-    if fleet_layout and args.batch <= 1:
-        raise SystemExit(f"--layout {args.layout} shards the fleet dim; it "
-                         "needs a fleet (--batch N)")
-    if args.dtype == "float64":
-        jax.config.update("jax_enable_x64", True)
+    opts = build_options(args)
+    if opts.get("-layout") in ("fleet", "fleet2d") and args.batch <= 1:
+        raise SystemExit(f"-layout {opts.get('-layout')} shards the fleet "
+                         "dim; it needs a fleet (--batch N)")
 
-    opts = IPIOptions(method=args.method, atol=args.atol,
-                      max_outer=args.max_outer, dtype=args.dtype)
-    mesh = None
-    if not args.single_device and len(jax.devices()) > 1:
-        n_dev = len(jax.devices())
-        if fleet_layout:
-            fleet = args.fleet if args.fleet is not None else n_dev
-            mesh = make_fleet_mesh(fleet, layout=args.layout)
-        else:
-            shape = (n_dev // 2, 2) if args.layout == "2d" and n_dev >= 2 \
-                else (n_dev, 1)
-            mesh = make_host_mesh(shape)
-        print(f"[solve] distributed over mesh {dict(mesh.shape)} "
-              f"layout={args.layout}")
-    elif fleet_layout:
-        raise SystemExit(f"--layout {args.layout} needs >1 device (set "
-                         "XLA_FLAGS=--xla_force_host_platform_device_count=N"
-                         " to fake a mesh on CPU)")
+    with Session(opts) as session:
+        mesh, layout = session.placement(
+            fleet_size=args.batch if args.batch > 1 else None)
+        if mesh is not None:
+            print(f"[solve] distributed over mesh {dict(mesh.shape)} "
+                  f"layout={layout}")
 
-    if args.batch > 1:
-        if args.load:
-            raise SystemExit("--batch does not combine with --load")
-        fleet = build_fleet(args)
-        print(f"[solve] fleet B={args.batch} instance={args.instance} "
-              f"n={fleet[0].n_global} m={fleet[0].m_global} "
-              f"gammas={[round(float(m.gamma), 6) for m in fleet]}")
+        if args.batch > 1:
+            if args.load:
+                raise SystemExit("--batch does not combine with --load")
+            fleet = build_fleet(args)
+            print(f"[solve] fleet B={args.batch} instance={args.instance} "
+                  f"n={fleet[0].n_global} m={fleet[0].m_global} "
+                  f"gammas={[round(float(m.gamma), 6) for m in fleet]}")
+            t0 = time.time()
+            results = session.solve_fleet(fleet)
+            wall = time.time() - t0
+            for b, r in enumerate(results):
+                print(f"[solve] [{b}] {r.summary()}")
+            print(f"[solve] fleet wall={wall:.2f}s "
+                  f"({wall / args.batch:.2f}s/instance amortized)")
+            return 0 if all(r.converged for r in results) else 1
+
+        mdp = build_instance(args)
+        print(f"[solve] instance={args.instance} n={mdp.n} m={mdp.m} "
+              f"gamma={mdp.gamma} mode={mdp.mode}")
         t0 = time.time()
-        results = solve_many(fleet, opts, mesh=mesh, layout=args.layout,
-                             checkpoint_dir=args.ckpt_dir, verbose=True)
-        wall = time.time() - t0
-        for b, r in enumerate(results):
-            print(f"[solve] [{b}] {r.summary()}")
-        print(f"[solve] fleet wall={wall:.2f}s "
-              f"({wall / args.batch:.2f}s/instance amortized)")
-        return 0 if all(r.converged for r in results) else 1
-
-    mdp = build_instance(args)
-    print(f"[solve] instance={args.instance} n={mdp.n_global} "
-          f"m={mdp.m_global} nnz/row={mdp.nnz_per_row} gamma={mdp.gamma}")
-    t0 = time.time()
-    r = solve(mdp, opts, mesh=mesh, layout=args.layout,
-              checkpoint_dir=args.ckpt_dir, verbose=True)
-    print(f"[solve] {r.summary()}  wall={time.time()-t0:.2f}s")
-    print(f"[solve] ||v - v*||_inf <= {r.gap_bound:.3e} (certificate)")
-    return 0 if r.converged else 1
+        r = session.solve(mdp)
+        print(f"[solve] {r.summary()}  wall={time.time()-t0:.2f}s")
+        print(f"[solve] ||v - v*||_inf <= {r.gap_bound:.3e} (certificate)")
+        return 0 if r.converged else 1
 
 
 if __name__ == "__main__":

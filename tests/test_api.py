@@ -1,0 +1,428 @@
+"""The user API (ISSUE 3): MDP builders, options database, session layer.
+
+Covers the options database contract (typed validation, env/CLI ingestion
+precedence, lossless IPIOptions round-trip), maxreward-vs-mincost parity
+(negated-cost equivalence, bit-for-bit on vi/mpi), function-defined MDPs,
+session placement + outputs, ragged-fleet bucketing, the deprecation shims
+and the rewired CLI.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (MDP, Options, OptionTypeError, Session,
+                       UnknownOptionError, bucket_indices, madupite_session,
+                       option_table)
+from repro.core import generators
+from repro.core.driver import solve as driver_solve
+from repro.core.driver import solve_many as driver_solve_many
+from repro.core.ipi import IPIOptions
+from repro.core.mdp import EllMDP
+
+
+# --------------------------------------------------------------------------- #
+# Options database                                                            #
+# --------------------------------------------------------------------------- #
+
+def test_options_defaults_match_ipi_defaults():
+    assert Options().to_ipi() == IPIOptions()
+
+
+def test_options_ipi_roundtrip_lossless():
+    ipi = IPIOptions(method="ipi_bicgstab", mode="maxreward", atol=1e-6,
+                     max_outer=123, max_inner=7, forcing_eta=0.2, restart=5,
+                     omega=0.9, mpi_sweeps=11, safeguard=False,
+                     impl="pallas_interpret", dtype="float64", halo=3,
+                     gather_dtype="float32")
+    assert Options.from_ipi(ipi).to_ipi() == ipi
+    # and the reverse direction: a database round-trips through IPIOptions
+    db = Options({"-atol": 1e-5, "-method": "mpi", "-mpi_sweeps": 9})
+    again = Options.from_ipi(db.to_ipi())
+    assert again.get("-atol") == 1e-5
+    assert again.get("-method") == "mpi"
+    assert again.get("-mpi_sweeps") == 9
+
+
+def test_options_unknown_key_names_it():
+    with pytest.raises(UnknownOptionError, match=r"-atoll.*-atol"):
+        Options().set("-atoll", 1e-6)
+    with pytest.raises(UnknownOptionError):
+        Options().get("-no_such_thing")
+
+
+def test_options_bad_type_names_key():
+    with pytest.raises(OptionTypeError, match="-max_outer"):
+        Options().set("-max_outer", "many")
+    with pytest.raises(OptionTypeError, match="-atol"):
+        Options().set("-atol", -1.0)           # validator: must be > 0
+    with pytest.raises(OptionTypeError, match="-method"):
+        Options().set("-method", "newton")     # choices
+    with pytest.raises(OptionTypeError, match="-safeguard"):
+        Options().set("-safeguard", "maybe")   # bool coercion
+    # cross-field validation surfaces as an options error too
+    with pytest.raises(OptionTypeError, match="gather_dtype"):
+        Options({"-dtype": "float32", "-gather_dtype": "float64"}).to_ipi()
+
+
+def test_options_string_coercion():
+    o = Options()
+    o.set("-atol", "1e-6")
+    o.set("-max_outer", "250")
+    o.set("-safeguard", "false")
+    o.set("-impl", "none")                     # nullable: "none" -> None
+    assert o.get("-atol") == 1e-6
+    assert o.get("-max_outer") == 250
+    assert o.get("-safeguard") is False
+    assert o.get("-impl") is None
+    # keys work with or without the leading dash
+    assert o.get("atol") == 1e-6
+
+
+def test_options_env_cli_user_precedence():
+    env = {"MADUPITE_OPTIONS": "-method vi -atol=1e-4 -max_outer 900"}
+    o = Options.from_sources(env=env, cli=["-atol=1e-5", "chunk=32"])
+    assert o.get("-method") == "vi"        # env only
+    assert o.get("-atol") == 1e-5          # cli beats env
+    assert o.get("-max_outer") == 900
+    assert o.get("-chunk") == 32
+    o.set("-atol", 1e-7)                   # user beats cli
+    assert o.get("-atol") == 1e-7
+    # and a late low-precedence ingest does not clobber the user value
+    o.ingest_env(env)
+    assert o.get("-atol") == 1e-7
+
+
+def test_options_env_missing_value():
+    with pytest.raises(OptionTypeError, match="missing a value"):
+        Options.from_sources(env={"MADUPITE_OPTIONS": "-method"})
+    with pytest.raises(OptionTypeError, match="key=value"):
+        Options.from_sources(cli=["atol"])
+
+
+def test_options_ksp_type_sugar():
+    o = Options({"-ksp_type": "bicgstab"})
+    assert o.to_ipi().method == "ipi_bicgstab"
+    assert Options({"-ksp_type": "none"}).to_ipi().method == "vi"
+    # explicit -method wins over the sugar
+    o2 = Options({"-ksp_type": "gmres", "-method": "mpi"})
+    assert o2.to_ipi().method == "mpi"
+
+
+def test_option_table_renders_all_keys():
+    table = option_table()
+    for key in ("-method", "-mode", "-layout", "-fleet_bucketing",
+                "-file_stats"):
+        assert key in table
+
+
+# --------------------------------------------------------------------------- #
+# maxreward mode                                                              #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("method", ["vi", "mpi"])
+def test_maxreward_matches_negated_mincost_bitwise(method):
+    """max_a (r + gamma P v) must be exactly the negation of
+    min_a (-r + gamma P v): values bit-for-bit, policies and iteration
+    paths identical."""
+    mdp = generators.garnet(n=150, m=5, k=4, gamma=0.95, seed=3)
+    neg = EllMDP(idx=mdp.idx, val=mdp.val, cost=-np.asarray(mdp.cost),
+                 gamma=mdp.gamma, n_global=mdp.n_global,
+                 m_global=mdp.m_global)
+    kw = dict(atol=1e-9, dtype="float64", max_outer=20000)
+    r_max = driver_solve(mdp, IPIOptions(method=method, mode="maxreward",
+                                         **kw))
+    r_min = driver_solve(neg, IPIOptions(method=method, mode="mincost",
+                                         **kw))
+    np.testing.assert_array_equal(r_max.v, -r_min.v)          # bit-for-bit
+    np.testing.assert_array_equal(r_max.policy, r_min.policy)
+    assert r_max.outer_iterations == r_min.outer_iterations
+    np.testing.assert_array_equal(r_max.trace_residual, r_min.trace_residual)
+
+
+def test_maxreward_krylov_and_fleet():
+    """Krylov methods and the batched engine honor the mode too (values to
+    tolerance, policies exact)."""
+    mdps = [generators.garnet(n=100, m=4, k=3, gamma=0.9, seed=s)
+            for s in (0, 1)]
+    negs = [EllMDP(idx=m.idx, val=m.val, cost=-np.asarray(m.cost),
+                   gamma=m.gamma, n_global=m.n_global, m_global=m.m_global)
+            for m in mdps]
+    kw = dict(atol=1e-9, dtype="float64")
+    r_max = driver_solve_many(mdps, IPIOptions(method="ipi_gmres",
+                                               mode="maxreward", **kw))
+    r_min = driver_solve_many(negs, IPIOptions(method="ipi_gmres", **kw))
+    for a, b in zip(r_max, r_min):
+        np.testing.assert_array_equal(a.policy, b.policy)
+        np.testing.assert_allclose(a.v, -b.v, atol=1e-8)
+
+
+def test_mode_validated():
+    with pytest.raises(ValueError, match="mode"):
+        IPIOptions(mode="minimize")
+    with pytest.raises(ValueError, match="mode"):
+        MDP.from_generator("garnet", n=20, m=2, k=2, mode="bogus")
+
+
+# --------------------------------------------------------------------------- #
+# MDP builders                                                                #
+# --------------------------------------------------------------------------- #
+
+def _chain_fns(n):
+    def P_fn(s, a):
+        left, right = max(s - 1, 0), min(s + 1, n - 1)
+        fwd, bwd = (left, right) if a == 0 else (right, left)
+        return [fwd, bwd], [0.7, 0.3]
+
+    def g_fn(s, a):
+        return 0.0 if s == 0 else 1.0
+
+    return P_fn, g_fn
+
+
+def test_from_functions_matches_generator():
+    n = 60
+    P_fn, g_fn = _chain_fns(n)
+    fmdp = MDP.from_functions(P_fn, g_fn, n, 2, nnz=2, gamma=0.99)
+    assert fmdp.deferred and fmdp.n == n and fmdp.m == 2
+    ref = generators.chain_walk(n=n, gamma=0.99)
+    opts = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64")
+    r1 = driver_solve(fmdp.build(), opts)
+    r2 = driver_solve(ref, opts)
+    np.testing.assert_array_equal(r1.policy, r2.policy)
+    np.testing.assert_allclose(r1.v, r2.v, atol=1e-8)
+
+
+def test_from_functions_vectorized_matches_scalar():
+    n = 40
+
+    def P_vec(rows, a):
+        left = np.clip(rows - 1, 0, n - 1)
+        right = np.clip(rows + 1, 0, n - 1)
+        fwd, bwd = (left, right) if a == 0 else (right, left)
+        return (np.stack([fwd, bwd], -1),
+                np.broadcast_to(np.array([0.7, 0.3]), (len(rows), 2)))
+
+    def g_vec(rows, a):
+        return np.where(rows == 0, 0.0, 1.0)
+
+    P_fn, g_fn = _chain_fns(n)
+    a = MDP.from_functions(P_vec, g_vec, n, 2, nnz=2, gamma=0.99,
+                           vectorized=True).build()
+    b = MDP.from_functions(P_fn, g_fn, n, 2, nnz=2, gamma=0.99).build()
+    np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+    np.testing.assert_array_equal(np.asarray(a.val), np.asarray(b.val))
+    np.testing.assert_array_equal(np.asarray(a.cost), np.asarray(b.cost))
+
+
+def test_from_functions_rejects_bad_successors():
+    def P_fn(s, a):
+        return [s, s + 999], [0.5, 0.5]      # out of range
+
+    mdp = MDP.from_functions(P_fn, lambda s, a: 1.0, 10, 1, nnz=2,
+                             gamma=0.9)
+    with pytest.raises(ValueError, match="successor ids"):
+        mdp.build()
+
+
+def test_from_functions_rejects_successors_in_padding_range():
+    """Successor ids in [n, n_pad_to) must be rejected too — on a padded
+    (sharded) materialization they would silently route probability mass
+    into the zero-value padding states."""
+    def P_fn(s, a):
+        return [min(s + 1, 10)], [1.0]       # id 10 == n: out of range
+
+    mdp = MDP.from_functions(P_fn, lambda s, a: 1.0, 10, 1, nnz=1,
+                             gamma=0.9)
+    with pytest.raises(ValueError, match="successor ids"):
+        # padded block: rows 0..11, pad target 12 — id 10 < 12 but >= n
+        mdp._block(np.arange(12), np.arange(1), n_pad_to=12, m_pad_to=1)
+
+
+def test_from_functions_pad_sign_follows_solve_mode():
+    """A per-solve mode override must flip the never-greedy padding sign
+    of function-backed materialization (padded actions carry +BIG under
+    argmin but -BIG under argmax)."""
+    P_fn, g_fn = _chain_fns(8)
+    mdp = MDP.from_functions(P_fn, g_fn, 8, 2, nnz=2, gamma=0.9)  # mincost
+    _, _, cost = mdp._block(np.arange(8), np.arange(4), n_pad_to=8,
+                            m_pad_to=4, mode="maxreward")
+    assert (cost[:, 2:] < 0).all()           # solve-mode sign, not builder's
+    _, _, cost = mdp._block(np.arange(8), np.arange(4), n_pad_to=8,
+                            m_pad_to=4)
+    assert (cost[:, 2:] > 0).all()
+
+
+def test_from_arrays_and_validation():
+    g = generators.garnet(n=30, m=3, k=3, gamma=0.9, seed=0)
+    m = MDP.from_arrays(idx=g.idx, val=g.val, cost=g.cost, gamma=0.9)
+    assert m.n == 30 and m.m == 3
+    bad_val = np.asarray(g.val) * 2.0         # rows no longer sum to 1
+    with pytest.raises(AssertionError):
+        MDP.from_arrays(idx=g.idx, val=bad_val, cost=g.cost, gamma=0.9)
+    with pytest.raises(ValueError, match="idx\\+val|cost"):
+        MDP.from_arrays(cost=g.cost, gamma=0.9)
+
+
+def test_from_file_roundtrips_mode(tmp_path):
+    g = generators.garnet(n=24, m=3, k=3, gamma=0.9, seed=1)
+    MDP(g, mode="maxreward").save(str(tmp_path / "mdp"))
+    loaded = MDP.from_file(str(tmp_path / "mdp"))
+    assert loaded.mode == "maxreward"
+    np.testing.assert_array_equal(np.asarray(loaded.build().cost),
+                                  np.asarray(g.cost))
+
+
+# --------------------------------------------------------------------------- #
+# Session layer                                                               #
+# --------------------------------------------------------------------------- #
+
+def test_session_solve_matches_driver(tmp_path):
+    mdp = generators.garnet(n=200, m=6, k=4, gamma=0.95, seed=0)
+    opts = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64")
+    ref = driver_solve(mdp, opts)
+    stats = tmp_path / "stats.json"
+    pol = tmp_path / "policy.npy"
+    cost = tmp_path / "value.npy"
+    with madupite_session({"-method": "ipi_gmres", "-atol": 1e-8,
+                           "-dtype": "float64", "-layout": "single",
+                           "-file_stats": str(stats),
+                           "-file_policy": str(pol),
+                           "-file_cost": str(cost)}) as s:
+        r = s.solve(mdp)
+    np.testing.assert_array_equal(r.policy, ref.policy)
+    np.testing.assert_array_equal(r.v, ref.v)
+    entries = json.loads(stats.read_text())
+    assert len(entries) == 1
+    assert entries[0]["method"] == "ipi_gmres"
+    assert entries[0]["solves"][0]["converged"] is True
+    assert entries[0]["solves"][0]["n"] == 200
+    np.testing.assert_array_equal(np.load(pol), ref.policy)
+    np.testing.assert_array_equal(np.load(cost), ref.v)
+
+
+def test_session_per_call_overrides_and_mdp_mode():
+    mdp = MDP.from_generator("garnet", n=80, m=4, k=3, gamma=0.9, seed=2,
+                             mode="maxreward")
+    with Session({"-dtype": "float64", "-layout": "single"}) as s:
+        r_vi = s.solve(mdp, method="vi", atol=1e-6)
+        r_gm = s.solve(mdp, method="ipi_gmres", atol=1e-9)
+        assert s.stats[0]["method"] == "vi"
+        assert s.stats[0]["mode"] == "maxreward"    # builder mode threaded
+        np.testing.assert_array_equal(r_vi.policy, r_gm.policy)
+    with pytest.raises(RuntimeError, match="closed"):
+        s.solve(mdp)
+
+
+def test_session_rejects_unknown_override():
+    with Session() as s:
+        with pytest.raises(UnknownOptionError):
+            s.solve(generators.garnet(n=20, m=2, k=2, seed=0), atoll=1e-6)
+
+
+def test_session_fleet_layout_needs_devices():
+    import jax
+    if len(jax.devices()) > 1:
+        pytest.skip("single-device guard")
+    with Session({"-layout": "fleet"}) as s:
+        with pytest.raises(ValueError, match="one device"):
+            s.placement()
+
+
+# --------------------------------------------------------------------------- #
+# Ragged-fleet bucketing                                                      #
+# --------------------------------------------------------------------------- #
+
+def test_bucket_indices_policies():
+    assert bucket_indices([], policy="auto") == []
+    assert bucket_indices([100, 200, 50], policy="off") == [[0, 1, 2]]
+    # near-equal sizes: one bucket (the homogeneous fast path)
+    assert bucket_indices([100, 100, 110, 105]) == [[0, 1, 3, 2]]
+    # wildly ragged: split
+    buckets = bucket_indices([50, 55, 60, 400, 410])
+    assert buckets == [[0, 1, 2], [3, 4]]
+    # every index exactly once
+    flat = sorted(i for b in buckets for i in b)
+    assert flat == [0, 1, 2, 3, 4]
+    with pytest.raises(ValueError, match="policy"):
+        bucket_indices([1], policy="greedy")
+
+
+def test_solve_fleet_bucketed_matches_independent():
+    """A ragged fleet (n=60 vs n=400) solves per-bucket and returns
+    results in input order, matching independent solves exactly."""
+    mdps = [generators.garnet(n=n, m=4, k=3, gamma=0.9, seed=i)
+            for i, n in enumerate([400, 60, 64, 390])]
+    opts = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64")
+    singles = [driver_solve(m, opts) for m in mdps]
+    with Session({"-method": "ipi_gmres", "-atol": 1e-9,
+                  "-dtype": "float64", "-layout": "single"}) as s:
+        fleet = s.solve_fleet(mdps)
+        rec = s.stats[-1]
+    assert rec["fleet"]["size"] == 4
+    assert sorted(map(sorted, rec["fleet"]["buckets"])) == [[0, 3], [1, 2]]
+    for b, (got, want) in enumerate(zip(fleet, singles)):
+        assert got.converged, f"instance {b}"
+        np.testing.assert_array_equal(got.policy, want.policy,
+                                      err_msg=f"instance {b}")
+        np.testing.assert_allclose(got.v, want.v, atol=1e-9)
+        assert got.outer_iterations == want.outer_iterations
+
+
+def test_solve_fleet_bucketing_off_single_program():
+    mdps = [generators.garnet(n=n, m=3, k=3, gamma=0.9, seed=i)
+            for i, n in enumerate([50, 300])]
+    with Session({"-fleet_bucketing": "off", "-atol": 1e-8,
+                  "-dtype": "float64", "-layout": "single"}) as s:
+        rs = s.solve_fleet(mdps)
+        assert s.stats[-1]["fleet"]["buckets"] == [[0, 1]]
+    assert all(r.converged for r in rs)
+    assert len(rs[0].v) == 50 and len(rs[1].v) == 300
+
+
+def test_solve_fleet_rejects_mixed_modes():
+    a = MDP.from_generator("garnet", n=20, m=2, k=2, seed=0)
+    b = MDP.from_generator("garnet", n=20, m=2, k=2, seed=1,
+                           mode="maxreward")
+    with Session() as s:
+        with pytest.raises(ValueError, match="mode"):
+            s.solve_fleet([a, b])
+
+
+# --------------------------------------------------------------------------- #
+# Back-compat shims + CLI                                                     #
+# --------------------------------------------------------------------------- #
+
+def test_core_solve_shims_deprecated_but_working():
+    import repro.core as core
+    mdp = generators.garnet(n=40, m=3, k=3, gamma=0.9, seed=0)
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        r = core.solve(mdp, IPIOptions(method="vi", atol=1e-6))
+    assert r.converged
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        rs = core.solve_many([mdp, mdp], IPIOptions(method="vi", atol=1e-6))
+    assert all(x.converged for x in rs)
+
+
+def test_cli_options_database(tmp_path):
+    from repro.launch.solve import main
+    stats = tmp_path / "cli.json"
+    rc = main(["--instance", "maze2d", "--size", "8", "--single-device",
+               "--option", "method=vi", "--option", "atol=1e-6",
+               "--option", f"file_stats={stats}"])
+    assert rc == 0
+    entries = json.loads(stats.read_text())
+    assert entries[0]["method"] == "vi"
+    assert entries[0]["layout"] == "single"
+
+
+def test_cli_env_ingestion(tmp_path, monkeypatch):
+    from repro.launch.solve import main
+    monkeypatch.setenv("MADUPITE_OPTIONS", "-method vi -atol 1e-5")
+    stats = tmp_path / "env.json"
+    rc = main(["--instance", "maze2d", "--size", "8", "--single-device",
+               "--option", f"file_stats={stats}"])
+    assert rc == 0
+    assert json.loads(stats.read_text())[0]["method"] == "vi"
