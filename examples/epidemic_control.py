@@ -11,6 +11,12 @@ We model an SIS process with 6 intervention levels trading infection load
 against intervention cost, solve it with iPI-BiCGStab through the session
 layer, and read out the certified optimal intervention thresholds.
 
+The constructors below are written in ``jax.numpy`` over the (traced) row
+indices, so ``MDP.from_functions`` auto-selects the *device* generator
+pipeline: each shard's ELL block is computed inside a compiled program —
+no host numpy in the loop.  Writing them in plain ``numpy`` would work
+identically through the host-callback fallback, just slower at scale.
+
     PYTHONPATH=src python examples/epidemic_control.py
 """
 import numpy as np
@@ -30,29 +36,34 @@ ACT_COST = np.linspace(0.0, 0.15, N_ACT)
 MU = 0.3
 
 
-def transitions(rows: np.ndarray, a: int):
+def transitions(rows, a: int):
     """Vectorized P_fn: successor ids and probabilities for states `rows`
-    under intervention level `a` (ELL rows: [up, down, stay])."""
-    i = rows.astype(np.float64)
-    up = np.clip(BETA[a] * i * (POP - i) / POP**2, 0, 0.49)
-    down = np.clip(MU * i / POP, 0, 0.49)
-    up = np.where(rows == 0, 0.0, up)          # eradicated: absorbing
-    down = np.where(rows == 0, 0.0, down)
-    ids = np.stack([np.clip(rows + 1, 0, POP), np.clip(rows - 1, 0, POP),
-                    rows], axis=-1)
-    probs = np.stack([up, down, 1.0 - up - down], axis=-1)
-    return ids, probs
+    under intervention level `a` (ELL rows: [up, down, stay]).  `rows` is
+    a traced index array; `a` stays a static Python int."""
+    import jax.numpy as jnp
+    i = rows.astype(jnp.float32)
+    up = jnp.clip(float(BETA[a]) * i * (POP - i) / POP**2, 0, 0.49)
+    down = jnp.clip(MU * i / POP, 0, 0.49)
+    up = jnp.where(rows == 0, 0.0, up)         # eradicated: absorbing
+    down = jnp.where(rows == 0, 0.0, down)
+    ids = jnp.stack([jnp.clip(rows + 1, 0, POP), jnp.clip(rows - 1, 0, POP),
+                     rows], axis=-1)
+    probs = jnp.stack([up, down, 1.0 - up - down], axis=-1)
+    return ids.astype(jnp.int32), probs.astype(jnp.float32)
 
 
-def stage_cost(rows: np.ndarray, a: int):
+def stage_cost(rows, a: int):
     """Infection load + intervention cost (zero load once eradicated)."""
-    return np.where(rows == 0, 0.0, 2.0 * rows / POP) + ACT_COST[a]
+    import jax.numpy as jnp
+    return (jnp.where(rows == 0, 0.0, 2.0 * rows / POP)
+            + float(ACT_COST[a])).astype(jnp.float32)
 
 
 mdp = MDP.from_functions(transitions, stage_cost, n=POP + 1, m=N_ACT,
                          nnz=3, gamma=0.999, vectorized=True)
 print(f"SIS MDP: {mdp.n:,} states x {mdp.m} interventions "
-      f"(defined by callables, materialized shard-locally)")
+      f"(defined by callables, materialized shard-locally via the "
+      f"{mdp.materialization()} pipeline)")
 
 with madupite_session({"-method": "ipi_bicgstab", "-atol": 1e-8,
                        "-dtype": "float64"}) as s:

@@ -27,14 +27,14 @@ over a shared default session.
 from __future__ import annotations
 
 from repro.api.fleet import bucket_indices
-from repro.api.mdp import MDP
+from repro.api.mdp import MDP, place_function_fleet
 from repro.api.options import (OPTION_SPECS, Options, OptionTypeError,
                                UnknownOptionError, option_table)
 from repro.api.session import Session, madupite_session
 
 __all__ = ["MDP", "Options", "OptionTypeError", "OPTION_SPECS", "Session",
            "UnknownOptionError", "bucket_indices", "madupite_session",
-           "option_table", "solve", "solve_fleet"]
+           "option_table", "place_function_fleet", "solve", "solve_fleet"]
 
 _default_session: Session | None = None
 

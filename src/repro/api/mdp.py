@@ -10,13 +10,38 @@ containers (:class:`repro.core.mdp.EllMDP` / ``DenseMDP``):
 * :meth:`MDP.from_file` — the block-manifest format of
   :mod:`repro.core.io` (each worker can load only its rows);
 * :meth:`MDP.from_generator` — the built-in instance families
-  (:data:`repro.core.generators.REGISTRY`);
+  (:data:`repro.core.generators.REGISTRY`), optionally *deferred*
+  (``deferred=True``: jit-able device constructors from
+  :data:`repro.core.generators.FN_REGISTRY`, so instances scale past host
+  memory);
 * :meth:`MDP.from_functions` — the MDP is *defined by callables*
   ``P_fn(s, a) -> (successor ids, probabilities)`` and ``g_fn(s, a) ->
-  stage cost`` and never materialized host-side as one tensor: the session
-  layer materializes each device's ELL block **shard-locally on device**
-  (``jax.make_array_from_callback``), so million-state MDPs fit in
-  aggregate device memory even when no single host buffer could hold them.
+  stage cost`` and never materialized host-side as one tensor.
+
+Function-backed MDPs materialize through one of two pipelines:
+
+* **device** (the scale path): the constructors are *jit-able* — traced
+  over a state-index array with the action as a static Python int — and
+  each shard's padded ELL block is produced **inside a compiled program**
+  (index-space ``iota`` + ``vmap``, ``lax.map`` over row chunks), written
+  straight into that device's shard.  No host numpy runs anywhere in the
+  loop, so construction throughput is device-bound and million/billion
+  state spaces never touch a host-global tensor.
+* **host** (the compatibility path): plain-numpy callables are evaluated
+  row-block at a time on the host and placed per shard via
+  ``jax.make_array_from_callback`` — exactly the old behavior.
+
+The pipeline is picked per materialization by
+:meth:`MDP.materialization`: a ``device=True/False`` pin on
+:meth:`from_functions` wins, then the session's ``-mdp_materialize``
+option, then auto-detection (``jax.eval_shape`` on the constructors —
+numpy callables fail tracing and fall back to host).
+
+Fleets of function-backed MDPs place under the *fleet-sharded* layouts
+too (:func:`place_function_fleet`): each device materializes only the
+``(B_local, n_local, m_local)`` block of the instances it owns, so both
+the instance dim and the state dim of the construction scale with the
+mesh.
 
 ``mode="mincost"`` (default) solves ``min_a``; ``mode="maxreward"`` reads
 ``cost`` as a reward and solves ``max_a`` — threaded through the solver as
@@ -26,25 +51,38 @@ containers (:class:`repro.core.mdp.EllMDP` / ``DenseMDP``):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.core import io as core_io
 from repro.core import partition
+from repro.core.generators import FN_REGISTRY as FN_GENERATORS
 from repro.core.generators import REGISTRY as GENERATORS
 from repro.core.ipi import MODES
 from repro.core.mdp import DenseMDP, EllMDP
 from repro.core.mdp import MDP as CoreMDP
 
-__all__ = ["MDP"]
+__all__ = ["MDP", "place_function_fleet"]
 
 _BIG = 1e30
+
+# rows per lax.map step in the device pipeline: bounds the constructor
+# intermediates to a fixed chunk so a 100M-row shard runs the same per-step
+# working set as a 1M-row one.  Large on purpose — the map carry machinery
+# costs ~10x a fused whole-block build, so shards at or below the chunk
+# (the common case) take the single-vmap fast path
+_DEVICE_CHUNK = 1 << 20
+
+MATERIALIZE_MODES = ("auto", "host", "device")
 
 
 @dataclasses.dataclass(frozen=True)
 class _FunctionSpec:
-    """Deferred MDP definition: callables + shape, materialized per mesh."""
+    """Deferred MDP definition: callables + shape, materialized per mesh.
+
+    ``device`` pins the pipeline (``None`` = resolve per materialization:
+    option, then trace auto-detection)."""
 
     p_fn: Callable
     g_fn: Callable
@@ -53,6 +91,161 @@ class _FunctionSpec:
     nnz: int
     gamma: float
     vectorized: bool
+    device: bool | None = None
+
+
+# --------------------------------------------------------------------------- #
+# Device-side (jit) materialization pipeline                                  #
+# --------------------------------------------------------------------------- #
+
+def _device_rows_block(spec: _FunctionSpec, rows, acts: tuple, mode: str):
+    """One traced ELL block: ``rows`` (traced global ids) x ``acts``
+    (static global action ids, padding included).
+
+    Mirrors the host ``MDP._block`` semantics bit-for-bit: padded states
+    (``rows >= n``) are zero-cost absorbing self-loops; padded action
+    columns (``a >= m``) carry the never-greedy ``±BIG`` cost of the solve
+    ``mode`` and point at state 0.  Constructors see the raw row ids —
+    including shard-padding ids ``>= n``, whose outputs are masked — so
+    they must tolerate any int32 input (clip/where, not assert).
+
+    Returns ``(idx, val, cost, bad)`` where ``bad`` is a per-row ``(R, 2)``
+    count of validation failures over the *real* entries — successor ids
+    outside ``[0, n)`` and probability rows not summing to ~1 — folded into
+    the same compiled program so the host raise costs one scalar readback.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    big = _BIG if mode == "mincost" else -_BIG
+    K, R = spec.nnz, rows.shape[0]
+    pad_row = rows >= spec.n
+    bad_ids = jnp.zeros((R,), jnp.int32)
+    bad_sum = jnp.zeros((R,), jnp.int32)
+    self_idx = jnp.zeros((R, K), jnp.int32).at[:, 0].set(
+        rows.astype(jnp.int32))
+    self_val = jnp.zeros((R, K), jnp.float32).at[:, 0].set(1.0)
+
+    def conform(what, a, arr, shape, dtype):
+        arr = jnp.asarray(arr)
+        if arr.shape != shape:
+            raise ValueError(
+                f"device {what}(rows, a={a}) must return shape {shape} "
+                f"(nnz={K} slots per row — zero-pad unused slots), got "
+                f"{arr.shape}")
+        return arr.astype(dtype)
+
+    cols_i, cols_v, cols_c = [], [], []
+    for a in acts:
+        if a >= spec.m:
+            # never-greedy padded action: cost ±BIG, self-transition to 0
+            cols_i.append(jnp.zeros((R, K), jnp.int32))
+            cols_v.append(self_val)
+            cols_c.append(jnp.full((R,), big, jnp.float32))
+            continue
+        if spec.vectorized:
+            ids, probs = spec.p_fn(rows, int(a))
+            ids = conform("P_fn", a, ids, (R, K), jnp.int32)
+            probs = conform("P_fn", a, probs, (R, K), jnp.float32)
+            g = jnp.broadcast_to(
+                jnp.asarray(spec.g_fn(rows, int(a)), jnp.float32), (R,))
+        else:
+            def one(r, a=a):
+                i, p = spec.p_fn(r, int(a))
+                return (conform("P_fn", a, i, (K,), jnp.int32),
+                        conform("P_fn", a, p, (K,), jnp.float32),
+                        jnp.asarray(spec.g_fn(r, int(a)),
+                                    jnp.float32).reshape(()))
+            ids, probs, g = jax.vmap(one)(rows)
+        real = ~pad_row
+        bad_ids = bad_ids + jnp.where(
+            real, ((ids < 0) | (ids >= spec.n)).sum(-1, dtype=jnp.int32), 0)
+        bad_sum = bad_sum + jnp.where(
+            real & (jnp.abs(probs.astype(jnp.float32).sum(-1) - 1.0) > 1e-4),
+            1, 0)
+        cols_i.append(jnp.where(pad_row[:, None], self_idx, ids))
+        cols_v.append(jnp.where(pad_row[:, None], self_val, probs))
+        cols_c.append(jnp.where(pad_row, jnp.float32(0.0), g))
+    return (jnp.stack(cols_i, axis=1), jnp.stack(cols_v, axis=1),
+            jnp.stack(cols_c, axis=1), jnp.stack([bad_ids, bad_sum], axis=1))
+
+
+def _map_row_chunks(fn, rows, pad_id):
+    """Apply ``fn`` over ``rows`` in fixed ``_DEVICE_CHUNK`` pieces via
+    ``lax.map`` (rows padded with ``pad_id`` — a padding state id, whose
+    block content is discarded — to the chunk multiple)."""
+    import jax
+    import jax.numpy as jnp
+
+    n_rows = rows.shape[0]
+    if n_rows <= _DEVICE_CHUNK:
+        return fn(rows)
+    pad = (-n_rows) % _DEVICE_CHUNK
+    if pad:
+        rows = jnp.concatenate(
+            [rows, jnp.full((pad,), pad_id, rows.dtype)])
+    out = jax.lax.map(fn, rows.reshape(-1, _DEVICE_CHUNK))
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n_rows + pad,) + x.shape[2:])[:n_rows], out)
+
+
+# Compiled block builders are shared *across* MDP objects: a fleet sweep
+# reusing one (P_fn, g_fn) pair with different gammas compiles exactly one
+# program per (shape, action-block, mode).  Bounded like the driver's
+# run-chunk cache; entries hold compiled code, not device arrays, so the
+# session-close eviction (device shards) does not need to touch this.
+_BUILDER_CACHE: dict = {}
+
+
+def _device_builder(spec: _FunctionSpec, n_rows: int, acts: tuple,
+                    mode: str):
+    """jit'd ``f(row0) -> (idx, val, cost)`` for ``n_rows`` rows starting
+    at (traced) global row ``row0``, covering action ids ``acts``."""
+    import jax
+    import jax.numpy as jnp
+
+    key = (dataclasses.replace(spec, gamma=0.0), n_rows, acts, mode)
+    f = _BUILDER_CACHE.get(key)
+    if f is None:
+        if len(_BUILDER_CACHE) > 64:
+            _BUILDER_CACHE.pop(next(iter(_BUILDER_CACHE)))
+
+        def build(row0):
+            rows = row0 + jnp.arange(n_rows, dtype=jnp.int32)
+            idx, val, cost, bad = _map_row_chunks(
+                lambda r: _device_rows_block(spec, r, acts, mode),
+                rows, jnp.int32(min(spec.n, np.iinfo(np.int32).max)))
+            return idx, val, cost, bad.sum(0)
+
+        f = jax.jit(build)
+        _BUILDER_CACHE[key] = f
+    return f
+
+
+def _checked_block(builder, row0, spec: _FunctionSpec) -> tuple:
+    """Run a compiled block builder and surface its validation counters as
+    the host-path errors (one scalar readback per block)."""
+    import jax.numpy as jnp
+    idx, val, cost, bad = builder(jnp.int32(row0))
+    n_ids, n_sum = (int(x) for x in np.asarray(bad))
+    if n_ids:
+        raise ValueError(f"P_fn produced successor ids outside "
+                         f"[0, {spec.n}) ({n_ids} offending entries)")
+    if n_sum:
+        raise ValueError(f"P_fn probability rows do not sum to ~1 "
+                         f"({n_sum} offending (s, a) rows)")
+    return idx, val, cost
+
+
+def _dummy_fleet_block(lo: int, n_rows: int, n_acts: int, K: int):
+    """A zero-cost dummy instance block (fleet padding): valid absorbing
+    self-loops, optimal value identically 0 — frozen at k=0."""
+    import jax.numpy as jnp
+    rows = lo + jnp.arange(n_rows, dtype=jnp.int32)
+    idx = jnp.zeros((n_rows, n_acts, K), jnp.int32).at[..., 0].set(
+        rows[:, None])
+    val = jnp.zeros((n_rows, n_acts, K), jnp.float32).at[..., 0].set(1.0)
+    return idx, val, jnp.zeros((n_rows, n_acts), jnp.float32)
 
 
 class MDP:
@@ -73,6 +266,7 @@ class MDP:
         self._spec = spec
         self.mode = mode
         self._device_cache: dict = {}
+        self._trace_ok: tuple | None = None   # lazily-probed (ok, reason)
 
     # ---- constructors ------------------------------------------------------
     @classmethod
@@ -115,9 +309,23 @@ class MDP:
 
     @classmethod
     def from_generator(cls, name: str, *, mode: str = "mincost",
-                       **kw) -> "MDP":
+                       deferred: bool = False, **kw) -> "MDP":
         """One of the built-in instance families
-        (``garnet``/``maze2d``/``sis``/``chain_walk``)."""
+        (``garnet``/``maze2d``/``sis``/``chain_walk``).
+
+        ``deferred=True`` returns a *function-backed* MDP built on the
+        family's jit-able device constructors
+        (:data:`repro.core.generators.FN_REGISTRY`): nothing materializes
+        until placement, and each shard's block is computed on device —
+        the construction path that scales past host memory.
+        """
+        if deferred:
+            if name not in FN_GENERATORS:
+                raise ValueError(
+                    f"unknown generator {name!r}; deferred families: "
+                    f"{sorted(FN_GENERATORS)}")
+            return cls.from_functions(**FN_GENERATORS[name](**kw),
+                                      mode=mode, device=True)
         if name not in GENERATORS:
             raise ValueError(f"unknown generator {name!r}; pick one of "
                              f"{sorted(GENERATORS)}")
@@ -127,7 +335,8 @@ class MDP:
     def from_functions(cls, P_fn: Callable, g_fn: Callable, n: int, m: int,
                        *, nnz: int, gamma: float = 0.99,
                        mode: str = "mincost",
-                       vectorized: bool = False) -> "MDP":
+                       vectorized: bool = False,
+                       device: bool | None = None) -> "MDP":
         """Define the MDP by callables; materialize lazily, shard-locally.
 
         ``P_fn(s, a) -> (ids, probs)`` gives state ``s``'s successors under
@@ -136,7 +345,20 @@ class MDP:
         ``mode="maxreward"``).  With ``vectorized=True`` the callables take
         a whole *array* of states at once — ``P_fn(rows, a) -> (ids
         (len(rows), nnz), probs (len(rows), nnz))``, ``g_fn(rows, a) ->
-        (len(rows),)`` — which is strongly recommended beyond ~10^5 states.
+        (len(rows),)``.
+
+        ``device`` picks the materialization pipeline:
+
+        * ``True`` — the callables are jit-able (written in ``jax.numpy``
+          over a *traced* state-index input; the action stays a static
+          Python int) and every shard's block is computed inside a
+          compiled program.  Device constructors must return exactly
+          ``nnz`` slots per row (zero-pad unused ones) and tolerate row
+          ids ``>= n`` (shard padding; outputs masked).
+        * ``False`` — plain-numpy callables, evaluated on the host per
+          shard (the compatibility path).
+        * ``None`` (default) — decided at materialization time by the
+          ``-mdp_materialize`` option and trace auto-detection.
 
         Nothing is evaluated here.  At solve time the session materializes
         exactly the row block each device owns (padding included) directly
@@ -150,7 +372,9 @@ class MDP:
             raise ValueError(f"gamma must lie in (0, 1), got {gamma}")
         return cls(None, mode=mode,
                    spec=_FunctionSpec(P_fn, g_fn, int(n), int(m), int(nnz),
-                                      float(gamma), bool(vectorized)))
+                                      float(gamma), bool(vectorized),
+                                      None if device is None else
+                                      bool(device)))
 
     # ---- introspection -----------------------------------------------------
     @property
@@ -176,32 +400,86 @@ class MDP:
         return (f"MDP({kind}, n={self.n}, m={self.m}, "
                 f"gamma={self.gamma}, mode={self.mode!r})")
 
+    # ---- materialization pipeline selection --------------------------------
+    def _device_traceable(self) -> tuple[bool, str | None]:
+        """Probe (once) whether the constructors trace: ``eval_shape`` on a
+        tiny abstract row block.  numpy callables raise a tracer-conversion
+        error here and select the host pipeline."""
+        if self._trace_ok is None:
+            import jax
+            import jax.numpy as jnp
+            spec = self._spec
+            try:
+                jax.eval_shape(
+                    lambda r: _device_rows_block(spec, r, (0,), "mincost"),
+                    jax.ShapeDtypeStruct((4,), jnp.int32))
+                self._trace_ok = (True, None)
+            except Exception as e:          # noqa: BLE001 — any trace failure
+                self._trace_ok = (False, f"{type(e).__name__}: {e}")
+        return self._trace_ok
+
+    def materialization(self, option: str = "auto") -> str:
+        """Resolve the pipeline for this MDP: ``"device"`` or ``"host"``.
+
+        Precedence: the ``device=`` pin given to :meth:`from_functions`,
+        then ``option`` (the ``-mdp_materialize`` database value), then
+        auto-detection.  Raises when device is *required* but the
+        constructors do not trace.
+        """
+        if not self.deferred:
+            raise ValueError("materialization() applies to function-backed "
+                             "MDPs only")
+        if option not in MATERIALIZE_MODES:
+            raise ValueError(f"unknown materialization {option!r}; pick one "
+                             f"of {MATERIALIZE_MODES}")
+        pinned = self._spec.device
+        if pinned is False or (pinned is None and option == "host"):
+            return "host"
+        ok, why = self._device_traceable()
+        if ok:
+            return "device"
+        if pinned is True or option == "device":
+            raise ValueError(
+                f"device materialization was requested but the constructors "
+                f"do not trace ({why}); write P_fn/g_fn in jax.numpy over "
+                f"the traced state indices, or drop to device=False / "
+                f"-mdp_materialize host")
+        return "host"
+
     # ---- materialization ---------------------------------------------------
-    def build(self) -> CoreMDP:
-        """The core container, materialized host-side if function-backed."""
+    def build(self, materialize: str = "auto") -> CoreMDP:
+        """The core container, fully materialized (single-device / host
+        placement).  Function-backed MDPs run the device pipeline (one
+        compiled program over the whole index space) when it applies."""
         if self._core is not None:
             return self._core
-        if None not in self._device_cache:
-            s = self._spec
-            idx, val, cost = self._block(np.arange(s.n), np.arange(s.m),
-                                         n_pad_to=s.n, m_pad_to=s.m)
+        key = ("built", self.materialization(materialize))
+        if key not in self._device_cache:
             import jax.numpy as jnp
-            self._device_cache[None] = EllMDP(
+            s = self._spec
+            if key[1] == "device":
+                f = _device_builder(s, s.n, tuple(range(s.m)), "mincost")
+                idx, val, cost = _checked_block(f, 0, s)
+            else:
+                idx, val, cost = self._block(np.arange(s.n), np.arange(s.m),
+                                             n_pad_to=s.n, m_pad_to=s.m)
+            self._device_cache[key] = EllMDP(
                 idx=jnp.asarray(idx), val=jnp.asarray(val),
                 cost=jnp.asarray(cost), gamma=s.gamma, n_global=s.n,
                 m_global=s.m)
-        return self._device_cache[None]
+        return self._device_cache[key]
 
-    def place(self, mesh, layout: str = "1d", *,
-              mode: str | None = None) -> CoreMDP:
+    def place(self, mesh, layout: str = "1d", *, mode: str | None = None,
+              materialize: str = "auto") -> CoreMDP:
         """The core container placed on ``mesh`` under ``layout``.
 
         Array-backed MDPs are returned as-is (the driver pads + places
         them).  Function-backed MDPs are materialized **shard-locally**:
-        each addressable device's padded ELL block is computed from the
-        callables and written straight into that device's shard via
-        ``jax.make_array_from_callback``, then the driver's placement
-        detects the arrays as already placed
+        each addressable device's padded ELL block is computed — by the
+        compiled device pipeline or the host callbacks, per
+        :meth:`materialization` — and written straight into that device's
+        shard via ``jax.make_array_from_callback``, then the driver's
+        placement detects the arrays as already placed
         (:func:`repro.core.partition.already_placed`) and passes them
         through.
 
@@ -213,37 +491,57 @@ class MDP:
         if self._core is not None:
             return self._core
         if mesh is None:
-            return self.build()
-        key = (mesh, layout, mode or self.mode)
+            return self.build(materialize)
+        key = (mesh, layout, mode or self.mode,
+               self.materialization(materialize))
         if key not in self._device_cache:
-            self._device_cache[key] = self._place_sharded(mesh, layout,
-                                                          mode or self.mode)
+            self._device_cache[key] = self._place_sharded(
+                mesh, layout, mode or self.mode, device=key[3] == "device")
         return self._device_cache[key]
 
-    def _place_sharded(self, mesh, layout: str, mode: str) -> EllMDP:
+    def evict(self, mesh=None) -> int:
+        """Drop cached materializations — the shards placed on ``mesh``,
+        or every cached container when ``mesh`` is None.  Returns the
+        number of entries dropped.  The session layer calls this on close
+        so reused builders do not pin device memory for dead meshes."""
+        if mesh is None:
+            n = len(self._device_cache)
+            self._device_cache.clear()
+            return n
+        dead = [k for k in self._device_cache if k[0] == mesh]
+        for k in dead:
+            del self._device_cache[k]
+        return len(dead)
+
+    def _place_sharded(self, mesh, layout: str, mode: str, *,
+                       device: bool) -> EllMDP:
         import jax
+        import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         axes = partition.mesh_axes(mesh, layout)
         if axes.fleet is not None:
-            raise ValueError(f"layout {layout!r} shards the fleet dim; a "
-                             "single function-backed MDP places under "
-                             "'1d'/'2d'")
+            raise ValueError(
+                f"layout {layout!r} shards the fleet dim; a single "
+                "function-backed MDP places under '1d'/'2d' — solve a "
+                "fleet of them via Session.solve_fleet / "
+                "place_function_fleet")
         s = self._spec
-        n_to = -(-s.n // partition._axis_size(mesh, axes.state)) \
-            * partition._axis_size(mesh, axes.state)
-        m_to = -(-s.m // partition._axis_size(mesh, axes.action)) \
-            * partition._axis_size(mesh, axes.action)
+        n_to, m_to = partition.padded_extents(mesh, axes, s.n, s.m)
         blocks: dict = {}
 
         def block(index) -> tuple:
-            rs, as_ = index[0], index[1]
-            lo, hi, _ = rs.indices(n_to)
-            alo, ahi, _ = as_.indices(m_to)
+            (lo, hi), (alo, ahi) = partition.shard_block(
+                index[:2], (n_to, m_to))
             bkey = (lo, hi, alo, ahi)
             if bkey not in blocks:
-                blocks[bkey] = self._block(
-                    np.arange(lo, hi), np.arange(alo, ahi),
-                    n_pad_to=n_to, m_pad_to=m_to, mode=mode)
+                if device:
+                    f = _device_builder(s, hi - lo,
+                                        tuple(range(alo, ahi)), mode)
+                    blocks[bkey] = _checked_block(f, lo, s)
+                else:
+                    blocks[bkey] = self._block(
+                        np.arange(lo, hi), np.arange(alo, ahi),
+                        n_pad_to=n_to, m_pad_to=m_to, mode=mode)
             return blocks[bkey]
 
         sh3 = NamedSharding(mesh, P(axes.state, axes.action, None))
@@ -261,7 +559,8 @@ class MDP:
     def _block(self, rows: np.ndarray, acts: np.ndarray, *,
                n_pad_to: int, m_pad_to: int,
                mode: str | None = None) -> tuple:
-        """One ELL block for global ``rows`` x ``acts`` (padding included).
+        """One host-pipeline ELL block for global ``rows`` x ``acts``
+        (padding included).
 
         Padding mirrors :func:`repro.core.partition.pad_mdp` exactly:
         padded states are zero-cost absorbing self-loops; padded actions
@@ -297,6 +596,13 @@ class MDP:
                         f"vectorized P_fn must return (ids, probs) of "
                         f"shape ({len(rr)}, {K}), got {ids.shape} / "
                         f"{probs.shape}")
+                rowsum = np.asarray(probs, np.float64).sum(-1)
+                bad = np.nonzero(np.abs(rowsum - 1.0) > 1e-4)[0]
+                if bad.size:
+                    raise ValueError(
+                        f"P_fn(s={int(rr[bad[0]])}, a={int(a)}) "
+                        f"probabilities sum to {rowsum[bad[0]]:.6g}, "
+                        f"expected ~1")
                 idx[real_r, j, :] = ids
                 val[real_r, j, :] = probs
                 cost[real_r, j] = np.asarray(s.g_fn(rr, int(a)))
@@ -309,6 +615,16 @@ class MDP:
                         raise ValueError(
                             f"P_fn({r}, {a}) returned {len(ids)} "
                             f"successors > nnz={K}")
+                    if len(ids) != len(probs):
+                        raise ValueError(
+                            f"P_fn(s={int(r)}, a={int(a)}) returned "
+                            f"{len(ids)} successor ids but {len(probs)} "
+                            f"probabilities")
+                    total = float(np.asarray(probs, np.float64).sum())
+                    if abs(total - 1.0) > 1e-4:
+                        raise ValueError(
+                            f"P_fn(s={int(r)}, a={int(a)}) probabilities "
+                            f"sum to {total:.6g}, expected ~1")
                     row_i = np.zeros(K, np.int32)
                     row_v = np.zeros(K, np.float32)
                     row_i[:len(ids)] = ids
@@ -331,3 +647,92 @@ class MDP:
         if not isinstance(core, EllMDP):
             raise ValueError("save() supports the ELL representation only")
         core_io.save_mdp(path, core, n_blocks=n_blocks, mode=self.mode)
+
+
+# --------------------------------------------------------------------------- #
+# Fleet-sharded materialization of function-backed fleets                      #
+# --------------------------------------------------------------------------- #
+
+def place_function_fleet(mdps: Sequence[MDP], mesh, layout: str,
+                         mode: str = "mincost", *,
+                         pad_fleet: bool = True) -> EllMDP:
+    """Materialize a fleet of function-backed MDPs straight into the
+    fleet-sharded layouts (``layout="fleet"/"fleet2d"``).
+
+    Each device owns ``(B_local, n_local, m_local)`` — a slice of
+    *instances* on top of its state/action slice — and materializes
+    exactly that block from the owned instances' device constructors
+    (each runs as a compiled program).  Neither the instance dim nor the
+    state dim ever exists host-globally, so fleet construction scales
+    with the mesh in both directions.
+
+    Instances must share the action count and ``nnz``; heterogeneous
+    state counts pad to the fleet maximum (absorbing zero-cost states,
+    like :func:`repro.core.mdp.stack_mdps`).  ``B`` pads to the
+    fleet-axis multiple with zero-cost dummy instances
+    (``pad_fleet=False`` raises instead).  The returned batched container
+    carries exactly the shardings :func:`repro.core.partition.shard_mdp`
+    would assign, so the driver's placement passes it through untouched.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = partition.mesh_axes(mesh, layout)
+    if axes.fleet is None:
+        raise ValueError(f"place_function_fleet serves the fleet layouts, "
+                         f"got {layout!r}; a single function-backed MDP "
+                         f"places via MDP.place")
+    mdps = list(mdps)
+    specs = []
+    for i, m_ in enumerate(mdps):
+        if not isinstance(m_, MDP) or not m_.deferred:
+            raise ValueError(f"place_function_fleet wants function-backed "
+                             f"MDPs; instance {i} is "
+                             f"{type(m_).__name__}")
+        if m_.materialization("device") != "device":   # raises with reason
+            raise ValueError(f"instance {i} cannot materialize on device")
+        specs.append(m_._spec)
+    K, m_acts = specs[0].nnz, specs[0].m
+    if any(sp.nnz != K or sp.m != m_acts for sp in specs):
+        raise ValueError(
+            f"fleet instances must share the action count and nnz, got "
+            f"m={sorted({sp.m for sp in specs})} "
+            f"nnz={sorted({sp.nnz for sp in specs})}")
+    n_to, m_to = partition.padded_extents(
+        mesh, axes, max(sp.n for sp in specs), m_acts)
+    b = len(mdps)
+    b_to = partition.fleet_padded_batch(
+        b, partition._axis_size(mesh, axes.fleet), pad_fleet)
+    shape3 = (b_to, n_to, m_to)
+    sh4 = NamedSharding(mesh, P(axes.fleet, axes.state, axes.action, None))
+    sh3 = NamedSharding(mesh, P(axes.fleet, axes.state, axes.action))
+    blocks: dict = {}
+
+    def block(index) -> tuple:
+        (b0, b1), (lo, hi), (alo, ahi) = partition.shard_block(
+            index[:3], shape3)
+        bkey = (b0, b1, lo, hi, alo, ahi)
+        if bkey not in blocks:
+            acts = tuple(range(alo, ahi))
+            per = []
+            for bi in range(b0, b1):
+                if bi < b:
+                    f = _device_builder(specs[bi], hi - lo, acts, mode)
+                    per.append(_checked_block(f, lo, specs[bi]))
+                else:
+                    per.append(_dummy_fleet_block(lo, hi - lo, len(acts), K))
+            blocks[bkey] = tuple(jnp.stack(arrs) for arrs in zip(*per))
+        return blocks[bkey]
+
+    idx = jax.make_array_from_callback(
+        shape3 + (K,), sh4, lambda i: block(i)[0])
+    val = jax.make_array_from_callback(
+        shape3 + (K,), sh4, lambda i: block(i)[1])
+    cost = jax.make_array_from_callback(shape3, sh3, lambda i: block(i)[2])
+    blocks.clear()
+    gammas = tuple(sp.gamma for sp in specs)
+    gammas = gammas + (gammas[-1],) * (b_to - b)
+    gamma = gammas[0] if len(set(gammas)) == 1 else gammas
+    return EllMDP(idx=idx, val=val, cost=cost, gamma=gamma,
+                  n_global=n_to, m_global=m_to)

@@ -168,6 +168,10 @@ _SPECS = [
                validate=_positive("mpi_sweeps")),
     OptionSpec("-safeguard", bool, True,
                "monotone (VI-fallback) safeguard for Krylov steps"),
+    OptionSpec("-deterministic_dots", bool, False,
+               "pin the GMRES projection accumulation order so "
+               "fleet-sharded Krylov values are bit-equal to the "
+               "replicated layout"),
     OptionSpec("-impl", str, None, "kernel implementation override",
                choices=("xla", "pallas", "pallas_interpret"), nullable=True),
     OptionSpec("-dtype", str, "float32", "value-vector dtype",
@@ -196,6 +200,11 @@ _SPECS = [
                "group ragged fleets by state count into pad-efficient "
                "buckets (one compiled program per bucket)",
                choices=("auto", "off")),
+    OptionSpec("-mdp_materialize", str, "auto",
+               "function-backed MDP materialization: device (jit the row "
+               "constructors, no host numpy), host (numpy callbacks), or "
+               "auto (device when the constructors trace)",
+               choices=("auto", "host", "device")),
     OptionSpec("-checkpoint_dir", str, None,
                "persist solver state between chunks", nullable=True),
     OptionSpec("-verbose", bool, False, "per-chunk progress lines"),
@@ -218,7 +227,8 @@ _IPI_FIELDS = {
     "-max_outer": "max_outer", "-max_inner": "max_inner",
     "-inner_forcing": "forcing_eta", "-restart": "restart",
     "-omega": "omega", "-mpi_sweeps": "mpi_sweeps",
-    "-safeguard": "safeguard", "-impl": "impl", "-dtype": "dtype",
+    "-safeguard": "safeguard", "-deterministic_dots": "deterministic_dots",
+    "-impl": "impl", "-dtype": "dtype",
     "-halo": "halo", "-gather_dtype": "gather_dtype",
 }
 

@@ -31,13 +31,15 @@ import dataclasses
 import json
 import os
 import time
+import weakref
 from typing import Any, Mapping, Sequence
 
 import numpy as np
 
 from repro.api.fleet import bucket_indices
-from repro.api.mdp import MDP
+from repro.api.mdp import MDP, place_function_fleet
 from repro.api.options import Options
+from repro.core import partition
 from repro.core import driver
 from repro.core.driver import SolveResult
 from repro.core.mdp import DenseMDP, EllMDP
@@ -66,6 +68,14 @@ class Session:
         self._stats: list[dict] = []
         self._closed = False
         self._clear_cache = clear_cache_on_close
+        # function-backed builders this session placed on a mesh: their
+        # mesh-keyed device shards are evicted on close (the builders may
+        # outlive the session, but the meshes should not pin device memory)
+        self._placed_mdps: weakref.WeakSet = weakref.WeakSet()
+        # device-materialized fleet containers, keyed by (mesh, layout,
+        # mode, pad_fleet, instance identities): warm repeated solve_fleet
+        # calls skip re-construction, mirroring MDP.place's per-MDP cache
+        self._fleet_cache: dict = {}
         _sync_x64(self.options)
 
     # ---- lifecycle ---------------------------------------------------------
@@ -76,15 +86,27 @@ class Session:
         self.close()
 
     def close(self) -> None:
-        """Release the compiled run-chunk programs and cached meshes.
+        """Release the compiled run-chunk programs, cached meshes and the
+        device MDP shards this session placed.
 
         ``clear_cache_on_close=False`` (the one-shot convenience wrappers)
         leaves the process-wide run-chunk cache alone so other live
         sessions keep their warm programs; the cache itself is bounded
-        (:data:`repro.core.driver._RUN_CHUNK_CACHE` evicts past 64)."""
+        (:data:`repro.core.driver._RUN_CHUNK_CACHE` evicts past 64).
+        Function-backed builders cache their materialized shards keyed by
+        mesh (:attr:`repro.api.MDP._device_cache`); evicting the entries
+        for this session's meshes stops reused builders from pinning
+        device memory for meshes that no longer solve anything."""
         if not self._closed:
             if self._clear_cache:
                 driver.clear_run_cache()
+            meshes = set(self._mesh_cache.values())
+            if self._mesh_override is not None:
+                meshes.add(self._mesh_override)
+            for mdp in list(self._placed_mdps):
+                for mesh in meshes:
+                    mdp.evict(mesh)
+            self._fleet_cache.clear()
             self._mesh_cache.clear()
             self._closed = True
 
@@ -159,7 +181,10 @@ class Session:
         mdp = self._wrap(mdp, opts)
         ipi = self._ipi(opts, mdp.mode)
         mesh, layout = self.placement(opts)
-        core = mdp.place(mesh, layout, mode=ipi.mode)
+        core = mdp.place(mesh, layout, mode=ipi.mode,
+                         materialize=opts.get("-mdp_materialize"))
+        if mdp.deferred and mesh is not None:
+            self._placed_mdps.add(mdp)
         t0 = time.time()
         r = driver.solve(core, ipi, mesh=mesh, layout=layout,
                          checkpoint_dir=opts.get("-checkpoint_dir"),
@@ -180,6 +205,13 @@ class Session:
         each bucket runs one :func:`repro.core.driver.solve_many` program;
         results come back in input order.  All instances must share one
         ``mode``.
+
+        A bucket of *function-backed* MDPs placed under a fleet-sharded
+        layout skips host materialization entirely: each device
+        materializes only the ``(B_local, n_local)`` block of the
+        instances it owns from the jit'd constructors
+        (:func:`repro.api.mdp.place_function_fleet`), so both the fleet
+        and state dims of construction scale with the mesh.
         """
         if not mdps:
             return []
@@ -191,7 +223,6 @@ class Session:
                              f"{sorted(modes)}; solve mixed-mode instances "
                              f"separately")
         ipi = self._ipi(opts, modes.pop())
-        cores = [m.build() for m in wrapped]
         buckets = bucket_indices([m.n for m in wrapped],
                                  policy=opts.get("-fleet_bucketing"))
         ckpt = opts.get("-checkpoint_dir")
@@ -201,9 +232,13 @@ class Session:
             mesh, layout = self.placement(opts, fleet_size=len(bucket))
             bucket_ckpt = ckpt if ckpt is None or len(buckets) == 1 \
                 else os.path.join(ckpt, f"bucket{j}")
+            bmdps = [wrapped[i] for i in bucket]
+            payload = self._fleet_cores(bmdps, mesh, layout, ipi.mode, opts)
+            origin = None if isinstance(payload, list) else \
+                (len(bmdps), max(m.n for m in bmdps))
             rs = driver.solve_many(
-                [cores[i] for i in bucket], ipi, mesh=mesh, layout=layout,
-                pad_fleet=opts.get("-pad_fleet"),
+                payload, ipi, mesh=mesh, layout=layout,
+                pad_fleet=opts.get("-pad_fleet"), origin=origin,
                 checkpoint_dir=bucket_ckpt, chunk=opts.get("-chunk"),
                 verbose=opts.get("-verbose"))
             for i, r in zip(bucket, rs):
@@ -233,6 +268,38 @@ class Session:
             return MDP(mdp, mode=opts.get("-mode"))
         raise TypeError(f"solve wants a repro.api.MDP (or a core "
                         f"EllMDP/DenseMDP), got {type(mdp).__name__}")
+
+    def _fleet_cores(self, bmdps: list[MDP], mesh, layout: str, mode: str,
+                     opts: Options):
+        """What one bucket hands :func:`repro.core.driver.solve_many`:
+        the device-materialized batched container for an all-deferred
+        bucket under a fleet-sharded layout, else per-instance host
+        builds."""
+        mat = opts.get("-mdp_materialize")
+        if (mesh is not None and layout in partition.FLEET_LAYOUTS
+                and mat != "host"
+                and all(m.deferred for m in bmdps)
+                and len({(m._spec.m, m._spec.nnz) for m in bmdps}) == 1
+                and all(m.materialization(mat) == "device" for m in bmdps)):
+            pad = opts.get("-pad_fleet")
+            # weakly keyed on the builder identities: an entry whose fleet
+            # the caller dropped can never be requested again, so purge it
+            # (its device container would otherwise stay pinned till close)
+            self._fleet_cache = {
+                k: v for k, v in self._fleet_cache.items()
+                if all(r() is not None for r in k[4])}
+            key = (mesh, layout, mode, pad,
+                   tuple(weakref.ref(m) for m in bmdps))
+            batched = self._fleet_cache.get(key)
+            if batched is None:
+                if len(self._fleet_cache) > 8:   # bound: these hold whole
+                    self._fleet_cache.pop(       # fleets of device shards
+                        next(iter(self._fleet_cache)))
+                batched = place_function_fleet(bmdps, mesh, layout, mode,
+                                               pad_fleet=pad)
+                self._fleet_cache[key] = batched
+            return batched
+        return [m.build(mat) for m in bmdps]
 
     def _ipi(self, opts: Options, mdp_mode: str):
         """IPIOptions from the database; the MDP's mode wins unless the

@@ -306,7 +306,7 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
 
 def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
                mesh=None, layout: str = "1d", v0s=None,
-               pad_fleet: bool = True,
+               pad_fleet: bool = True, origin: tuple[int, int] | None = None,
                checkpoint_dir: str | None = None, chunk: int = 64,
                verbose: bool = False) -> list[SolveResult]:
     """Solve a fleet of MDPs in one compiled batched program.
@@ -343,18 +343,33 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
     checkpoint is mesh-agnostic exactly like a single-instance one: a solve
     interrupted on an 8-way fleet axis resumes on a 4-way axis (or on a
     replicated layout, or single-device) bit-for-bit.
+
+    ``origin=(B, n)`` names the *true* fleet size and state count of a
+    pre-batched container that was built with mesh padding already applied
+    (e.g. :func:`repro.api.place_function_fleet`): results and checkpoints
+    are then trimmed to the true sizes — without it, a padded container's
+    checkpoint meta would record the mesh-padded shapes and refuse an
+    elastic resume on a differently-padding mesh.
     """
     if isinstance(mdps, (EllMDP, DenseMDP)):
         if mdps.batch is None:
             raise ValueError("solve_many() wants a fleet; for a single "
                              "instance use solve()")
         batched = mdps
-        n_origs = [batched.n_global] * batched.batch
+        b_true, n_true = origin or (batched.batch, batched.n_global)
+        if b_true > batched.batch or n_true > batched.n_global:
+            raise ValueError(f"origin={origin} exceeds the container's "
+                             f"(B={batched.batch}, n={batched.n_global})")
+        n_origs = [n_true] * b_true
     else:
+        if origin is not None:
+            raise ValueError("origin= applies to a pre-batched container; "
+                             "per-instance MDPs carry their own true n")
         mdps = list(mdps)
         n_origs = [m.n_global for m in mdps]
         batched = stack_mdps(mdps)
-    b_orig = batched.batch
+        b_true, n_true = batched.batch, batched.n_global
+    b_orig = b_true
     gammas = gammas_of(batched)
     if layout in partition.FLEET_LAYOUTS and mesh is None:
         raise ValueError(f"layout={layout!r} shards the fleet dim over a "
@@ -381,13 +396,12 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
                                                pad_fleet=pad_fleet,
                                                mode=opts.mode)
         if v0 is not None:
-            pad_n = dev_mdp.n_global - batched.n_global
-            pad_b = dev_mdp.batch - b_orig
-            v0 = jnp.pad(v0, ((0, pad_b), (0, pad_n)))
+            v0 = jnp.pad(v0, ((0, dev_mdp.batch - v0.shape[0]),
+                              (0, dev_mdp.n_global - v0.shape[-1])))
     run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, dev_mdp.batch)
 
     state = _restore_or_init(init, v0, checkpoint_dir, verbose,
-                             expect=dict(n=batched.n_global, batch=b_orig))
+                             expect=dict(n=n_true, batch=b_orig))
     while True:
         k = np.asarray(jax.device_get(state.k))
         res = np.asarray(jax.device_get(state.res))
@@ -402,11 +416,11 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
         k_hi = jnp.int32(min(int(k[~done].min()) + chunk, opts.max_outer))
         state = run_chunk(dev_mdp, state, k_hi)
         if checkpoint_dir:
-            trimmed = _trim_ckpt_state(state, batched.n_global, b_orig)
+            trimmed = _trim_ckpt_state(state, n_true, b_orig)
             ckpt.save(checkpoint_dir, int(np.max(np.asarray(trimmed.k))),
                       trimmed,
                       meta=dict(method=opts.method, batch=b_orig,
-                                n=batched.n_global, layout=layout))
+                                n=n_true, layout=layout))
 
     state = jax.device_get(state)
     out = []

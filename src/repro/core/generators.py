@@ -131,6 +131,171 @@ REGISTRY = {"garnet": garnet, "maze2d": maze2d, "sis": sis,
             "chain_walk": chain_walk}
 
 
+# --------------------------------------------------------------------------- #
+# Device-side (jit-able) constructor variants                                  #
+# --------------------------------------------------------------------------- #
+#
+# Each ``*_functions`` builder returns the keyword dict
+# ``{"P_fn", "g_fn", "n", "m", "nnz", "gamma", "vectorized"}`` for
+# ``repro.api.MDP.from_functions(**spec, device=True)``: the constructors are
+# written in jax.numpy over a *traced* row-index array (the action is a
+# static Python int), so the session layer materializes each device's ELL
+# block inside a compiled program — no host numpy anywhere, which is what
+# lets ``from_generator`` instances scale past host memory.  Constructors
+# must tolerate row ids >= n (shard padding rows; their outputs are masked).
+#
+# maze2d / chain_walk reproduce the host generators' tables bit-for-bit;
+# garnet draws from a counter-based jax PRNG (fold_in per (seed, row,
+# action)) instead of numpy's Generator, and sis computes in f32 on device,
+# so those two match their host counterparts in distribution / to rounding,
+# not bitwise.
+#
+# The closure-producing helpers are memoized (lru_cache) on everything
+# EXCEPT gamma: a sweep like ``[from_generator(name, deferred=True,
+# gamma=g) for g in gammas]`` then hands every instance the *same*
+# (P_fn, g_fn) pair, so the device pipeline's builder cache
+# (repro.api.mdp._BUILDER_CACHE, keyed on constructor identity) compiles
+# exactly one block program for the whole fleet.
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=64)
+def _garnet_fns(n: int, m: int, k: int, seed: int):
+    import jax
+    import jax.numpy as jnp
+
+    def _row_key(r, a):
+        return jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(seed), r), a)
+
+    def P_fn(rows, a):
+        def one(r):
+            kk = _row_key(r, a)
+            ids = jax.random.randint(jax.random.fold_in(kk, 0), (k,), 0, n)
+            raw = jax.random.uniform(jax.random.fold_in(kk, 1), (k,)) + 1e-6
+            return ids.astype(jnp.int32), (raw / raw.sum()).astype(jnp.float32)
+        return jax.vmap(one)(rows)
+
+    def g_fn(rows, a):
+        return jax.vmap(lambda r: jax.random.uniform(
+            jax.random.fold_in(_row_key(r, a), 2), ()))(rows)
+
+    return P_fn, g_fn
+
+
+def garnet_functions(n: int, m: int, k: int = 8, gamma: float = 0.95,
+                     seed: int = 0) -> dict:
+    """GARNET via a counter-based PRNG: any row block is generated
+    independently on the device that owns it."""
+    P_fn, g_fn = _garnet_fns(n, m, k, seed)
+    return dict(P_fn=P_fn, g_fn=g_fn, n=n, m=m, nnz=k, gamma=gamma,
+                vectorized=True)
+
+
+@lru_cache(maxsize=64)
+def _maze2d_fns(size: int, slip: float):
+    import jax.numpy as jnp
+    n, m = size * size, 5
+    moves = ((0, 0), (-1, 0), (1, 0), (0, 1), (0, -1))
+    goal = n - 1
+
+    def P_fn(rows, a):
+        r, c = rows // size, rows % size
+        nr = jnp.clip(r + moves[a][0], 0, size - 1)
+        nc = jnp.clip(c + moves[a][1], 0, size - 1)
+        tgt = nr * size + nc
+        at_goal = rows == goal
+        i0 = jnp.where(at_goal, goal, tgt)
+        i1 = jnp.where(at_goal, goal, rows)
+        v0 = jnp.where(at_goal, 1.0, 1.0 - slip)
+        v1 = jnp.where(at_goal, 0.0, slip)
+        return (jnp.stack([i0, i1], -1).astype(jnp.int32),
+                jnp.stack([v0, v1], -1).astype(jnp.float32))
+
+    def g_fn(rows, a):
+        return jnp.where(rows == goal, 0.0, 1.0).astype(jnp.float32)
+
+    return P_fn, g_fn
+
+
+def maze2d_functions(size: int, gamma: float = 0.99, slip: float = 0.1,
+                     seed: int = 0) -> dict:
+    """Device maze2d; bit-identical tables to :func:`maze2d`."""
+    P_fn, g_fn = _maze2d_fns(size, slip)
+    return dict(P_fn=P_fn, g_fn=g_fn, n=size * size, m=5, nnz=2,
+                gamma=gamma, vectorized=True)
+
+
+@lru_cache(maxsize=64)
+def _sis_fns(pop: int, n_actions: int):
+    import jax.numpy as jnp
+    n, m = pop + 1, n_actions
+    beta = np.linspace(0.9, 0.05, m)
+    act_cost = np.linspace(0.0, 0.15, m)
+    mu = 0.3
+
+    def P_fn(rows, a):
+        i = rows.astype(jnp.float32)
+        up = jnp.clip(float(beta[a]) * i * (pop - i) / pop**2, 0, 0.49)
+        down = jnp.clip(mu * i / pop, 0, 0.49)
+        at_zero = rows == 0
+        up = jnp.where(at_zero, 0.0, up)
+        down = jnp.where(at_zero, 0.0, down)
+        stay = 1.0 - up - down
+        ids = jnp.stack([jnp.clip(rows + 1, 0, n - 1),
+                         jnp.clip(rows - 1, 0, n - 1), rows], -1)
+        return (ids.astype(jnp.int32),
+                jnp.stack([up, down, stay], -1).astype(jnp.float32))
+
+    def g_fn(rows, a):
+        load = 2.0 * rows.astype(jnp.float32) / pop
+        return (jnp.where(rows == 0, 0.0, load)
+                + float(act_cost[a])).astype(jnp.float32)
+
+    return P_fn, g_fn
+
+
+def sis_functions(pop: int, n_actions: int = 4, gamma: float = 0.99,
+                  seed: int = 0) -> dict:
+    """Device SIS chain (f32 on-device arithmetic: matches :func:`sis` to
+    rounding, not bitwise — the host generator computes in f64)."""
+    P_fn, g_fn = _sis_fns(pop, n_actions)
+    return dict(P_fn=P_fn, g_fn=g_fn, n=pop + 1, m=n_actions, nnz=3,
+                gamma=gamma, vectorized=True)
+
+
+@lru_cache(maxsize=64)
+def _chain_walk_fns(n: int, p_fwd: float):
+    import jax.numpy as jnp
+
+    def P_fn(rows, a):
+        left = jnp.clip(rows - 1, 0, n - 1)
+        right = jnp.clip(rows + 1, 0, n - 1)
+        fwd, bwd = (left, right) if a == 0 else (right, left)
+        probs = jnp.broadcast_to(
+            jnp.asarray([p_fwd, 1 - p_fwd], jnp.float32),
+            (rows.shape[0], 2))
+        return jnp.stack([fwd, bwd], -1).astype(jnp.int32), probs
+
+    def g_fn(rows, a):
+        return jnp.where(rows == 0, 0.0, 1.0).astype(jnp.float32)
+
+    return P_fn, g_fn
+
+
+def chain_walk_functions(n: int, gamma: float = 0.9999, p_fwd: float = 0.7,
+                         seed: int = 0) -> dict:
+    """Device chain walk; bit-identical tables to :func:`chain_walk`."""
+    P_fn, g_fn = _chain_walk_fns(n, p_fwd)
+    return dict(P_fn=P_fn, g_fn=g_fn, n=n, m=2, nnz=2, gamma=gamma,
+                vectorized=True)
+
+
+FN_REGISTRY = {"garnet": garnet_functions, "maze2d": maze2d_functions,
+               "sis": sis_functions, "chain_walk": chain_walk_functions}
+
+
 def generate_many(kind: str, batch: int, *, sweep=None, **kw) -> list[EllMDP]:
     """Generate a fleet of ``batch`` related instances in one call.
 

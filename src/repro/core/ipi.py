@@ -79,6 +79,10 @@ class IPIOptions:
     omega: float = 1.0          # Richardson damping
     mpi_sweeps: int = 50        # L for modified policy iteration
     safeguard: bool = True      # monotone (VI-fallback) safeguard
+    deterministic_dots: bool = False  # pin the GMRES projection accumulation
+                                # order (lane-at-a-time lax.map) so
+                                # fleet-sharded Krylov values are bit-equal
+                                # to the replicated layout
     impl: str | None = None     # kernel implementation override
     dtype: str = "float32"      # value-vector dtype; "float64" == PETSc default
                                 # (requires jax_enable_x64)
@@ -107,6 +111,12 @@ class IPIOptions:
         if not 0.0 < self.forcing_eta < 1.0:
             raise ValueError(f"forcing_eta must lie in (0, 1) for iPI "
                              f"convergence, got {self.forcing_eta}")
+        if self.deterministic_dots and self.method == "ipi_bicgstab":
+            raise ValueError(
+                "deterministic_dots pins the GMRES accumulation order and "
+                "is not implemented for ipi_bicgstab (its dots would still "
+                "re-associate by lane count); use ipi_gmres/pi, or drop "
+                "the flag")
         if self.restart < 1:
             raise ValueError(f"restart must be >= 1, got {self.restart}")
         if self.mpi_sweeps < 1:
@@ -206,13 +216,15 @@ def _inner_solve(opts: IPIOptions, matvec, b, x0, tol, axes: Axes):
                           axes=axes, omega=opts.omega)
     if m == "ipi_gmres":
         return gmres(matvec, b, x0, tol=tol, maxiter=opts.max_inner,
-                     axes=axes, restart=opts.restart)
+                     axes=axes, restart=opts.restart,
+                     deterministic=opts.deterministic_dots)
     if m == "ipi_bicgstab":
         return bicgstab(matvec, b, x0, tol=tol, maxiter=opts.max_inner,
                         axes=axes)
     if m == "pi":
         return gmres(matvec, b, x0, tol=jnp.float32(opts.atol) * 0.01,
-                     maxiter=opts.max_inner, axes=axes, restart=opts.restart)
+                     maxiter=opts.max_inner, axes=axes, restart=opts.restart,
+                     deterministic=opts.deterministic_dots)
     raise ValueError(m)
 
 

@@ -69,6 +69,34 @@ def _axis_size(mesh, names) -> int:
     return math.prod(mesh.shape[n] for n in names)
 
 
+def padded_extents(mesh, axes: Axes, n: int, m: int) -> tuple[int, int]:
+    """Global (state, action) extents after padding ``(n, m)`` up to the
+    mesh's shard multiples under ``axes`` — the shapes a shard-locally
+    materialized MDP must be built at."""
+    ns = _axis_size(mesh, axes.state)
+    ms = _axis_size(mesh, axes.action)
+    return -(-n // ns) * ns, -(-m // ms) * ms
+
+
+def shard_block(index, shape) -> tuple[tuple[int, int], ...]:
+    """Concrete per-dim ``(start, stop)`` ranges of one device's shard.
+
+    ``index`` is the slice tuple ``jax.make_array_from_callback`` (or
+    ``Sharding.addressable_devices_indices_map``) hands out for a global
+    ``shape``; the result names exactly the index ranges the owning device
+    must materialize — including the leading instance range under the
+    fleet layouts (instances x states x actions).
+    """
+    out = []
+    for sl, dim in zip(index, shape):
+        lo, hi, step = sl.indices(dim)
+        if step != 1:
+            raise ValueError(f"shard_block expects contiguous shards, got "
+                             f"step={step}")
+        out.append((lo, hi))
+    return tuple(out)
+
+
 def _bcast_concat(arr: np.ndarray, pad_core: np.ndarray,
                   axis: int) -> np.ndarray:
     """Concatenate ``pad_core`` (unbatched) onto ``arr`` along a trailing

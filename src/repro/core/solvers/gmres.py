@@ -19,6 +19,23 @@ Distribution notes (the PETSc-KSP -> JAX adaptation):
 Stopping is on the 2-norm residual estimate maintained by the Givens
 rotations; since ``||r||_inf <= ||r||_2`` this is conservative for the
 sup-norm forcing condition used by iPI.
+
+Deterministic mode (``deterministic=True``) pins the floating-point
+*accumulation order* of every projection and combination so the computed
+values are independent of how many fleet lanes share a device: the batched
+``V @ w`` matmuls XLA emits under ``vmap`` are free to tile (and therefore
+associate) their contractions by the device-local lane count, which is
+exactly the cross-layout reproducibility hazard CGS2 analyses warn about
+(Giraud et al. 2005 — the *values* are equally accurate, just not
+bit-equal).  In deterministic mode each projection is a lane-at-a-time
+``lax.map`` of fixed-shape reductions, basis combinations are ordered AXPY
+loops, and the Hessenberg solve is an explicit back-substitution — no
+dot-general anywhere XLA could re-tile by batch width — so a fleet-sharded
+solve is bit-identical to the replicated layout *at equal state-shard
+count*.  (Across different state-shard counts the distributed sum is split
+at different boundaries; no fixed elementwise order makes that invariant —
+the same caveat as MPI_Allreduce reproducibility being per-communicator
+in PETSc.)
 """
 
 from __future__ import annotations
@@ -31,12 +48,55 @@ from repro.core.comm import Axes
 _TINY = 1e-30
 
 
-def _arnoldi_cycle(matvec, b, x, *, restart: int, tol, axes: Axes):
+def _det_dot(axes: Axes, x, y):
+    """<x, y> with a batch-invariant accumulation: elementwise multiply +
+    single-axis reduce (never a dot-general XLA may re-tile per vmap
+    width), then one psum over the state shards."""
+    return axes.psum_state(jnp.sum(x * y))
+
+
+def _det_norm2(axes: Axes, x):
+    return jnp.sqrt(jnp.maximum(_det_dot(axes, x, x), 0.0))
+
+
+def _det_projections(axes: Axes, V, w):
+    """The CGS2 projection vector ``V @ w`` computed one basis lane at a
+    time (``lax.map``): every inner product is the same fixed-shape
+    reduction regardless of how many fleet instances are vmapped onto this
+    device, so the accumulation order — and hence the bits — match between
+    the replicated and fleet-sharded layouts."""
+    return axes.psum_state(jax.lax.map(lambda vj: jnp.sum(vj * w), V))
+
+
+def _det_combine(h, V):
+    """``h @ V`` as an ordered AXPY loop (fixed j-order accumulation)."""
+    return jax.lax.fori_loop(
+        0, V.shape[0], lambda j, acc: acc + h[j] * V[j],
+        jnp.zeros_like(V[0]))
+
+
+def _det_backsolve(R, g):
+    """Upper-triangular solve by explicit back-substitution (fixed
+    accumulation order; replaces the batched ``solve_triangular``)."""
+    n = R.shape[0]
+
+    def step(i, y):
+        j = n - 1 - i
+        # y[k] == 0 for k <= j (not yet assigned), so the full-row reduce
+        # only picks up the k > j terms back-substitution needs.
+        return y.at[j].set((g[j] - jnp.sum(R[j] * y)) / R[j, j])
+
+    return jax.lax.fori_loop(0, n, step, jnp.zeros_like(g))
+
+
+def _arnoldi_cycle(matvec, b, x, *, restart: int, tol, axes: Axes,
+                   deterministic: bool = False):
     """One restart cycle. Returns (x_new, resnorm, iters_done)."""
     n_local = x.shape[0]
     dt = x.dtype
+    norm2 = (lambda v: _det_norm2(axes, v)) if deterministic else axes.norm2
     r = b - matvec(x)
-    beta = axes.norm2(r)
+    beta = norm2(r)
     v0 = r / jnp.where(beta > _TINY, beta, 1.0)
 
     V = jnp.zeros((restart + 1, n_local), dt).at[0].set(v0)
@@ -49,14 +109,22 @@ def _arnoldi_cycle(matvec, b, x, *, restart: int, tol, axes: Axes):
     def body(j, carry):
         V, R, cs, sn, g, res, it, done = carry
         w = matvec(V[j])
-        # CGS2: two masked classical GS passes (2 collectives total).
-        mask = (row_ids <= j).astype(jnp.float32)
-        h1 = mask * axes.psum_state(V @ w)
-        w = w - h1 @ V
-        h2 = mask * axes.psum_state(V @ w)
-        w = w - h2 @ V
+        # CGS2: two masked classical GS passes (2 collectives total).  The
+        # mask is cast to the solve dtype: a float32 mask would silently
+        # promote (or downcast) non-f32 inner solves through h1/h2.
+        mask = (row_ids <= j).astype(dt)
+        if deterministic:
+            h1 = mask * _det_projections(axes, V, w)
+            w = w - _det_combine(h1, V)
+            h2 = mask * _det_projections(axes, V, w)
+            w = w - _det_combine(h2, V)
+        else:
+            h1 = mask * axes.psum_state(V @ w)
+            w = w - h1 @ V
+            h2 = mask * axes.psum_state(V @ w)
+            w = w - h2 @ V
         h = h1 + h2
-        hnorm = axes.norm2(w)
+        hnorm = norm2(w)
         v_next = w / jnp.where(hnorm > _TINY, hnorm, 1.0)
 
         # Apply the j previous Givens rotations to the new column.  Rotation i
@@ -105,24 +173,34 @@ def _arnoldi_cycle(matvec, b, x, *, restart: int, tol, axes: Axes):
     diag_fix = jnp.diag(jnp.where(active, 0.0, 1.0)).astype(R.dtype)
     R_m = jnp.where(active[None, :] & active[:, None], R, 0.0) + diag_fix
     g_m = jnp.where(active, g[:restart], 0.0)
-    y = jax.scipy.linalg.solve_triangular(R_m, g_m, lower=False)
-    x_new = x + y @ V[:restart]
+    if deterministic:
+        y = _det_backsolve(R_m, g_m)
+        x_new = x + _det_combine(y, V[:restart])
+    else:
+        y = jax.scipy.linalg.solve_triangular(R_m, g_m, lower=False)
+        x_new = x + y @ V[:restart]
     return x_new, res, iters
 
 
 def gmres(matvec, b: jax.Array, x0: jax.Array, *, tol, maxiter: int,
-          axes: Axes, restart: int = 32):
-    """Restarted GMRES.  Returns ``(x, iters, resnorm_2)``."""
+          axes: Axes, restart: int = 32, deterministic: bool = False):
+    """Restarted GMRES.  Returns ``(x, iters, resnorm_2)``.
+
+    ``deterministic=True`` pins every accumulation order (see the module
+    docstring): fleet-sharded solves become bit-identical to replicated
+    ones, at the cost of serializing the CGS2 projections lane-at-a-time.
+    """
     restart = int(restart)
 
     def cycle(s):
         x, _, it = s
         x, res, done_iters = _arnoldi_cycle(
-            matvec, b, x, restart=restart, tol=tol, axes=axes)
+            matvec, b, x, restart=restart, tol=tol, axes=axes,
+            deterministic=deterministic)
         return x, res, it + done_iters
 
     r0 = b - matvec(x0)
-    res0 = axes.norm2(r0)
+    res0 = _det_norm2(axes, r0) if deterministic else axes.norm2(r0)
 
     def cond(s):
         _, res, it = s

@@ -255,6 +255,296 @@ def test_from_functions_pad_sign_follows_solve_mode():
     assert (cost[:, 2:] > 0).all()
 
 
+def _chain_jnp(n):
+    """The chain constructors written in jax.numpy: jit-able -> the device
+    generator pipeline."""
+    import jax.numpy as jnp
+
+    def P_fn(rows, a):
+        left = jnp.clip(rows - 1, 0, n - 1)
+        right = jnp.clip(rows + 1, 0, n - 1)
+        fwd, bwd = (left, right) if a == 0 else (right, left)
+        return (jnp.stack([fwd, bwd], -1).astype(jnp.int32),
+                jnp.broadcast_to(jnp.asarray([0.7, 0.3], jnp.float32),
+                                 (rows.shape[0], 2)))
+
+    def g_fn(rows, a):
+        return jnp.where(rows == 0, 0.0, 1.0).astype(jnp.float32)
+
+    return P_fn, g_fn
+
+
+def _chain_np_vec(n):
+    def P_fn(rows, a):
+        left = np.clip(rows - 1, 0, n - 1)
+        right = np.clip(rows + 1, 0, n - 1)
+        fwd, bwd = (left, right) if a == 0 else (right, left)
+        return (np.stack([fwd, bwd], -1),
+                np.broadcast_to(np.array([0.7, 0.3]), (len(rows), 2)))
+
+    def g_fn(rows, a):
+        return np.where(rows == 0, 0.0, 1.0)
+
+    return P_fn, g_fn
+
+
+def test_from_functions_pipeline_auto_detection():
+    """jnp constructors trace -> device; numpy constructors fail tracing ->
+    host; explicit pins and the -mdp_materialize option override."""
+    n = 24
+    P_j, g_j = _chain_jnp(n)
+    P_n, g_n = _chain_np_vec(n)
+    jm = MDP.from_functions(P_j, g_j, n, 2, nnz=2, vectorized=True)
+    nm = MDP.from_functions(P_n, g_n, n, 2, nnz=2, vectorized=True)
+    sm = MDP.from_functions(*_chain_fns(n), n, 2, nnz=2)  # python scalars
+    assert jm.materialization() == "device"
+    assert nm.materialization() == "host"
+    assert sm.materialization() == "host"
+    # option forces host; device pin / option on numpy raises with a reason
+    assert jm.materialization("host") == "host"
+    with pytest.raises(ValueError, match="do not trace"):
+        nm.materialization("device")
+    pinned = MDP.from_functions(P_n, g_n, n, 2, nnz=2, vectorized=True,
+                                device=True)
+    with pytest.raises(ValueError, match="do not trace"):
+        pinned.build()
+    # device=False pin beats a device option
+    off = MDP.from_functions(P_j, g_j, n, 2, nnz=2, vectorized=True,
+                             device=False)
+    assert off.materialization("device") == "host"
+
+
+def test_from_functions_device_build_bitwise_matches_host():
+    """The two pipelines must produce identical tables — and match the
+    reference generator."""
+    n = 60
+    P_j, g_j = _chain_jnp(n)
+    md = MDP.from_functions(P_j, g_j, n, 2, nnz=2, gamma=0.99,
+                            vectorized=True)
+    dev = md.build("device")
+    host = md.build("host")
+    ref = generators.chain_walk(n=n, gamma=0.99)
+    for f in ("idx", "val", "cost"):
+        np.testing.assert_array_equal(np.asarray(getattr(dev, f)),
+                                      np.asarray(getattr(host, f)),
+                                      err_msg=f)
+        np.testing.assert_array_equal(np.asarray(getattr(dev, f)),
+                                      np.asarray(getattr(ref, f)),
+                                      err_msg=f)
+
+
+def test_from_functions_device_scalar_constructors():
+    """Scalar jit-able constructors (traced s, static a) vmap to the same
+    tables as vectorized ones."""
+    import jax.numpy as jnp
+    n = 40
+
+    def P_s(s, a):
+        left = jnp.maximum(s - 1, 0)
+        right = jnp.minimum(s + 1, n - 1)
+        fwd, bwd = (left, right) if a == 0 else (right, left)
+        return (jnp.stack([fwd, bwd]).astype(jnp.int32),
+                jnp.asarray([0.7, 0.3], jnp.float32))
+
+    def g_s(s, a):
+        return jnp.where(s == 0, 0.0, 1.0)
+
+    ms = MDP.from_functions(P_s, g_s, n, 2, nnz=2)
+    assert ms.materialization() == "device"
+    mv = MDP.from_functions(*_chain_jnp(n), n, 2, nnz=2, vectorized=True)
+    a, b = ms.build(), mv.build()
+    for f in ("idx", "val", "cost"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+def test_from_functions_device_block_padding_matches_host():
+    """The compiled block builder must reproduce the host ``_block``
+    padding bit-for-bit: absorbing self-loop rows, never-greedy action
+    columns under both solve modes."""
+    import jax.numpy as jnp
+    from repro.api.mdp import _device_builder
+    n = 6
+    md = MDP.from_functions(*_chain_jnp(n), n, 2, nnz=2, vectorized=True)
+    for mode in ("mincost", "maxreward"):
+        f = _device_builder(md._spec, 8, (0, 1, 2, 3), mode)
+        dev = [np.asarray(x) for x in f(jnp.int32(0))]
+        host = md._block(np.arange(8), np.arange(4), n_pad_to=8,
+                         m_pad_to=4, mode=mode)
+        for d, h, name in zip(dev, host, ("idx", "val", "cost")):
+            np.testing.assert_array_equal(d, h, err_msg=f"{mode}/{name}")
+    big = dev[2][:, 2:]
+    assert (big < 0).all()          # maxreward ran last: -BIG padding
+
+
+def test_from_functions_device_wrong_shape_named():
+    """A traced constructor returning the wrong number of nnz slots fails
+    with an error naming the expected shape."""
+    import jax.numpy as jnp
+    n = 10
+
+    def P_bad(rows, a):
+        return (jnp.zeros((rows.shape[0], 3), jnp.int32),
+                jnp.zeros((rows.shape[0], 3), jnp.float32))
+
+    md = MDP.from_functions(P_bad, lambda rows, a: jnp.zeros(rows.shape[0]),
+                            n, 1, nnz=2, vectorized=True, device=True)
+    with pytest.raises(ValueError, match="must return shape"):
+        md.build()
+
+
+def test_from_functions_scalar_validation_names_offender():
+    """The scalar host path must reject ids/probs length mismatches and
+    non-stochastic rows, naming the offending (s, a)."""
+    def P_mismatch(s, a):
+        return [s, min(s + 1, 9)], [1.0]          # 2 ids, 1 prob
+
+    with pytest.raises(ValueError, match=r"s=0, a=0.*2 successor ids but 1"):
+        MDP.from_functions(P_mismatch, lambda s, a: 0.0, 10, 1,
+                           nnz=2).build("host")
+
+    def P_nonstoch(s, a):
+        return [s, min(s + 1, 9)], [0.5, 0.1]     # sums to 0.6
+
+    with pytest.raises(ValueError, match=r"s=0, a=0.*sum to 0.6"):
+        MDP.from_functions(P_nonstoch, lambda s, a: 0.0, 10, 1,
+                           nnz=2).build("host")
+
+
+def test_from_functions_vectorized_validation_names_offender():
+    def P_bad(rows, a):
+        probs = np.broadcast_to(np.array([0.7, 0.3]), (len(rows), 2)).copy()
+        probs[3] = [0.7, 0.7]                     # row 3 sums to 1.4
+        return (np.stack([rows, rows], -1), probs)
+
+    m = MDP.from_functions(P_bad, lambda rows, a: np.zeros(len(rows)),
+                           10, 1, nnz=2, vectorized=True)
+    with pytest.raises(ValueError, match=r"s=3, a=0.*sum to 1.4"):
+        m.build()
+
+
+def test_from_generator_deferred():
+    """deferred=True builds on the jit-able FN_REGISTRY constructors;
+    maze2d / chain_walk reproduce the host generators bit-for-bit and
+    every family validates."""
+    ref = generators.maze2d(size=6)
+    dm = MDP.from_generator("maze2d", deferred=True, size=6)
+    assert dm.deferred and dm.materialization() == "device"
+    built = dm.build()
+    for f in ("idx", "val", "cost"):
+        np.testing.assert_array_equal(np.asarray(getattr(built, f)),
+                                      np.asarray(getattr(ref, f)),
+                                      err_msg=f)
+    for name, kw in (("chain_walk", dict(n=50, gamma=0.95)),
+                     ("sis", dict(pop=40)),
+                     ("garnet", dict(n=30, m=3, k=4, seed=1))):
+        MDP.from_generator(name, deferred=True, **kw).build().validate()
+    with pytest.raises(ValueError, match="deferred families"):
+        MDP.from_generator("nope", deferred=True)
+
+
+def test_mdp_evict_and_session_close_evicts(tmp_path):
+    """Session.close must drop the mesh-keyed device shards of builders it
+    placed (reused builders otherwise pin dead meshes' device memory)."""
+    import jax
+    from repro.launch.mesh import mesh_kwargs
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **mesh_kwargs(2))
+    md = MDP.from_functions(*_chain_jnp(32), 32, 2, nnz=2, gamma=0.9,
+                            vectorized=True)
+    with Session({"-method": "vi", "-atol": 1e-5, "-layout": "1d"},
+                 mesh=mesh) as s:
+        r = s.solve(md)
+        assert r.converged
+        assert any(k[0] == mesh for k in md._device_cache)
+    assert not any(k[0] == mesh for k in md._device_cache)
+    # evict() without a mesh clears everything, returning the count
+    md.build()
+    assert md.evict() >= 1 and not md._device_cache
+
+
+def test_place_function_fleet_single_device():
+    """place_function_fleet on a 1-device fleet mesh: batched container
+    with per-instance tables (heterogeneous n and gamma), solvable by
+    solve_many, matching per-instance host builds."""
+    import jax
+    from repro.api import place_function_fleet
+    from repro.core.driver import solve_many as dsm
+    from repro.launch.mesh import mesh_kwargs
+    mesh = jax.make_mesh((1, 1), ("fleet", "data"), **mesh_kwargs(2))
+    mdps = [MDP.from_functions(*_chain_jnp(n), n, 2, nnz=2, gamma=g,
+                               vectorized=True)
+            for n, g in ((40, 0.9), (35, 0.95))]
+    batched = place_function_fleet(mdps, mesh, "fleet")
+    assert batched.batch == 2 and batched.n_global == 40
+    assert batched.gamma == (0.9, 0.95)
+    opts = IPIOptions(method="vi", atol=1e-9, dtype="float64")
+    rs = dsm(batched, opts, mesh=mesh, layout="fleet")
+    for m, r in zip(mdps, rs):
+        # mixed gammas run the traced-gamma fleet path: values to fp
+        # tolerance (policies exact), as in tests/test_batch.py
+        want = driver_solve(m.build(), opts)
+        np.testing.assert_allclose(r.v[:m.n], want.v, atol=1e-12)
+        np.testing.assert_array_equal(r.policy[:m.n], want.policy)
+    # guards: non-fleet layout, non-deferred instances, mismatched nnz
+    with pytest.raises(ValueError, match="fleet layouts"):
+        place_function_fleet(mdps, mesh, "1d")
+    with pytest.raises(ValueError, match="function-backed"):
+        place_function_fleet(
+            [MDP(generators.garnet(n=10, m=2, k=2))], mesh, "fleet")
+    import jax.numpy as jnp
+
+    def P3(rows, a):       # valid nnz=3 chain (third slot zero-padded)
+        i2, p2 = _chain_jnp(40)[0](rows, a)
+        return (jnp.concatenate([i2, jnp.zeros((rows.shape[0], 1),
+                                               jnp.int32)], -1),
+                jnp.concatenate([p2, jnp.zeros((rows.shape[0], 1),
+                                               jnp.float32)], -1))
+
+    odd = MDP.from_functions(P3, _chain_jnp(40)[1], 40, 2, nnz=3,
+                             vectorized=True)
+    with pytest.raises(ValueError, match="share the action count and nnz"):
+        place_function_fleet([mdps[0], odd], mesh, "fleet")
+
+
+def test_session_fleet_container_cached_until_close():
+    """Repeated solve_fleet calls on the same deferred fleet must reuse the
+    device-materialized container (warm serving skips construction);
+    close() drops it."""
+    import jax
+    from repro.launch.mesh import mesh_kwargs
+    mesh = jax.make_mesh((1, 1), ("fleet", "data"), **mesh_kwargs(2))
+    mdps = [MDP.from_functions(*_chain_jnp(30), 30, 2, nnz=2, gamma=0.9,
+                               vectorized=True) for _ in range(2)]
+    with Session({"-method": "vi", "-atol": 1e-6, "-dtype": "float64"},
+                 mesh=mesh) as s:
+        r1 = s.solve_fleet(mdps)
+        assert len(s._fleet_cache) == 1
+        batched = next(iter(s._fleet_cache.values()))
+        r2 = s.solve_fleet(mdps)
+        assert next(iter(s._fleet_cache.values())) is batched  # reused
+        np.testing.assert_array_equal(r1[0].v, r2[0].v)
+    assert not s._fleet_cache
+
+
+def test_deterministic_dots_solves_match():
+    """-deterministic_dots must not change convergence — same solution to
+    tolerance, still converged (bit-level layout parity is covered on the
+    8-device mesh in test_fleet.py)."""
+    mdp = generators.garnet(n=150, m=5, k=4, gamma=0.95, seed=3)
+    kw = dict(atol=1e-9, dtype="float64")
+    r0 = driver_solve(mdp, IPIOptions(method="ipi_gmres", **kw))
+    r1 = driver_solve(mdp, IPIOptions(method="ipi_gmres",
+                                      deterministic_dots=True, **kw))
+    assert r0.converged and r1.converged
+    np.testing.assert_allclose(r0.v, r1.v, atol=1e-8)
+    np.testing.assert_array_equal(r0.policy, r1.policy)
+    # and the option threads through the database
+    assert Options({"-deterministic_dots": True}).to_ipi().deterministic_dots
+    # bicgstab has no deterministic path: rejected, not silently ignored
+    with pytest.raises(ValueError, match="ipi_bicgstab"):
+        IPIOptions(method="ipi_bicgstab", deterministic_dots=True)
+
+
 def test_from_arrays_and_validation():
     g = generators.garnet(n=30, m=3, k=3, gamma=0.9, seed=0)
     m = MDP.from_arrays(idx=g.idx, val=g.val, cost=g.cost, gamma=0.9)

@@ -82,6 +82,94 @@ try:
 except ValueError as e:
     out["pad_error"] = str(e)
 
+# deterministic_dots: fleet-sharded Krylov must be BIT-FOR-BIT equal to the
+# replicated layout at matched state-shard count (both runs shard states
+# 2-way; only the fleet-lane batching differs — the association hazard the
+# flag pins).  Baselines replicate the fleet over a plain mesh.
+from repro.launch.mesh import make_host_mesh
+opts_det = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64",
+                      max_outer=20000, deterministic_dots=True)
+det_base = solve_many(mdps, opts_det, mesh=make_host_mesh((2, 1)),
+                      layout="1d")
+det_fleet = solve_many(mdps, opts_det, mesh=make_fleet_mesh(4),
+                       layout="fleet")
+out["det_dots"] = compare(det_fleet, det_base)
+det_base2 = solve_many(mdps, opts_det, mesh=make_host_mesh((2, 2)),
+                       layout="2d")
+det_fleet2 = solve_many(mdps, opts_det,
+                        mesh=make_fleet_mesh(2, layout="fleet2d"),
+                        layout="fleet2d")
+out["det_dots_2d"] = compare(det_fleet2, det_base2)
+
+# device-side from_functions: sharded placement must match the host
+# callbacks bit-for-bit on 1d and 2d layouts, mincost and maxreward
+# padding (n=501 pads to 504/8 shards)
+from repro.api import MDP, Session
+from repro.core.generators import chain_walk_functions
+
+
+def fn_mdp(nn, gamma=0.99):
+    # the canonical jit-able chain constructors; no device pin, so the
+    # materialize="host"/"device" comparisons below exercise both pipelines
+    spec = chain_walk_functions(nn, gamma=gamma)
+    return MDP.from_functions(spec["P_fn"], spec["g_fn"], nn, 2, nnz=2,
+                              gamma=gamma, vectorized=True)
+
+
+for layout, shape in (("1d", (8, 1)), ("2d", (4, 2))):
+    mesh = make_host_mesh(shape)
+    for mode in ("mincost", "maxreward"):
+        fm = fn_mdp(501)
+        dev = fm.place(mesh, layout, mode=mode, materialize="device")
+        host = fm.place(mesh, layout, mode=mode, materialize="host")
+        out[f"fn_place/{layout}/{mode}"] = dict(
+            bitwise=all(
+                np.array_equal(np.asarray(getattr(dev, f)),
+                               np.asarray(getattr(host, f)))
+                for f in ("idx", "val", "cost")),
+            n_to=dev.n_global, m_to=dev.m_global)
+
+# function-backed fleet under layout="fleet" (Session path): every device
+# materializes only its owned instances' row blocks; results must match
+# the replicated path of host-built instances (vi: bit-for-bit)
+fn_mdps = [fn_mdp(300, 0.95), fn_mdp(280, 0.95), fn_mdp(300, 0.95)]
+vi = IPIOptions(method="vi", atol=1e-9, dtype="float64", max_outer=20000)
+rep = solve_many([m.build(materialize="host") for m in fn_mdps], vi)
+with Session({"-method": "vi", "-atol": 1e-9, "-dtype": "float64",
+              "-max_outer": 20000}) as sess:
+    fl = sess.solve_fleet(fn_mdps)
+    fleet_layout = sess.stats[-1]["layout"]
+out["fn_fleet"] = dict(
+    layout=fleet_layout,
+    dv=max(float(np.abs(a.v - b.v).max()) for a, b in zip(fl, rep)),
+    dpi=sum(int((a.policy != b.policy).sum()) for a, b in zip(fl, rep)),
+    lens=[len(r.v) for r in fl],
+    converged=all(r.converged for r in fl))
+
+# device-fleet checkpoints must record the TRUE B and n (not the padded
+# container shapes): interrupt the Session's device-materialized fleet on
+# the fleet mesh, then resume on the replicated host-built path
+d2 = tempfile.mkdtemp(prefix="fnfleet_ck_")
+try:
+    with Session({"-method": "ipi_gmres", "-atol": 1e-9,
+                  "-dtype": "float64", "-max_outer": 2,
+                  "-checkpoint_dir": d2, "-chunk": 1}) as sess:
+        part = sess.solve_fleet(fn_mdps)
+    full = IPIOptions(method="ipi_gmres", atol=1e-9, dtype="float64",
+                      max_outer=20000)
+    hosts = [m.build(materialize="host") for m in fn_mdps]
+    resumed = solve_many(hosts, full, checkpoint_dir=d2, chunk=16)
+    base_u = solve_many(hosts, full)
+    out["fn_fleet_elastic"] = dict(
+        interrupted=bool(not any(r.converged for r in part)),
+        dv=max(float(np.abs(a.v - b.v).max())
+               for a, b in zip(resumed, base_u)),
+        converged=all(r.converged for r in resumed))
+except ValueError as e:
+    out["fn_fleet_elastic"] = dict(error=str(e))
+finally:
+    shutil.rmtree(d2, ignore_errors=True)
+
 # elastic fleet restart: checkpoint on a 4-way fleet axis, resume on 2-way
 opts = IPIOptions(method="ipi_gmres", atol=1e-8, dtype="float64")
 base = solve_many(mdps, opts)
@@ -144,6 +232,52 @@ def test_fleet_sharded_mixed_gamma(fleet_results):
     assert r["converged"]
     assert r["dv"] < 1e-8, r
     assert r["dpi"] == 0 and r["outer_eq"], r
+
+
+@pytest.mark.parametrize("key", ["det_dots", "det_dots_2d"])
+def test_deterministic_dots_bit_for_bit_across_layouts(fleet_results, key):
+    """ISSUE 4 / ROADMAP open item: with -deterministic_dots the
+    fleet-sharded Krylov solve must equal the replicated layout EXACTLY
+    (values and residual traces) at matched state-shard count — the
+    lane-at-a-time projections remove the vmap-width dot association."""
+    r = fleet_results[key]
+    assert r["converged"] and r["n_results"] == 5
+    assert r["dv"] == 0.0, r
+    assert r["dpi"] == 0, r
+    assert r["trace_res_eq"] and r["trace_inner_eq"], r
+    assert r["outer_eq"] and r["inner_eq"], r
+
+
+@pytest.mark.parametrize("layout", ["1d", "2d"])
+@pytest.mark.parametrize("mode", ["mincost", "maxreward"])
+def test_device_materialization_sharded_parity(fleet_results, layout, mode):
+    """Device-pipeline from_functions placement must be bit-for-bit the
+    host-callback placement on sharded meshes, padding included."""
+    r = fleet_results[f"fn_place/{layout}/{mode}"]
+    assert r["bitwise"], r
+    assert r["n_to"] == 504 if layout == "1d" else r["n_to"] % 4 == 0
+
+
+def test_function_backed_fleet_layout(fleet_results):
+    """Function-backed MDPs solve under layout='fleet' (per-instance
+    constructors sharded over the fleet axis) with results matching the
+    replicated path bit-for-bit (vi), trimmed to each true n."""
+    r = fleet_results["fn_fleet"]
+    assert r["layout"] in ("fleet", "fleet2d"), r
+    assert r["converged"], r
+    assert r["dv"] == 0.0 and r["dpi"] == 0, r
+    assert r["lens"] == [300, 280, 300], r
+
+
+def test_function_backed_fleet_checkpoint_elastic(fleet_results):
+    """A device-materialized fleet's checkpoint stores the true (B, n) —
+    resuming on the replicated host-built path must work (not raise
+    'refusing to resume') and converge to the uninterrupted solution."""
+    r = fleet_results["fn_fleet_elastic"]
+    assert "error" not in r, r
+    assert r["interrupted"], "phase 1 unexpectedly converged"
+    assert r["converged"], r
+    assert r["dv"] < 1e-8, r
 
 
 def test_pad_fleet_disabled_raises_actionable(fleet_results):
