@@ -2,27 +2,50 @@
 fixed method across instance families (Gargiani et al. 2023/2024, Tables of
 iteration counts / wall time per method).
 
-For each instance family and each method: outer iterations, cumulative inner
-iterations, wall time to the same certified tolerance.
+For each instance family and each registered method: outer iterations,
+cumulative inner iterations, wall time to the same certified tolerance.
+The method list is drawn from the live registry (ISSUE 5), so the new
+``ipi_chebyshev`` / ``ipi_anderson`` inner solvers — and any user-registered
+KSP — ride along automatically.
+
+A second table benchmarks the *stopping criteria*: ``-stop_criterion span``
+vs ``atol`` on the long-mixing chain_walk instance, asserting the span
+seminorm certifies in strictly fewer outer iterations with the same
+returned policy (the paper-level claim behind span stopping).
+
+``MADUPITE_BENCH_SCALE`` (default 1.0) scales the instance sizes so CI can
+run a quick leg (e.g. ``MADUPITE_BENCH_SCALE=0.02``) while the default
+remains the full paper-scale table.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
+import numpy as np
 
 from repro.core import IPIOptions, generators
 from repro.core.driver import solve
+from repro.core.methods import method_names
 
-METHODS = ["vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab"]
+SCALE = float(os.environ.get("MADUPITE_BENCH_SCALE", "1.0"))
+
+METHODS = [m for m in method_names(builtin_only=True) if m != "pi"]
+
+
+def _n(n: int, lo: int = 64) -> int:
+    return max(int(n * SCALE), lo)
+
 
 INSTANCES = {
-    "garnet_50k": lambda: generators.garnet(50_000, 16, 8, gamma=0.99,
+    "garnet_50k": lambda: generators.garnet(_n(50_000), 16, 8, gamma=0.99,
                                             seed=0),
-    "maze2d_150": lambda: generators.maze2d(150, gamma=0.998),
-    "sis_20k": lambda: generators.sis(20_000, 8, gamma=0.999),
-    "chain_0.9999": lambda: generators.chain_walk(5_000, gamma=0.9999),
+    "maze2d_150": lambda: generators.maze2d(max(int(150 * SCALE ** 0.5), 12),
+                                            gamma=0.998),
+    "sis_20k": lambda: generators.sis(_n(20_000), 8, gamma=0.999),
+    "chain_0.9999": lambda: generators.chain_walk(_n(5_000), gamma=0.9999),
 }
 
 
@@ -37,12 +60,43 @@ def run(csv_rows: list):
             t0 = time.time()
             r = solve(mdp, opts)
             wall = time.time() - t0
+            scale_tag = "" if SCALE == 1.0 else f";scale={SCALE}"
             csv_rows.append((
                 f"solvers/{iname}/{method}",
                 wall * 1e6,
                 f"outer={r.outer_iterations};inner={r.inner_iterations};"
-                f"res={r.residual:.2e};converged={r.converged}"))
+                f"res={r.residual:.2e};converged={r.converged}{scale_tag}"))
             print(f"  {iname:16s} {method:16s} wall={wall:7.2f}s "
                   f"outer={r.outer_iterations:6d} "
                   f"inner={r.inner_iterations:8d} conv={r.converged}",
                   flush=True)
+
+    # ---- stopping criteria: span vs atol on the long-mixing chain ----------
+    mdp = generators.chain_walk(_n(5_000), gamma=0.9999)
+    rows = {}
+    for crit in ("atol", "span"):
+        opts = IPIOptions(method="vi", atol=1e-8, dtype="float64",
+                          max_outer=1_000_000, stop_criterion=crit)
+        t0 = time.time()
+        rows[crit] = (solve(mdp, opts), time.time() - t0)
+    r_atol, w_atol = rows["atol"]
+    r_span, w_span = rows["span"]
+    assert r_span.converged and r_atol.converged
+    assert r_span.outer_iterations < r_atol.outer_iterations, \
+        (r_span.outer_iterations, r_atol.outer_iterations)
+    assert np.array_equal(r_span.policy, r_atol.policy), \
+        "span stopping returned a different policy than atol"
+    scale_tag = "" if SCALE == 1.0 else f";scale={SCALE}"
+    for crit, (r, w) in rows.items():
+        csv_rows.append((
+            f"solvers/chain_stop/{crit}", w * 1e6,
+            f"outer={r.outer_iterations};res={r.residual:.2e}{scale_tag}"))
+    speedup = r_atol.outer_iterations / max(r_span.outer_iterations, 1)
+    csv_rows.append((
+        "solvers/chain_stop/span_vs_atol_outers",
+        float(r_span.outer_iterations),
+        f"{speedup:.1f}x fewer outers, same policy{scale_tag}"))
+    print(f"  chain stop-criterion: atol outer={r_atol.outer_iterations} "
+          f"({w_atol:.2f}s) vs span outer={r_span.outer_iterations} "
+          f"({w_span:.2f}s) = {speedup:.1f}x fewer, same policy",
+          flush=True)

@@ -32,11 +32,14 @@ print(f"\nSame certified solution; iPI used {r_ipi.outer_iterations} outer "
       f"iterations vs VI's {r_vi.outer_iterations}.")
 print("optimal value of state 0:", r_ipi.v[0], "| action:", r_ipi.policy[0])
 
-# The run statistics were also written as JSON (-file_stats).
-entries = json.load(open("/tmp/quickstart_stats.json"))
+# The run statistics were also written via -file_stats (streamed JSONL by
+# default: one O(1) appended line per solve; -file_stats_format json keeps
+# the single-array format).
+entries = [json.loads(line)
+           for line in open("/tmp/quickstart_stats.json")]
 assert [e["method"] for e in entries] == ["vi", "ipi_gmres"]
 assert all(e["solves"][0]["converged"] for e in entries)
-print(f"\nstats JSON: {len(entries)} solves recorded, layout="
+print(f"\nstats JSONL: {len(entries)} solves recorded, layout="
       f"{entries[0]['layout']} mesh={entries[0]['mesh']}")
 
 # maxreward mode: read cost as reward, solve max_a (r + gamma P v).  It is

@@ -10,8 +10,14 @@ Three pillars over the solver core (:mod:`repro.core`):
   ingested from code, ``MADUPITE_OPTIONS`` and ``--option k=v``, mapping
   losslessly onto :class:`repro.core.ipi.IPIOptions`;
 * :class:`Session` / :func:`madupite_session` — owns mesh/layout placement,
-  fleet bucketing, the run-chunk cache lifecycle and run outputs (JSON
-  stats, policy/value files).
+  fleet bucketing, the run-chunk cache lifecycle and run outputs (streamed
+  JSONL stats, policy/value files);
+* the **method registries** (:mod:`repro.api.methods`) —
+  :func:`register_ksp` / :func:`register_method` /
+  :func:`register_stop_criterion` plug user inner solvers, outer methods
+  and stopping criteria into the compiled loop, selectable from options
+  everywhere (``-ksp_type`` / ``-method`` / ``-stop_criterion``), plus
+  in-loop monitors (``-monitor`` / ``Session.solve(monitor=...)``).
 
     from repro.api import MDP, madupite_session
 
@@ -28,13 +34,23 @@ from __future__ import annotations
 
 from repro.api.fleet import bucket_indices
 from repro.api.mdp import MDP, place_function_fleet
+from repro.api.methods import (StopMetrics, ksp_names, ksp_table,
+                               method_names, method_table, register_ksp,
+                               register_method, register_stop_criterion,
+                               stop_names, stop_table, unregister_ksp,
+                               unregister_method, unregister_stop_criterion)
 from repro.api.options import (OPTION_SPECS, Options, OptionTypeError,
                                UnknownOptionError, option_table)
 from repro.api.session import Session, madupite_session
 
 __all__ = ["MDP", "Options", "OptionTypeError", "OPTION_SPECS", "Session",
-           "UnknownOptionError", "bucket_indices", "madupite_session",
-           "option_table", "place_function_fleet", "solve", "solve_fleet"]
+           "StopMetrics", "UnknownOptionError", "bucket_indices",
+           "ksp_names", "ksp_table", "madupite_session", "method_names",
+           "method_table", "option_table", "place_function_fleet",
+           "register_ksp", "register_method", "register_stop_criterion",
+           "solve", "solve_fleet", "stop_names", "stop_table",
+           "unregister_ksp", "unregister_method",
+           "unregister_stop_criterion"]
 
 _default_session: Session | None = None
 

@@ -27,12 +27,12 @@ output settings.  This module is that database for the JAX reproduction:
 from __future__ import annotations
 
 import dataclasses
-import difflib
 import os
 import shlex
 from typing import Any, Callable, Iterator, Mapping
 
-from repro.core.ipi import IPIOptions, METHODS, MODES
+from repro.core import methods as _methods
+from repro.core.ipi import IPIOptions, MODES
 
 __all__ = ["OptionSpec", "OPTION_SPECS", "Options", "UnknownOptionError",
            "OptionTypeError", "option_table"]
@@ -43,12 +43,6 @@ ENV_VAR = "MADUPITE_OPTIONS"
 _SOURCES = {"default": 0, "env": 1, "cli": 2, "user": 3}
 
 _LAYOUT_CHOICES = ("auto", "single", "1d", "2d", "fleet", "fleet2d")
-
-# -ksp_type: madupite's inner-linear-solver selector.  It is sugar over
-# -method: when -method is not explicitly set, the ksp choice picks the
-# matching iPI variant.
-_KSP_TO_METHOD = {"gmres": "ipi_gmres", "richardson": "ipi_richardson",
-                  "bicgstab": "ipi_bicgstab", "none": "vi"}
 
 
 class UnknownOptionError(KeyError):
@@ -63,18 +57,33 @@ class OptionTypeError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class OptionSpec:
-    """One registered option: its type, default and constraints."""
+    """One registered option: its type, default and constraints.
+
+    ``choices_fn`` makes the legal values *live*: it is consulted at every
+    coercion (and when rendering the docs table), so options validating
+    against the method/KSP/stop-criterion registries accept names the user
+    registered after import.  ``choices_doc`` is the stable builtin view
+    rendered into the README table.
+    """
 
     name: str                    # "-atol"
     type: type                   # float / int / bool / str
     default: Any
     doc: str
     choices: tuple | None = None
+    choices_fn: Callable[[], tuple] | None = None   # live registry view
+    choices_doc: str | None = None                  # table rendering
     nullable: bool = False       # None is a legal value ("unset")
     validate: Callable[[Any], str | None] | None = None  # -> error or None
 
+    def _choices(self) -> tuple | None:
+        if self.choices_fn is not None:
+            return tuple(self.choices_fn())
+        return self.choices
+
     def coerce(self, value: Any) -> Any:
         """Coerce (possibly a string from env/CLI) to the declared type."""
+        choices = self._choices()
         if value is None:
             if self.nullable:
                 return None
@@ -83,7 +92,7 @@ class OptionSpec:
                 f"(expected {self.type.__name__})")
         if self.nullable and isinstance(value, str) \
                 and value.lower() in ("none", "") \
-                and not (self.choices and value.lower() in self.choices):
+                and not (choices and value.lower() in choices):
             return None
         try:
             if self.type is bool:
@@ -105,10 +114,10 @@ class OptionSpec:
             raise OptionTypeError(
                 f"option {self.name!r} expects {self.type.__name__}, "
                 f"{e}") from None
-        if self.choices is not None and out not in self.choices:
+        if choices is not None and out not in choices:
             raise OptionTypeError(
-                f"option {self.name!r} must be one of {self.choices}, "
-                f"got {out!r}")
+                f"option {self.name!r} must be one of {choices}, "
+                f"got {out!r}{_methods.suggest(out, choices)}")
         if self.validate is not None:
             err = self.validate(out)
             if err:
@@ -139,20 +148,49 @@ def _non_negative(what: str):
     return lambda v: None if v >= 0 else f"must be >= 0, got {v}"
 
 
+def _live_choices_doc(names: tuple, register_fn: str) -> str:
+    shown = " \\| ".join(f"`{n}`" for n in names)
+    return f"{shown} \\| user-registered (`{register_fn}`)"
+
+
 _SPECS = [
     # ---- solver (maps losslessly onto IPIOptions) --------------------------
     OptionSpec("-method", str, "ipi_gmres",
-               "outer/inner method", choices=METHODS),
+               "outer/inner method (validates against the LIVE registry: "
+               "repro.api.register_method)",
+               choices_fn=lambda: _methods.method_names(),
+               choices_doc=_live_choices_doc(
+                   _methods.method_names(builtin_only=True),
+                   "register_method")),
     OptionSpec("-mode", str, "mincost",
                "argmin (mincost) vs argmax (maxreward) Bellman backup",
                choices=MODES),
     OptionSpec("-ksp_type", str, None,
                "inner linear solver (PETSc-style sugar: picks -method "
-               "ipi_<ksp> unless -method is set explicitly)",
-               choices=tuple(_KSP_TO_METHOD), nullable=True),
+               "ipi_<ksp> unless -method is set explicitly; live registry: "
+               "repro.api.register_ksp)",
+               choices_fn=lambda: ("none",) + _methods.ksp_names(),
+               choices_doc=_live_choices_doc(
+                   ("none",) + _methods.ksp_names(builtin_only=True),
+                   "register_ksp"),
+               nullable=True),
     OptionSpec("-atol", float, 1e-8,
                "stop when ||T v - v||_inf <= atol",
                validate=_positive("atol")),
+    OptionSpec("-stop_criterion", str, "atol",
+               "outer stopping predicate compiled into the loop; span "
+               "certifies long-mixing VI far earlier than sup-norm "
+               "residuals (live registry: repro.api."
+               "register_stop_criterion)",
+               choices_fn=lambda: _methods.stop_names(),
+               choices_doc=_live_choices_doc(
+                   _methods.stop_names(builtin_only=True),
+                   "register_stop_criterion")),
+    OptionSpec("-rtol", float, 1e-4,
+               "threshold for -stop_criterion rtol (relative to the "
+               "initial residual)",
+               validate=lambda v: None if 0.0 < v < 1.0
+               else f"must lie in (0, 1), got {v}"),
     OptionSpec("-max_outer", int, 500, "outer-iteration cap",
                validate=_positive("max_outer")),
     OptionSpec("-max_inner", int, 500, "inner-iteration cap per outer step",
@@ -163,9 +201,17 @@ _SPECS = [
                else f"must lie in (0, 1), got {v}"),
     OptionSpec("-restart", int, 32, "GMRES restart length",
                validate=_positive("restart")),
-    OptionSpec("-omega", float, 1.0, "Richardson damping factor"),
+    OptionSpec("-omega", float, 1.0,
+               "Richardson damping factor (also the Anderson mixing "
+               "parameter for ksp anderson)"),
     OptionSpec("-mpi_sweeps", int, 50, "Richardson sweeps for method=mpi",
                validate=_positive("mpi_sweeps")),
+    OptionSpec("-anderson_window", int, 5,
+               "Anderson-acceleration window for the anderson inner solver",
+               validate=_positive("anderson_window")),
+    OptionSpec("-monitor", bool, False,
+               "stream per-outer-iteration records (residual, inner iters, "
+               "elapsed) out of the compiled loop"),
     OptionSpec("-safeguard", bool, True,
                "monotone (VI-fallback) safeguard for Krylov steps"),
     OptionSpec("-deterministic_dots", bool, False,
@@ -210,8 +256,12 @@ _SPECS = [
     OptionSpec("-verbose", bool, False, "per-chunk progress lines"),
     # ---- output ------------------------------------------------------------
     OptionSpec("-file_stats", str, None,
-               "write JSON run statistics here after each solve",
+               "write run statistics here after each solve",
                nullable=True),
+    OptionSpec("-file_stats_format", str, "jsonl",
+               "run-statistics format: jsonl (one line per solve, O(1) "
+               "streamed appends) or json (single array, rewritten per "
+               "solve)", choices=("jsonl", "json")),
     OptionSpec("-file_policy", str, None,
                "write the optimal policy (.npy/.npz) here", nullable=True),
     OptionSpec("-file_cost", str, None,
@@ -224,9 +274,11 @@ OPTION_SPECS: dict[str, OptionSpec] = {s.name: s for s in _SPECS}
 # the IPIOptions field each solver option maps onto (lossless, 1:1)
 _IPI_FIELDS = {
     "-method": "method", "-mode": "mode", "-atol": "atol",
+    "-stop_criterion": "stop_criterion", "-rtol": "rtol",
     "-max_outer": "max_outer", "-max_inner": "max_inner",
     "-inner_forcing": "forcing_eta", "-restart": "restart",
     "-omega": "omega", "-mpi_sweeps": "mpi_sweeps",
+    "-anderson_window": "anderson_window", "-monitor": "monitor",
     "-safeguard": "safeguard", "-deterministic_dots": "deterministic_dots",
     "-impl": "impl", "-dtype": "dtype",
     "-halo": "halo", "-gather_dtype": "gather_dtype",
@@ -239,11 +291,9 @@ def _normalize(key: Any) -> str:
                                  f"got {key!r}")
     name = key if key.startswith("-") else "-" + key
     if name not in OPTION_SPECS:
-        close = difflib.get_close_matches(name, OPTION_SPECS, n=3)
-        hint = f"; did you mean {' / '.join(close)}?" if close else ""
         raise UnknownOptionError(
-            f"unknown option {key!r}{hint} (see repro.api.option_table() "
-            f"for the full registry)")
+            f"unknown option {key!r}{_methods.suggest(name, OPTION_SPECS)} "
+            f"(see repro.api.option_table() for the full registry)")
     return name
 
 
@@ -362,7 +412,13 @@ class Options:
         kw = {field: self.get(name) for name, field in _IPI_FIELDS.items()}
         ksp = self.get("-ksp_type")
         if ksp is not None and not self.is_set("-method"):
-            kw["method"] = _KSP_TO_METHOD[ksp]
+            try:
+                kw["method"] = _methods.method_for_ksp(ksp)
+            except ValueError as e:
+                # keep the module's error contract: bad values raise
+                # OptionTypeError naming the offending key
+                raise OptionTypeError(
+                    f"option '-ksp_type': {e}") from None
         try:
             return IPIOptions(**kw)
         except ValueError as e:
@@ -406,12 +462,18 @@ def _parse_pairs(tokens, where: str):
 
 
 def option_table() -> str:
-    """The full registry rendered as a markdown table (README / docs)."""
+    """The full registry rendered as a markdown table (README / docs).
+
+    Registry-backed options (``choices_fn``) render their stable builtin
+    choice set (``choices_doc``) so the generated docs do not drift when a
+    user registers extra solvers at runtime."""
     lines = ["| option | type | default | description |",
              "|--------|------|---------|-------------|"]
     for spec in OPTION_SPECS.values():
         typ = spec.type.__name__
-        if spec.choices:
+        if spec.choices_doc:
+            typ = spec.choices_doc
+        elif spec.choices:
             typ = " \\| ".join(f"`{c}`" for c in spec.choices)
         default = "—" if spec.default is None else f"`{spec.default}`"
         doc = spec.doc.replace("|", "\\|")

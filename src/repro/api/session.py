@@ -39,6 +39,7 @@ import numpy as np
 from repro.api.fleet import bucket_indices
 from repro.api.mdp import MDP, place_function_fleet
 from repro.api.options import Options
+from repro.core import methods as _methods
 from repro.core import partition
 from repro.core import driver
 from repro.core.driver import SolveResult
@@ -66,6 +67,10 @@ class Session:
         self._mesh_override = mesh
         self._mesh_cache: dict = {}
         self._stats: list[dict] = []
+        # per -file_stats path: (format, entries already on disk) — the
+        # jsonl format streams O(1) appends instead of re-serializing the
+        # whole accumulated list on every solve
+        self._stats_written: dict[str, tuple[str, int]] = {}
         self._closed = False
         self._clear_cache = clear_cache_on_close
         # function-backed builders this session placed on a mesh: their
@@ -171,13 +176,27 @@ class Session:
         return self._mesh_cache[key], layout
 
     # ---- solving -----------------------------------------------------------
-    def solve(self, mdp: MDP | CoreMDP, **overrides) -> SolveResult:
+    def solve(self, mdp: MDP | CoreMDP, *, monitor=None, stop_criterion=None,
+              **overrides) -> SolveResult:
         """Solve one MDP through the session's placement and options.
 
         ``overrides`` are per-call option overrides (keys with or without
         the leading dash): ``s.solve(mdp, method="vi", atol=1e-6)``.
+
+        ``monitor`` streams one record per outer iteration out of the
+        compiled loop — a callable receiving ``{"k", "res", "inner",
+        "elapsed"}`` dicts (or pass ``-monitor`` / ``monitor=True`` for
+        PETSc-style printed lines).  While monitoring is on, the records
+        and the dense convergence-history arrays also land in
+        :attr:`stats` / ``-file_stats``.
+
+        ``stop_criterion`` overrides ``-stop_criterion``: a registered
+        name (``"atol"`` / ``"rtol"`` / ``"span"`` / user-registered) or a
+        traced predicate ``fn(m: repro.api.StopMetrics) -> bool`` compiled
+        straight into the loop.
         """
-        opts = self._opts(overrides)
+        opts, mon_cb, mon_records = self._observe(overrides, monitor,
+                                                  stop_criterion)
         mdp = self._wrap(mdp, opts)
         ipi = self._ipi(opts, mdp.mode)
         mesh, layout = self.placement(opts)
@@ -189,15 +208,16 @@ class Session:
         r = driver.solve(core, ipi, mesh=mesh, layout=layout,
                          checkpoint_dir=opts.get("-checkpoint_dir"),
                          chunk=opts.get("-chunk"),
-                         verbose=opts.get("-verbose"))
+                         verbose=opts.get("-verbose"), monitor=mon_cb)
         wall = time.time() - t0
         r = _trim(r, mdp.n)
-        self._record([r], [mdp], ipi, opts, mesh, layout, wall, fleet=None)
+        self._record([r], [mdp], ipi, opts, mesh, layout, wall, fleet=None,
+                     monitor=mon_records)
         self._write_outputs([r], opts)
         return r
 
-    def solve_fleet(self, mdps: Sequence[MDP | CoreMDP],
-                    **overrides) -> list[SolveResult]:
+    def solve_fleet(self, mdps: Sequence[MDP | CoreMDP], *, monitor=None,
+                    stop_criterion=None, **overrides) -> list[SolveResult]:
         """Solve a fleet of MDPs in batched compiled programs.
 
         Ragged fleets (instances with very different state counts) are
@@ -215,7 +235,8 @@ class Session:
         """
         if not mdps:
             return []
-        opts = self._opts(overrides)
+        opts, mon_cb, mon_records = self._observe(overrides, monitor,
+                                                  stop_criterion)
         wrapped = [self._wrap(m, opts) for m in mdps]
         modes = {m.mode for m in wrapped}
         if len(modes) > 1:
@@ -236,22 +257,58 @@ class Session:
             payload = self._fleet_cores(bmdps, mesh, layout, ipi.mode, opts)
             origin = None if isinstance(payload, list) else \
                 (len(bmdps), max(m.n for m in bmdps))
+            # tag records by bucket so interleaved per-bucket streams stay
+            # attributable in stats (each bucket restarts k at 0)
+            bucket_cb = mon_cb if mon_cb is None or len(buckets) == 1 \
+                else (lambda rec, _j=j: mon_cb({**rec, "bucket": _j}))
             rs = driver.solve_many(
                 payload, ipi, mesh=mesh, layout=layout,
                 pad_fleet=opts.get("-pad_fleet"), origin=origin,
                 checkpoint_dir=bucket_ckpt, chunk=opts.get("-chunk"),
-                verbose=opts.get("-verbose"))
+                verbose=opts.get("-verbose"), monitor=bucket_cb)
             for i, r in zip(bucket, rs):
                 results[i] = _trim(r, wrapped[i].n)
         wall = time.time() - t0
         mesh, layout = self.placement(opts, fleet_size=len(wrapped))
         self._record(results, wrapped, ipi, opts, mesh, layout, wall,
                      fleet=dict(size=len(wrapped),
-                                buckets=[sorted(b) for b in buckets]))
+                                buckets=[sorted(b) for b in buckets]),
+                     monitor=mon_records)
         self._write_outputs(results, opts)
         return results  # type: ignore[return-value]
 
     # ---- internals ---------------------------------------------------------
+    def _observe(self, overrides, monitor, stop_criterion):
+        """Resolve the per-call observability kwargs into the merged
+        per-call options plus the monitor callback chain.
+
+        Returns ``(opts, monitor_cb, records)`` — ``records`` is the list
+        the callback appends every streamed record to (for :attr:`stats` /
+        ``-file_stats``), or ``None`` when monitoring is off.  A callable
+        ``stop_criterion`` is registered ad hoc (with span metrics
+        enabled); ``monitor=False`` force-disables a session-level
+        ``-monitor`` for this call."""
+        overrides = dict(overrides)
+        if stop_criterion is not None:
+            if callable(stop_criterion):
+                stop_criterion = _methods.adhoc_stop_criterion(stop_criterion)
+            overrides.setdefault("-stop_criterion", stop_criterion)
+        if monitor is False:
+            overrides.setdefault("-monitor", False)
+        elif monitor is not None:
+            overrides.setdefault("-monitor", True)
+        opts = self._opts(overrides)
+        if not opts.get("-monitor"):
+            return opts, None, None
+        records: list[dict] = []
+        sink = monitor if callable(monitor) else _methods.print_monitor
+
+        def mon_cb(rec):
+            records.append(rec)
+            sink(rec)
+
+        return opts, mon_cb, records
+
     def _opts(self, overrides: Mapping[str, Any]) -> Options:
         if self._closed:
             raise RuntimeError("this Session is closed; create a new one")
@@ -310,10 +367,11 @@ class Session:
         return ipi
 
     def _record(self, results, mdps, ipi, opts: Options, mesh, layout: str,
-                wall: float, *, fleet) -> None:
+                wall: float, *, fleet, monitor=None) -> None:
         entry = {
             "method": ipi.method,
             "mode": ipi.mode,
+            "stop_criterion": ipi.stop_criterion,
             "layout": layout if mesh is not None else "single",
             "mesh": dict(mesh.shape) if mesh is not None else None,
             "options": _jsonable(opts.as_dict(explicit_only=True)),
@@ -332,14 +390,18 @@ class Session:
                 for m, r in zip(mdps, results)
             ],
         }
+        if monitor is not None:
+            # monitoring on: the streamed records plus the dense
+            # convergence-history arrays land in the run stats
+            entry["monitor"] = sorted(
+                monitor, key=lambda r: (r.get("bucket", 0), r["k"]))
+            for s, r in zip(entry["solves"], results):
+                s["trace_residual"] = [float(x) for x in r.trace_residual]
+                s["trace_inner"] = [int(x) for x in r.trace_inner]
         self._stats.append(entry)
 
     def _write_outputs(self, results, opts: Options) -> None:
-        stats_path = opts.get("-file_stats")
-        if stats_path:
-            _ensure_dir(stats_path)
-            with open(stats_path, "w") as f:
-                json.dump(self._stats, f, indent=1)
+        self._write_stats(opts)
         for key, field in (("-file_policy", "policy"), ("-file_cost", "v")):
             path = opts.get(key)
             if not path:
@@ -351,6 +413,32 @@ class Session:
             else:
                 np.savez(path, **{f"instance_{i}": a
                                   for i, a in enumerate(arrays)})
+
+    def _write_stats(self, opts: Options) -> None:
+        """Persist run statistics.  The default ``jsonl`` format appends
+        only the entries written since the last solve — O(1) per solve
+        instead of re-serializing the whole accumulated list (which made a
+        long-lived serving session O(solves^2) in stats I/O).  ``json``
+        keeps the original single-array format (rewritten per solve).
+        Toggling the format on one path mid-session forces a full rewrite
+        (appending JSONL lines after a JSON array would corrupt both)."""
+        path = opts.get("-file_stats")
+        if not path:
+            return
+        _ensure_dir(path)
+        fmt = opts.get("-file_stats_format")
+        if fmt == "json":
+            with open(path, "w") as f:
+                json.dump(self._stats, f, indent=1)
+            self._stats_written[path] = ("json", len(self._stats))
+            return
+        prev_fmt, start = self._stats_written.get(path, ("jsonl", 0))
+        if prev_fmt != "jsonl":
+            start = 0
+        with open(path, "a" if start else "w") as f:
+            for entry in self._stats[start:]:
+                f.write(json.dumps(entry) + "\n")
+        self._stats_written[path] = ("jsonl", len(self._stats))
 
 
 def madupite_session(options: Options | Mapping[str, Any] | None = None, *,

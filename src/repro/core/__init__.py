@@ -23,10 +23,10 @@ from repro.core.driver import solve as _driver_solve
 from repro.core.driver import solve_many as _driver_solve_many
 from repro.core.ipi import IPIOptions, METHODS, MODES, SolveState
 from repro.core.mdp import DenseMDP, EllMDP, stack_mdps
-from repro.core import bellman, generators, partition
+from repro.core import bellman, generators, methods, partition
 
 __all__ = ["Axes", "DenseMDP", "EllMDP", "IPIOptions", "METHODS", "MODES",
-           "SolveResult", "SolveState", "bellman", "generators",
+           "SolveResult", "SolveState", "bellman", "generators", "methods",
            "partition", "solve", "solve_many", "stack_mdps"]
 
 

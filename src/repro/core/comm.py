@@ -116,6 +116,18 @@ class Axes:
             return jnp.int32(0)
         return jax.lax.axis_index(self.fleet)
 
+    def pmax_fleet(self, x):
+        if self.fleet is None:
+            return x
+        return jax.lax.pmax(x, self.fleet)
+
+    def allgather_fleet(self, x: jax.Array) -> jax.Array:
+        """Gather per-instance rows across fleet shards (the monitor's
+        fleet-wide record; instances are otherwise independent)."""
+        if self.fleet is None:
+            return x
+        return jax.lax.all_gather(x, self.fleet, axis=0, tiled=True)
+
     # ---- action-axis collectives ------------------------------------------------
     def pmin_action(self, x):
         if self.action is None:

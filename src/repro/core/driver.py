@@ -44,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import ipi, partition
+from repro.core import ipi, methods, partition
 from repro.core.comm import Axes
 from repro.core.ipi import IPIOptions, SolveState
 from repro.core.mdp import DenseMDP, EllMDP, MDP, gammas_of, stack_mdps
@@ -57,7 +57,9 @@ class SolveResult:
     v: np.ndarray                  # (n,) optimal values (padding trimmed)
     policy: np.ndarray             # (n,) int32 greedy policy
     residual: float                # final ||T v - v||_inf
-    gap_bound: float               # ||v - v*||_inf certificate: res / (1-gamma)
+    gap_bound: float               # ||v - v*||_inf certificate: res/(1-gamma)
+                                   # (span stopping: gamma*sp/(2*(1-gamma))
+                                   # on the midpoint-corrected v)
     converged: bool
     outer_iterations: int
     inner_iterations: int
@@ -74,12 +76,29 @@ def _result(state: SolveState, opts: IPIOptions, gamma: float,
             n_orig: int) -> SolveResult:
     k = int(state.k)
     res = float(state.res)
+    converged = bool(state.done)  # the compiled stop criterion's verdict
+    v = np.asarray(jax.device_get(state.v))[:n_orig]
+    gap = res / (1.0 - gamma)
+    if converged and opts.stop_criterion == "span" and gamma < 1.0:
+        # Midpoint correction (Puterman §6.6): for any v with
+        # d = T v - v,  T v + gamma/(1-gamma) * min(d) <= v* <=
+        # T v + gamma/(1-gamma) * max(d)  (T is monotone and shifts
+        # constants by gamma, for min- and max-backups alike), so the
+        # midpoint-shifted T v carries the certified error bound
+        # gamma * sp(d) / (2 * (1-gamma)) — the whole point of span
+        # stopping, which the raw iterate (error only <= res/(1-gamma))
+        # would squander.  A constant shift, so the policy is untouched.
+        tv = np.asarray(jax.device_get(state.tv))[:n_orig]
+        d = tv - v
+        scale = gamma / (1.0 - gamma)
+        v = tv + scale * (float(d.max()) + float(d.min())) / 2.0
+        gap = scale * float(state.span) / 2.0
     return SolveResult(
-        v=np.asarray(jax.device_get(state.v))[:n_orig],
+        v=v,
         policy=np.asarray(jax.device_get(state.pi))[:n_orig],
         residual=res,
-        gap_bound=res / (1.0 - gamma),
-        converged=res <= opts.atol,
+        gap_bound=gap,
+        converged=converged,
         outer_iterations=k,
         inner_iterations=int(state.inner_total),
         trace_residual=np.asarray(state.trace_res)[:k + 1],
@@ -122,15 +141,36 @@ def clear_run_cache() -> None:
     The session layer (:mod:`repro.api.session`) owns the cache lifecycle:
     a closing session releases the compiled programs (and the device MDPs
     they pin via their sharding closures) instead of letting them accumulate
-    for the life of the process."""
+    for the life of the process.  (The module-level ``ipi.solve_chunk`` jit
+    cache is left alone — other live sessions share it; it is cleared
+    automatically when a registry name is replaced with ``overwrite=True``,
+    see the ``_clear_compiled`` hook below.)"""
     _RUN_CHUNK_CACHE.clear()
 
 
-def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch):
-    """(run_chunk, init) closures for single-device or shard_map execution."""
+def _clear_compiled() -> None:
+    """Registry hot-swap hook: a re-registered KSP/method/stop-criterion is
+    looked up at trace time, so every compiled solve program — the shard_map
+    run_chunk wrappers AND the module-level single-device ``solve_chunk``
+    jit cache — must be dropped or the old code keeps running."""
+    _RUN_CHUNK_CACHE.clear()
+    ipi.solve_chunk.clear_cache()
+
+
+methods.on_overwrite_clear(_clear_compiled)
+
+
+def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch,
+                  n_true=None):
+    """(run_chunk, init) closures for single-device or shard_map execution.
+
+    ``n_true`` (int, or per-instance int sequence for fleets) is the
+    unpadded state count baked into the initial :class:`SolveState` — the
+    span stop criterion masks mesh-pad rows with it."""
     if mesh is None:
         run_chunk = partial(ipi.solve_chunk, opts=opts, axes=axes)
-        init = lambda v0: ipi.init_state(dev_mdp, axes, opts, v0)
+        init = lambda v0: ipi.init_state(dev_mdp, axes, opts, v0,
+                                         n_true=n_true)
         return run_chunk, init
     # Batched fleets: the leading instance dim (and the per-instance res / k
     # / trace vectors) shard over axes.fleet — which is None (replicated)
@@ -142,13 +182,13 @@ def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch):
         v=P(*lead, axes.state), tv=P(*lead, axes.state),
         pi=P(*lead, axes.state),
         res=scal, k=scal, inner_total=scal, trace_res=scal,
-        trace_inner=scal)
+        trace_inner=scal, res0=scal, span=scal, done=scal, n_true=scal)
     # Reuse one jit wrapper per (mesh, opts, axes, specs) so repeated solves
     # of same-shaped problems — a serving fleet, bench reps, the chunked
     # restart loop — hit jax's compilation cache instead of re-tracing a
     # fresh wrapper every call.  The specs pytree (treedef includes the MDP
     # statics) is exactly what determines the wrapped program.
-    in_specs = (mdp_specs, state_specs, P())
+    in_specs = (mdp_specs, state_specs, P(), P())   # (..., k_hi, mon_id)
     flat, treedef = jax.tree_util.tree_flatten(in_specs)
     key = (mesh, opts, axes, treedef, tuple(flat))
     run_chunk = _RUN_CHUNK_CACHE.get(key)
@@ -168,7 +208,7 @@ def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch):
         if v0 is None:
             f = jax.jit(
                 _shard_map(
-                    lambda m: ipi.init_state(m, axes, opts),
+                    lambda m: ipi.init_state(m, axes, opts, n_true=n_true),
                     mesh=mesh, in_specs=(mdp_specs,),
                     out_specs=state_specs))
             return f(dev_mdp)
@@ -176,7 +216,8 @@ def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch):
         v0 = jax.device_put(jnp.asarray(v0), NamedSharding(mesh, v_spec))
         f = jax.jit(
             _shard_map(
-                lambda m, v: ipi.init_state(m, axes, opts, v),
+                lambda m, v: ipi.init_state(m, axes, opts, v,
+                                            n_true=n_true),
                 mesh=mesh, in_specs=(mdp_specs, v_spec),
                 out_specs=state_specs))
         return f(dev_mdp, v0)
@@ -198,7 +239,9 @@ def _trim_ckpt_state(state: SolveState, n_orig: int,
         v=lead(host.v)[..., :n_orig], tv=lead(host.tv)[..., :n_orig],
         pi=lead(host.pi)[..., :n_orig], res=lead(host.res),
         k=lead(host.k), inner_total=lead(host.inner_total),
-        trace_res=lead(host.trace_res), trace_inner=lead(host.trace_inner))
+        trace_res=lead(host.trace_res), trace_inner=lead(host.trace_inner),
+        res0=lead(host.res0), span=lead(host.span), done=lead(host.done),
+        n_true=lead(host.n_true))
 
 
 def _pad_restored(tree, like):
@@ -220,7 +263,12 @@ def _pad_restored(tree, like):
                     f"max_outer, n, or fleet size); point checkpoint_dir "
                     f"at a fresh directory or re-run with the original "
                     f"settings")
-            a = np.pad(a, [(0, t - s) for s, t in zip(a.shape, l.shape)])
+            # bool leaves are the `done` flags: padded fleet lanes are dummy
+            # instances and must restore as already-converged (True), not as
+            # active lanes the zero-fill would wake up
+            fill = True if a.dtype == np.bool_ else 0
+            a = np.pad(a, [(0, t - s) for s, t in zip(a.shape, l.shape)],
+                       constant_values=fill)
         return a.astype(l.dtype)
     return jax.tree_util.tree_map(pad, tree, like)
 
@@ -253,11 +301,18 @@ def _restore_or_init(init, v0, checkpoint_dir, verbose, expect=None):
 def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
           mesh=None, layout: str = "1d", v0=None,
           checkpoint_dir: str | None = None, chunk: int = 64,
-          verbose: bool = False) -> SolveResult:
-    """Solve an MDP to ``||T v - v||_inf <= opts.atol``.
+          verbose: bool = False, monitor=None) -> SolveResult:
+    """Solve an MDP until ``opts.stop_criterion`` is satisfied (default:
+    ``||T v - v||_inf <= opts.atol``).
 
     ``mesh=None`` runs single-device; otherwise the MDP is padded, sharded
     onto ``mesh`` and the identical loop runs SPMD under ``shard_map``.
+
+    ``monitor`` (requires ``opts.monitor=True``) is a callable receiving one
+    dict per outer iteration — ``{"k", "res", "inner", "elapsed"}`` —
+    streamed out of the compiled loop via ``jax.debug.callback``; when
+    ``opts.monitor`` is set without a callable, records print PETSc-style
+    (:func:`repro.core.methods.print_monitor`).
     """
     if mdp.batch is not None:
         raise ValueError("solve() takes one MDP instance; for a batched "
@@ -278,25 +333,38 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
         if v0 is not None:
             v0 = jnp.pad(jnp.asarray(v0),
                          (0, dev_mdp.n_global - n_orig))
-    run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, None)
+    run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, None,
+                                    n_true=n_orig)
 
     state = _restore_or_init(init, v0, checkpoint_dir, verbose,
                              expect=dict(n=n_orig))
-    while True:
-        k = int(jax.device_get(state.k))
-        res = float(jax.device_get(state.res))
-        if verbose:
-            print(f"[driver] k={k} residual={res:.3e}")
-        # NaN residual (inner-solver breakdown): neither "active" on device
-        # nor "converged" here — bail out instead of spinning forever.
-        if res <= opts.atol or k >= opts.max_outer or np.isnan(res):
-            break
-        k_hi = jnp.int32(min(k + chunk, opts.max_outer))
-        state = run_chunk(dev_mdp, state, k_hi)
-        if checkpoint_dir:
-            ckpt.save(checkpoint_dir, int(jax.device_get(state.k)),
-                      _trim_ckpt_state(state, n_orig, None),
-                      meta=dict(method=opts.method, n=n_orig))
+    mid = 0
+    if opts.monitor:
+        mid = methods.monitor_handle(monitor or methods.print_monitor)
+    try:
+        if mid:   # the k=0 (or resume-point) record, emitted host-side
+            methods.emit_host(mid, int(jax.device_get(state.k)),
+                              float(jax.device_get(state.res)), 0)
+        while True:
+            k = int(jax.device_get(state.k))
+            res = float(jax.device_get(state.res))
+            done = bool(jax.device_get(state.done))
+            if verbose:
+                print(f"[driver] k={k} residual={res:.3e}")
+            # NaN residual (inner-solver breakdown): neither "active" on
+            # device nor "converged" here — bail out, don't spin forever.
+            if done or k >= opts.max_outer or np.isnan(res):
+                break
+            k_hi = jnp.int32(min(k + chunk, opts.max_outer))
+            state = run_chunk(dev_mdp, state, k_hi, jnp.int32(mid))
+            if checkpoint_dir:
+                ckpt.save(checkpoint_dir, int(jax.device_get(state.k)),
+                          _trim_ckpt_state(state, n_orig, None),
+                          meta=dict(method=opts.method, n=n_orig))
+    finally:
+        if mid:
+            jax.effects_barrier()   # flush in-flight monitor callbacks
+            methods.monitor_release(mid)
 
     if mesh is not None:
         # gather the sharded fields for the host-side result
@@ -308,7 +376,7 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
                mesh=None, layout: str = "1d", v0s=None,
                pad_fleet: bool = True, origin: tuple[int, int] | None = None,
                checkpoint_dir: str | None = None, chunk: int = 64,
-               verbose: bool = False) -> list[SolveResult]:
+               verbose: bool = False, monitor=None) -> list[SolveResult]:
     """Solve a fleet of MDPs in one compiled batched program.
 
     ``mdps`` is a sequence of (unbatched) MDP instances — or an
@@ -398,29 +466,51 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
         if v0 is not None:
             v0 = jnp.pad(v0, ((0, dev_mdp.batch - v0.shape[0]),
                               (0, dev_mdp.n_global - v0.shape[-1])))
-    run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, dev_mdp.batch)
+    # per-instance unpadded state counts, 0 for padded dummy fleet lanes
+    nt_vec = np.asarray(
+        list(n_origs) + [0] * (dev_mdp.batch - len(n_origs)), np.int32)
+    run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes,
+                                    dev_mdp.batch, n_true=nt_vec)
 
     state = _restore_or_init(init, v0, checkpoint_dir, verbose,
                              expect=dict(n=n_true, batch=b_orig))
-    while True:
-        k = np.asarray(jax.device_get(state.k))
-        res = np.asarray(jax.device_get(state.res))
-        # isnan: a broken-down lane is not device-active, so count it done
-        done = (res <= opts.atol) | (k >= opts.max_outer) | np.isnan(res)
-        if verbose:
-            n_act = int((~done).sum())
-            print(f"[driver] fleet B={len(k)} active={n_act} "
-                  f"k_max={int(k.max())} res_max={float(res.max()):.3e}")
-        if done.all():
-            break
-        k_hi = jnp.int32(min(int(k[~done].min()) + chunk, opts.max_outer))
-        state = run_chunk(dev_mdp, state, k_hi)
-        if checkpoint_dir:
-            trimmed = _trim_ckpt_state(state, n_true, b_orig)
-            ckpt.save(checkpoint_dir, int(np.max(np.asarray(trimmed.k))),
-                      trimmed,
-                      meta=dict(method=opts.method, batch=b_orig,
-                                n=n_true, layout=layout))
+    mid = 0
+    if opts.monitor:
+        # trim=b_orig: monitor records carry the TRUE fleet rows, not the
+        # mesh-padded dummy lanes
+        mid = methods.monitor_handle(monitor or methods.print_monitor,
+                                     trim=b_orig)
+    try:
+        if mid:
+            methods.emit_host(mid,
+                              np.asarray(jax.device_get(state.k)),
+                              np.asarray(jax.device_get(state.res)),
+                              np.zeros(dev_mdp.batch, np.int32))
+        while True:
+            k = np.asarray(jax.device_get(state.k))
+            res = np.asarray(jax.device_get(state.res))
+            crit = np.asarray(jax.device_get(state.done))
+            # isnan: a broken-down lane is not device-active -> count it done
+            done = crit | (k >= opts.max_outer) | np.isnan(res)
+            if verbose:
+                n_act = int((~done).sum())
+                print(f"[driver] fleet B={len(k)} active={n_act} "
+                      f"k_max={int(k.max())} res_max={float(res.max()):.3e}")
+            if done.all():
+                break
+            k_hi = jnp.int32(min(int(k[~done].min()) + chunk,
+                                 opts.max_outer))
+            state = run_chunk(dev_mdp, state, k_hi, jnp.int32(mid))
+            if checkpoint_dir:
+                trimmed = _trim_ckpt_state(state, n_true, b_orig)
+                ckpt.save(checkpoint_dir,
+                          int(np.max(np.asarray(trimmed.k))), trimmed,
+                          meta=dict(method=opts.method, batch=b_orig,
+                                    n=n_true, layout=layout))
+    finally:
+        if mid:
+            jax.effects_barrier()   # flush in-flight monitor callbacks
+            methods.monitor_release(mid)
 
     state = jax.device_get(state)
     out = []

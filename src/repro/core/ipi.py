@@ -1,8 +1,11 @@
 """Inexact policy iteration (iPI) — the paper's core algorithm.
 
 Implements the outer loop of Gargiani et al. 2024, Algorithm 3, with the
-inner policy-evaluation solve delegated to a selectable inner solver.  The
-method zoo madupite exposes maps onto one code path:
+inner policy-evaluation solve delegated to a selectable inner solver drawn
+from the LIVE method/KSP registries (:mod:`repro.core.methods` — the
+PETSc-KSP analogue; user solvers registered via
+:func:`repro.api.register_ksp` dispatch through the same path).  The
+builtin zoo maps onto one code path:
 
   ``vi``             value iteration          (inner = 0 Richardson sweeps)
   ``mpi``            modified policy iter.    (inner = fixed Richardson sweeps)
@@ -10,6 +13,17 @@ method zoo madupite exposes maps onto one code path:
   ``ipi_gmres``      iPI + restarted GMRES    (the iGMRES-PI of the paper)
   ``ipi_bicgstab``   iPI + BiCGStab
   ``pi``             (near-)exact policy iteration (GMRES, tight tol)
+  ``ipi_chebyshev``  iPI + Chebyshev semi-iteration (collective-free inner)
+  ``ipi_anderson``   iPI + Anderson-accelerated VI
+
+The outer stopping rule is equally pluggable (``opts.stop_criterion`` ->
+the stop-criterion registry): ``atol`` (sup-norm residual), ``rtol``
+(relative), ``span`` (span seminorm — certifies long-mixing VI far
+earlier), or user-registered traced predicates; the chosen predicate
+compiles into the ``lax.while_loop`` condition.  ``opts.monitor`` streams
+one record per outer iteration out of the compiled loop via
+``jax.debug.callback`` (fleet layouts gather per-instance rows and emit
+exactly one host record via lead-shard gating).
 
 Every outer iteration does exactly one Bellman backup (greedy step + residual)
 and one inexact solve of ``(I - gamma P_pi) v = g_pi`` warm-started at
@@ -55,12 +69,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import bellman
+from repro.core import bellman, methods
 from repro.core.comm import Axes
 from repro.core.mdp import MDP, batch_parts
-from repro.core.solvers import bicgstab, gmres, richardson
 
-METHODS = ("vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab", "pi")
+# Back-compat view of the builtin method zoo.  The zoo itself is a LIVE
+# registry (repro.core.methods / repro.api.register_ksp): user-registered
+# methods are equally valid IPIOptions.method values but do not appear here.
+METHODS = tuple(methods.method_names(builtin_only=True))
 MODES = ("mincost", "maxreward")
 
 
@@ -68,17 +84,26 @@ MODES = ("mincost", "maxreward")
 class IPIOptions:
     """Static solver options (hashable -> usable as a jit static arg)."""
 
-    method: str = "ipi_gmres"
+    method: str = "ipi_gmres"   # any name in the live method registry
+                                # (repro.core.methods / api.register_method)
     mode: str = "mincost"       # "mincost" (argmin backup) | "maxreward"
                                 # (argmax backup; cost is read as reward)
     atol: float = 1e-8          # stop when ||T v - v||_inf <= atol
+    stop_criterion: str = "atol"  # outer stopping predicate compiled into
+                                # the loop: atol | rtol | span | any name
+                                # registered via api.register_stop_criterion
+    rtol: float = 1e-4          # threshold for stop_criterion="rtol"
+                                # (relative to the initial residual)
     max_outer: int = 500
     max_inner: int = 500        # inner-iteration cap per outer step
     forcing_eta: float = 0.05   # inner tol = eta * ||T v - v||_inf
     restart: int = 32           # GMRES restart length
     omega: float = 1.0          # Richardson damping
     mpi_sweeps: int = 50        # L for modified policy iteration
+    anderson_window: int = 5    # AA depth for the anderson inner solver
     safeguard: bool = True      # monotone (VI-fallback) safeguard
+    monitor: bool = False       # stream per-outer-iteration records out of
+                                # the compiled loop (jax.debug.callback)
     deterministic_dots: bool = False  # pin the GMRES projection accumulation
                                 # order (lane-at-a-time lax.map) so
                                 # fleet-sharded Krylov values are bit-equal
@@ -93,9 +118,15 @@ class IPIOptions:
 
     def __post_init__(self):
         # Raised (not assert'd): option validation must survive `python -O`.
-        if self.method not in METHODS:
-            raise ValueError(f"unknown method {self.method!r}; "
-                             f"pick one of {METHODS}")
+        # Method / stop-criterion names validate against the LIVE registries
+        # (user-registered solvers are first-class); error messages carry
+        # close-spelling suggestions drawn from whatever is registered now.
+        err = methods.check_method(self.method)
+        if err:
+            raise ValueError(err)
+        err = methods.check_stop(self.stop_criterion)
+        if err:
+            raise ValueError(err)
         if self.mode not in MODES:
             raise ValueError(f"unknown mode {self.mode!r}; "
                              f"pick one of {MODES}")
@@ -104,6 +135,8 @@ class IPIOptions:
                              f"default), got {self.dtype!r}")
         if not self.atol > 0:
             raise ValueError(f"atol must be > 0, got {self.atol}")
+        if not 0.0 < self.rtol < 1.0:
+            raise ValueError(f"rtol must lie in (0, 1), got {self.rtol}")
         if self.max_outer < 1:
             raise ValueError(f"max_outer must be >= 1, got {self.max_outer}")
         if self.max_inner < 0:
@@ -111,16 +144,22 @@ class IPIOptions:
         if not 0.0 < self.forcing_eta < 1.0:
             raise ValueError(f"forcing_eta must lie in (0, 1) for iPI "
                              f"convergence, got {self.forcing_eta}")
-        if self.deterministic_dots and self.method == "ipi_bicgstab":
+        spec = methods.get_method(self.method)
+        if self.deterministic_dots and spec.ksp is not None \
+                and not methods.get_ksp(spec.ksp).deterministic:
             raise ValueError(
-                "deterministic_dots pins the GMRES accumulation order and "
-                "is not implemented for ipi_bicgstab (its dots would still "
-                "re-associate by lane count); use ipi_gmres/pi, or drop "
-                "the flag")
+                f"deterministic_dots pins batch-invariant accumulation "
+                f"orders, which ksp {spec.ksp!r} (method {self.method!r}) "
+                f"does not implement — its dots would still re-associate "
+                f"by lane count; use a deterministic ksp (e.g. "
+                f"gmres/richardson/chebyshev) or drop the flag")
         if self.restart < 1:
             raise ValueError(f"restart must be >= 1, got {self.restart}")
         if self.mpi_sweeps < 1:
             raise ValueError(f"mpi_sweeps must be >= 1, got {self.mpi_sweeps}")
+        if self.anderson_window < 1:
+            raise ValueError(f"anderson_window must be >= 1, "
+                             f"got {self.anderson_window}")
         if not isinstance(self.halo, int) or self.halo < 0:
             raise ValueError(f"halo must be a non-negative int (0 disables "
                              f"the banded layout), got {self.halo!r}")
@@ -158,6 +197,13 @@ class SolveState:
     inner_total: jax.Array  # scalar int32, cumulative inner iterations
     trace_res: jax.Array    # (max_outer + 1,) f32, residual after k outers
     trace_inner: jax.Array  # (max_outer,) int32, inner iters per outer
+    res0: jax.Array         # scalar, residual at k=0 (rtol baseline)
+    span: jax.Array         # scalar, sp(T v - v) over the TRUE states (inf
+                            # unless the stop criterion declared needs_span)
+    done: jax.Array         # scalar bool, stop criterion satisfied
+    n_true: jax.Array       # scalar int32, unpadded state count: mesh-pad
+                            # rows are absorbing zero-cost states whose 0
+                            # residual must not enter the span min
 
 
 def _local_gamma_t(gamma_t: jax.Array | None, batch: int,
@@ -178,63 +224,75 @@ def _local_gamma_t(gamma_t: jax.Array | None, batch: int,
 
 def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
                v0: jax.Array | None = None, *,
-               gamma_t: jax.Array | None = None) -> SolveState:
+               gamma_t: jax.Array | None = None,
+               n_true=None) -> SolveState:
     if mdp.batch is not None:
         view, in_ax, g_t = batch_parts(mdp)
         g_t = gamma_t if gamma_t is not None else g_t
         g_t = _local_gamma_t(g_t, mdp.batch, axes)
-        fn = lambda m, v, gt: init_state(m, axes, opts, v, gamma_t=gt)
+        nt = None if n_true is None else _local_gamma_t(
+            jnp.asarray(n_true, jnp.int32), mdp.batch, axes)
+        fn = lambda m, v, gt, t: init_state(m, axes, opts, v, gamma_t=gt,
+                                            n_true=t)
         return jax.vmap(fn, in_axes=(in_ax, None if v0 is None else 0,
-                                     None if g_t is None else 0))(view, v0,
-                                                                  g_t)
+                                     None if g_t is None else 0,
+                                     None if nt is None else 0))(view, v0,
+                                                                 g_t, nt)
     dt = jnp.dtype(opts.dtype)
+    nt = jnp.int32(mdp.n_global if n_true is None else n_true)
     v = jnp.zeros((mdp.n_local,), dt) if v0 is None else v0.astype(dt)
     v_g = bellman.gather_v(v, axes, halo=opts.halo)
     tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl, halo=opts.halo,
                             gamma_t=gamma_t, mode=opts.mode)
     tv = tv.astype(dt)
     res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
+    span = _span_of(tv - v, axes, opts, nt)
+    g = gamma_t if gamma_t is not None else mdp.gamma
+    done = methods.stop_done(opts, res=res, span=span, res0=res,
+                             k=jnp.int32(0), gamma=g)
     trace_res = jnp.full((opts.max_outer + 1,), jnp.nan, dt)
     return SolveState(
         v=v, tv=tv, pi=pi, res=res, k=jnp.int32(0),
         inner_total=jnp.int32(0),
         trace_res=trace_res.at[0].set(res),
-        trace_inner=jnp.full((opts.max_outer,), -1, jnp.int32))
+        trace_inner=jnp.full((opts.max_outer,), -1, jnp.int32),
+        res0=res, span=span, done=done, n_true=nt)
 
 
-def _inner_solve(opts: IPIOptions, matvec, b, x0, tol, axes: Axes):
-    m = opts.method
-    if m == "vi":
-        return x0, jnp.int32(0), jnp.float32(jnp.inf)
-    if m == "mpi":
-        # x0 == T_pi v already counts as one sweep -> L - 1 more.
-        return richardson(matvec, b, x0, tol=jnp.float32(0.0),
-                          maxiter=max(opts.mpi_sweeps - 1, 0), axes=axes,
-                          omega=opts.omega)
-    if m == "ipi_richardson":
-        return richardson(matvec, b, x0, tol=tol, maxiter=opts.max_inner,
-                          axes=axes, omega=opts.omega)
-    if m == "ipi_gmres":
-        return gmres(matvec, b, x0, tol=tol, maxiter=opts.max_inner,
-                     axes=axes, restart=opts.restart,
-                     deterministic=opts.deterministic_dots)
-    if m == "ipi_bicgstab":
-        return bicgstab(matvec, b, x0, tol=tol, maxiter=opts.max_inner,
-                        axes=axes)
-    if m == "pi":
-        return gmres(matvec, b, x0, tol=jnp.float32(opts.atol) * 0.01,
-                     maxiter=opts.max_inner, axes=axes, restart=opts.restart,
-                     deterministic=opts.deterministic_dots)
-    raise ValueError(m)
+def _span_of(d: jax.Array, axes: Axes, opts: IPIOptions,
+             n_true: jax.Array) -> jax.Array:
+    """Span seminorm ``sp(d) = max(d) - min(d)`` over the TRUE states —
+    computed (one extra pmax pair) only when the selected stop criterion
+    declared ``needs_span``; otherwise a free +inf constant so the
+    monitor-disabled hot path stays untouched.
+
+    Mesh padding appends absorbing zero-cost states whose residual is
+    exactly 0; left in the min they would pin ``sp(d)`` near ``max(d)``
+    and silently erase the early-certification benefit on padded layouts
+    (and break replicated-vs-sharded equality for non-divisible ``n``), so
+    rows at global index >= ``n_true`` are masked to -inf on both sides.
+    A shard that is entirely padding contributes -inf, which the cross-
+    shard pmax discards; an all-padding dummy fleet lane yields span
+    -inf (trivially "converged", matching its frozen res = 0)."""
+    if not methods.get_stop(opts.stop_criterion).needs_span:
+        return jnp.asarray(jnp.inf, d.dtype)
+    rows = axes.state_index() * d.shape[0] + jnp.arange(d.shape[0])
+    ninf = jnp.asarray(-jnp.inf, d.dtype)
+    valid = rows < n_true
+    dmax = axes.pmax_state(jnp.max(jnp.where(valid, d, ninf)))
+    dmin = -axes.pmax_state(jnp.max(jnp.where(valid, -d, ninf)))
+    return dmax - dmin
 
 
 def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
                 axes: Axes, gamma_t: jax.Array | None):
     """One outer iPI iteration minus the k/trace bookkeeping.
 
-    Returns ``(v1, tv1, pi1, res1, inner_iters)`` — shared by the unbatched
-    :func:`outer_step` and the batched body of :func:`solve_chunk` (which
-    does its bookkeeping fleet-wide, outside the vmap).
+    Returns ``(v1, tv1, pi1, res1, span1, inner_iters)`` — shared by the
+    unbatched :func:`outer_step` and the batched body of :func:`solve_chunk`
+    (which does its bookkeeping fleet-wide, outside the vmap).  The inner
+    policy-evaluation solve dispatches through the live KSP/method registry
+    (:func:`repro.core.methods.inner_solve`).
     """
     rows = bellman.policy_rows(mdp, state.pi, axes)
     b = bellman.b_pi(rows, axes).astype(state.tv.dtype)
@@ -243,7 +301,9 @@ def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
                                            mdp=mdp, halo=opts.halo,
                                            gather_dtype=gd, gamma_t=gamma_t)
     tol = jnp.maximum(opts.forcing_eta * state.res, jnp.float32(1e-30))
-    v1, inner_iters, _ = _inner_solve(opts, matvec, b, state.tv, tol, axes)
+    gamma = gamma_t if gamma_t is not None else mdp.gamma
+    v1, inner_iters, _ = methods.inner_solve(
+        opts, matvec, b, state.tv, tol, axes, context=dict(gamma=gamma))
 
     def eval_at(v):
         v_g = bellman.gather_v(v, axes, halo=opts.halo)   # exact gather
@@ -254,32 +314,47 @@ def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
         return v, tv, pi, res
 
     cand = eval_at(v1)
-    if opts.safeguard and opts.method not in ("vi", "mpi", "ipi_richardson"):
-        # Krylov steps are not contractions; reject any step that increases
-        # the Bellman residual and take the (guaranteed) VI step instead.
-        # ``res`` is replicated across devices -> no control-flow divergence.
+    spec = methods.get_method(opts.method)
+    if opts.safeguard and spec.safeguarded and spec.ksp is not None:
+        # Krylov-type steps are not contractions; reject any step that
+        # increases the Bellman residual and take the (guaranteed) VI step
+        # instead.  ``res`` is replicated across devices -> no control-flow
+        # divergence.
         cand = jax.lax.cond(cand[3] <= state.res,
                             lambda: cand, lambda: eval_at(state.tv))
     v1, tv1, pi1, res1 = cand
-    return v1, tv1, pi1, res1, inner_iters
+    span1 = _span_of(tv1 - v1, axes, opts, state.n_true)
+    return v1, tv1, pi1, res1, span1, inner_iters
 
 
 def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
                axes: Axes, *, gamma_t: jax.Array | None = None) -> SolveState:
     """One outer iPI iteration (greedy policy is already in ``state``)."""
-    v1, tv1, pi1, res1, inner_iters = _outer_core(mdp, state, opts, axes,
-                                                  gamma_t)
+    v1, tv1, pi1, res1, span1, inner_iters = _outer_core(mdp, state, opts,
+                                                         axes, gamma_t)
     k1 = state.k + 1
+    g = gamma_t if gamma_t is not None else mdp.gamma
+    done = methods.stop_done(opts, res=res1, span=span1, res0=state.res0,
+                             k=k1, gamma=g)
     return SolveState(
         v=v1, tv=tv1, pi=pi1, res=res1, k=k1,
         inner_total=state.inner_total + inner_iters,
         trace_res=state.trace_res.at[k1].set(res1),
-        trace_inner=state.trace_inner.at[state.k].set(inner_iters))
+        trace_inner=state.trace_inner.at[state.k].set(inner_iters),
+        res0=state.res0, span=span1, done=done, n_true=state.n_true)
+
+
+def _lead_flag(axes: Axes) -> jax.Array:
+    """True on exactly one mesh shard — the monitor callback fires on every
+    device, so only the lead shard's (replicated) record is kept."""
+    return (axes.state_index() == 0) & (axes.action_index() == 0) & \
+        (axes.fleet_index() == 0)
 
 
 @partial(jax.jit, static_argnames=("opts", "axes"))
 def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
-                opts: IPIOptions, axes: Axes) -> SolveState:
+                mon_id: jax.Array = 0, opts: IPIOptions = None,
+                axes: Axes = None) -> SolveState:
     """Run outer iterations until convergence or ``k == k_hi`` (device-side).
 
     With a batched ``mdp`` + batched ``state`` this is ONE while loop for the
@@ -296,10 +371,16 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
     """
     if mdp.batch is None:
         def cond(s: SolveState):
-            return (s.res > opts.atol) & (s.k < k_hi)
+            return (~s.done) & ~jnp.isnan(s.res) & (s.k < k_hi)
 
-        return jax.lax.while_loop(
-            cond, lambda s: outer_step(mdp, s, opts, axes), state)
+        def body(s: SolveState) -> SolveState:
+            s1 = outer_step(mdp, s, opts, axes)
+            if opts.monitor:
+                methods.emit_monitor(mon_id, _lead_flag(axes), s1.k, s1.res,
+                                     s1.inner_total - s.inner_total)
+            return s1
+
+        return jax.lax.while_loop(cond, body, state)
 
     view, in_ax, gamma_t = batch_parts(mdp)
     gamma_t = _local_gamma_t(gamma_t, mdp.batch, axes)
@@ -308,20 +389,23 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
         in_axes=(in_ax, 0, None if gamma_t is None else 0))
 
     def active(s: SolveState) -> jax.Array:
-        return (s.res > opts.atol) & (s.k < k_hi)
+        return (~s.done) & ~jnp.isnan(s.res) & (s.k < k_hi)
 
     def body(s: SolveState) -> SolveState:
         act = active(s)
-        v1, tv1, pi1, res1, inner = core(view, s, gamma_t)
+        v1, tv1, pi1, res1, span1, inner = core(view, s, gamma_t)
         sel = lambda n, o: jnp.where(act[:, None] if n.ndim > 1 else act,
                                      n, o)
         k1 = s.k + act.astype(jnp.int32)
+        g = gamma_t if gamma_t is not None else mdp.gamma
+        done1 = methods.stop_done(opts, res=res1, span=span1, res0=s.res0,
+                                  k=k1, gamma=g)
         # Lockstep: all active lanes write outer index k_col; frozen lanes
         # keep their old column value.
         k_col = jnp.max(jnp.where(act, k1, 0))
         res_col = jnp.where(act, res1, s.trace_res[:, k_col])
         inner_col = jnp.where(act, inner, s.trace_inner[:, k_col - 1])
-        return SolveState(
+        s1 = SolveState(
             v=sel(v1, s.v), tv=sel(tv1, s.tv), pi=sel(pi1, s.pi),
             res=sel(res1, s.res), k=k1,
             inner_total=s.inner_total + jnp.where(act, inner, 0),
@@ -329,7 +413,18 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
                 s.trace_res, res_col[:, None], (jnp.int32(0), k_col)),
             trace_inner=jax.lax.dynamic_update_slice(
                 s.trace_inner, inner_col[:, None], (jnp.int32(0),
-                                                    k_col - 1)))
+                                                    k_col - 1)),
+            res0=s.res0, span=sel(span1, s.span),
+            done=jnp.where(act, done1, s.done), n_true=s.n_true)
+        if opts.monitor:
+            # One fleet-wide record per outer iteration: gather the
+            # per-instance rows over the fleet axis (every shard runs the
+            # collective; only the lead shard's callback is kept).
+            methods.emit_monitor(
+                mon_id, _lead_flag(axes),
+                axes.pmax_fleet(k_col), axes.allgather_fleet(s1.res),
+                axes.allgather_fleet(jnp.where(act, inner, 0)))
+        return s1
 
     # The loop condition is all-reduced over the fleet axis: every fleet
     # shard runs the same trip count (a shard whose lanes all converged

@@ -1,0 +1,643 @@
+"""Pluggable solution-method registries — the PETSc-KSP analogue.
+
+madupite's core selling point is *flexibility in solution methods*: the C++
+core delegates the inexact policy-evaluation step to PETSc's pluggable KSP
+solvers and lets users pick methods and stopping conditions at runtime.
+This module is that extension surface for the JAX reproduction.  Three live
+registries replace the former frozen ``METHODS`` tuple and if/elif dispatch:
+
+* **KSP registry** — inner linear solvers for ``(I - gamma P_pi) x = g_pi``
+  with the uniform signature ``fn(matvec, b, x0, *, tol, maxiter, axes)``
+  (optionally also accepting ``opts`` — the static
+  :class:`~repro.core.ipi.IPIOptions` — and ``context`` — per-solve traced
+  values, currently ``{"gamma": ...}``).  Registering ``name`` also
+  auto-registers the outer method ``ipi_<name>`` (forcing-term stopping,
+  monotone safeguard), so a user solver is immediately selectable with
+  ``-ksp_type name`` / ``-method ipi_name`` from Python, ``MADUPITE_OPTIONS``
+  and the CLI without touching repro internals.
+* **Method registry** — outer iterations: which KSP runs the inexact
+  policy-evaluation step and under which inner-stopping policy
+  (``forcing`` / ``sweeps`` / ``tight`` / ``none``), and whether the
+  monotone (VI-fallback) safeguard applies.
+* **Stop-criterion registry** — outer stopping predicates compiled into the
+  device loop: builtin ``atol`` (sup-norm residual), ``rtol`` (relative to
+  the initial residual) and ``span`` (span seminorm — certifies long-mixing
+  VI far earlier than sup-norm residuals), plus user-registered traced
+  predicates over :class:`StopMetrics`.
+
+All registered callables are traced into compiled programs, so they must be
+``lax``-compatible (jit / vmap / shard_map safe).  Re-registering a name
+with different code (``overwrite=True``) automatically clears the compiled
+solve caches (the driver registers its cache-clearers via
+:func:`on_overwrite_clear`) — a stale program would silently keep running
+the old solver otherwise.
+
+The monitor dispatch table also lives here: compiled solve loops stream
+per-iteration records through one fixed ``jax.debug.callback`` trampoline
+(:func:`emit_monitor`) keyed by a *traced* monitor id, so turning a monitor
+on never retraces or recompiles a cached program for a different callback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import inspect
+import itertools
+import time
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import Axes
+from repro.core.solvers import anderson, bicgstab, chebyshev, gmres, richardson
+
+__all__ = [
+    "KSPSpec", "MethodSpec", "StopMetrics", "StopSpec",
+    "register_ksp", "register_method", "register_stop_criterion",
+    "unregister_ksp", "unregister_method", "unregister_stop_criterion",
+    "ksp_names", "method_names", "stop_names",
+    "get_ksp", "get_method", "get_stop", "method_for_ksp",
+    "check_ksp", "check_method", "check_stop",
+    "inner_solve", "stop_done", "adhoc_stop_criterion",
+    "monitor_handle", "monitor_release", "emit_monitor", "emit_host",
+    "print_monitor",
+]
+
+INNER_POLICIES = ("none", "forcing", "sweeps", "tight")
+
+
+# --------------------------------------------------------------------------- #
+# Registry records                                                            #
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class KSPSpec:
+    """One registered inner linear solver."""
+
+    name: str
+    fn: Callable                 # normalized: fn(matvec, b, x0, tol, maxiter,
+    #                              axes, opts, context) -> (x, iters, res)
+    doc: str = ""
+    deterministic: bool = False  # honors -deterministic_dots (its arithmetic
+    #                              is invariant to the vmapped lane count)
+    builtin: bool = False
+
+    def call(self, matvec, b, x0, *, tol, maxiter, axes, opts, context):
+        return self.fn(matvec, b, x0, tol, maxiter, axes, opts, context)
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """One registered outer method: a KSP plus an inner-stopping policy."""
+
+    name: str
+    ksp: str | None              # KSP registry name; None -> no inner solve
+    inner: str = "forcing"       # none | forcing (eta * res) | sweeps
+    #                              (mpi_sweeps fixed) | tight (0.01 * atol)
+    safeguarded: bool = True     # monotone VI-fallback applies (Krylov-type
+    #                              steps are not contractions)
+    doc: str = ""
+    builtin: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class StopMetrics:
+    """Per-outer-iteration quantities a stopping criterion may read.
+
+    All array fields are elementwise-broadcastable: scalars for a single
+    solve, per-instance ``(B,)`` vectors for a batched fleet — criteria
+    must use elementwise ops only so one predicate serves both.  Padded
+    dummy fleet lanes carry ``res == span == 0``; a criterion should stop
+    them (every builtin does).
+    """
+
+    res: jax.Array          # ||T v - v||_inf (the Bellman residual)
+    span: jax.Array         # sp(T v - v) = max - min (inf unless the
+    #                         criterion declared needs_span)
+    res0: jax.Array         # residual at k = 0 (rtol baseline)
+    k: jax.Array            # outer iterations done
+    gamma: Any              # discount (python float, or traced per-instance)
+    atol: float
+    rtol: float
+
+
+@dataclasses.dataclass(frozen=True)
+class StopSpec:
+    """One registered outer stopping criterion."""
+
+    name: str
+    fn: Callable[[StopMetrics], jax.Array]   # True -> converged (stop)
+    needs_span: bool = False   # compute the span seminorm each iteration
+    doc: str = ""
+    builtin: bool = False
+
+
+_KSPS: dict[str, KSPSpec] = {}
+_METHODS: dict[str, MethodSpec] = {}
+_STOPS: dict[str, StopSpec] = {}
+
+
+# --------------------------------------------------------------------------- #
+# Registration                                                                #
+# --------------------------------------------------------------------------- #
+
+def _normalize_ksp_fn(fn: Callable) -> Callable:
+    """Adapt a user solver to the internal calling convention.
+
+    ``fn(matvec, b, x0, *, tol, maxiter, axes)`` is the minimal contract;
+    ``opts`` (static :class:`IPIOptions`) and ``context`` (traced per-solve
+    values, e.g. ``gamma``) are forwarded only when the signature accepts
+    them (or has ``**kwargs``).
+    """
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):       # builtins / C callables: send all
+        params = None
+    var_kw = params is not None and any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+    accepts = (lambda name: True) if (params is None or var_kw) else \
+        (lambda name: name in params)
+
+    def call(matvec, b, x0, tol, maxiter, axes, opts, context):
+        kw = dict(tol=tol, maxiter=maxiter, axes=axes)
+        if accepts("opts"):
+            kw["opts"] = opts
+        if accepts("context"):
+            kw["context"] = context
+        return fn(matvec, b, x0, **kw)
+
+    return call
+
+
+# Cache-clearers invoked when a registered name is REPLACED (overwrite=True):
+# registry lookups happen at trace time, so already-compiled programs would
+# silently keep running the old code.  The driver registers its compiled-
+# program caches here at import (it imports this module, not vice versa).
+_CACHE_CLEARERS: list[Callable[[], None]] = []
+
+
+def on_overwrite_clear(fn: Callable[[], None]) -> None:
+    _CACHE_CLEARERS.append(fn)
+
+
+def _check_free(registry: Mapping[str, Any], kind: str, name: str,
+                overwrite: bool) -> None:
+    if not isinstance(name, str) or not name or not name.strip() == name:
+        raise ValueError(f"{kind} names are non-empty strings, got {name!r}")
+    prior = registry.get(name)
+    if prior is not None and not overwrite:
+        who = "builtin" if prior.builtin else "already-registered"
+        raise ValueError(
+            f"{kind} {name!r} is {who}; pass overwrite=True to replace it "
+            f"(compiled solve caches are cleared automatically)")
+    if prior is not None:
+        for clear in _CACHE_CLEARERS:
+            clear()
+
+
+def register_ksp(name: str, fn: Callable | None = None, *, doc: str = "",
+                 deterministic: bool = False, auto_method: bool = True,
+                 overwrite: bool = False, _builtin: bool = False):
+    """Register an inner linear solver (usable as a decorator).
+
+    ``fn(matvec, b, x0, *, tol, maxiter, axes)`` must return
+    ``(x, iters, resnorm)`` and be pure ``lax`` control flow.  With
+    ``auto_method=True`` (default) the outer method ``ipi_<name>`` is also
+    registered (forcing-term inner stopping, safeguarded), making the
+    solver selectable via ``-ksp_type name`` everywhere options are
+    ingested.  ``deterministic=True`` declares the solver's arithmetic
+    batch-invariant (legal under ``-deterministic_dots``).
+    """
+    if fn is None:
+        return lambda f: register_ksp(name, f, doc=doc,
+                                      deterministic=deterministic,
+                                      auto_method=auto_method,
+                                      overwrite=overwrite, _builtin=_builtin)
+    _check_free(_KSPS, "ksp", name, overwrite)
+    spec = KSPSpec(name=name, fn=_normalize_ksp_fn(fn),
+                   doc=doc or (fn.__doc__ or "").strip().split("\n")[0],
+                   deterministic=deterministic, builtin=_builtin)
+    _KSPS[name] = spec
+    if auto_method and f"ipi_{name}" not in _METHODS:
+        register_method(f"ipi_{name}", ksp=name, inner="forcing",
+                        safeguarded=True,
+                        doc=f"iPI with {name} inner solves (auto-registered)",
+                        _builtin=_builtin)
+    return fn
+
+
+def register_method(name: str, *, ksp: str | None, inner: str = "forcing",
+                    safeguarded: bool = True, doc: str = "",
+                    overwrite: bool = False, _builtin: bool = False) \
+        -> MethodSpec:
+    """Register an outer method: which KSP runs the policy-evaluation step
+    and under which inner-stopping policy (see :data:`INNER_POLICIES`)."""
+    _check_free(_METHODS, "method", name, overwrite)
+    if inner not in INNER_POLICIES:
+        raise ValueError(f"inner policy must be one of {INNER_POLICIES}, "
+                         f"got {inner!r}")
+    if ksp is not None and ksp not in _KSPS:
+        raise ValueError(check_ksp(ksp))
+    if (ksp is None) != (inner == "none"):
+        raise ValueError(f"method {name!r}: ksp=None requires inner='none' "
+                         f"(and vice versa), got ksp={ksp!r} inner={inner!r}")
+    spec = MethodSpec(name=name, ksp=ksp, inner=inner,
+                      safeguarded=safeguarded, doc=doc, builtin=_builtin)
+    _METHODS[name] = spec
+    return spec
+
+
+def register_stop_criterion(name: str, fn: Callable[[StopMetrics], jax.Array]
+                            | None = None, *, needs_span: bool = False,
+                            doc: str = "", overwrite: bool = False,
+                            _builtin: bool = False):
+    """Register an outer stopping criterion (usable as a decorator).
+
+    ``fn(metrics: StopMetrics) -> bool array`` returns True where the solve
+    has converged; it is traced into the compiled loop, so elementwise
+    ``jnp`` ops only.  NaN residuals never count as converged (enforced
+    outside the predicate).
+    """
+    if fn is None:
+        return lambda f: register_stop_criterion(
+            name, f, needs_span=needs_span, doc=doc, overwrite=overwrite,
+            _builtin=_builtin)
+    _check_free(_STOPS, "stop criterion", name, overwrite)
+    _STOPS[name] = StopSpec(name=name, fn=fn, needs_span=needs_span,
+                            doc=doc or (fn.__doc__ or "").strip()
+                            .split("\n")[0], builtin=_builtin)
+    return fn
+
+
+def _unregister(registry: dict, kind: str, name: str) -> None:
+    spec = registry.get(name)
+    if spec is None:
+        return
+    if spec.builtin:
+        raise ValueError(f"refusing to unregister builtin {kind} {name!r}")
+    del registry[name]
+
+
+def unregister_ksp(name: str) -> None:
+    """Remove a user-registered KSP (and its auto-method, if still its)."""
+    _unregister(_KSPS, "ksp", name)
+    auto = _METHODS.get(f"ipi_{name}")
+    if auto is not None and not auto.builtin and auto.ksp == name:
+        del _METHODS[f"ipi_{name}"]
+
+
+def unregister_method(name: str) -> None:
+    _unregister(_METHODS, "method", name)
+
+
+def unregister_stop_criterion(name: str) -> None:
+    _unregister(_STOPS, "stop criterion", name)
+
+
+# --------------------------------------------------------------------------- #
+# Lookup / validation                                                         #
+# --------------------------------------------------------------------------- #
+
+def ksp_names(*, builtin_only: bool = False) -> tuple[str, ...]:
+    return tuple(n for n, s in _KSPS.items()
+                 if s.builtin or not builtin_only)
+
+
+def method_names(*, builtin_only: bool = False) -> tuple[str, ...]:
+    return tuple(n for n, s in _METHODS.items()
+                 if s.builtin or not builtin_only)
+
+
+def stop_names(*, builtin_only: bool = False) -> tuple[str, ...]:
+    return tuple(n for n, s in _STOPS.items()
+                 if s.builtin or not builtin_only)
+
+
+def suggest(name, candidates) -> str:
+    """Shared '; did you mean ...?' hint (difflib over the live candidate
+    names), or '' when nothing is close — used by every unknown-name error
+    in the registries and the options database."""
+    close = difflib.get_close_matches(str(name),
+                                      [str(c) for c in candidates], n=3)
+    return f"; did you mean {' / '.join(repr(c) for c in close)}?" \
+        if close else ""
+
+
+def _unknown(kind: str, name, names, register_hint: str) -> str:
+    return (f"unknown {kind} {name!r}{suggest(name, names)} (registered: "
+            f"{', '.join(sorted(names))}; extend with "
+            f"repro.api.{register_hint})")
+
+
+def check_ksp(name) -> str | None:
+    """None if registered, else an actionable error message with
+    close-spelling suggestions drawn from the *live* registry."""
+    if name in _KSPS:
+        return None
+    return _unknown("ksp", name, list(_KSPS), "register_ksp")
+
+
+def check_method(name) -> str | None:
+    if name in _METHODS:
+        return None
+    return _unknown("method", name, list(_METHODS), "register_method")
+
+
+def check_stop(name) -> str | None:
+    if name in _STOPS:
+        return None
+    return _unknown("stop criterion", name, list(_STOPS),
+                    "register_stop_criterion")
+
+
+def get_ksp(name: str) -> KSPSpec:
+    err = check_ksp(name)
+    if err:
+        raise ValueError(err)
+    return _KSPS[name]
+
+
+def get_method(name: str) -> MethodSpec:
+    err = check_method(name)
+    if err:
+        raise ValueError(err)
+    return _METHODS[name]
+
+
+def get_stop(name: str) -> StopSpec:
+    err = check_stop(name)
+    if err:
+        raise ValueError(err)
+    return _STOPS[name]
+
+
+def method_for_ksp(ksp: str) -> str:
+    """The ``-ksp_type`` sugar: the outer method a bare KSP choice picks
+    (``none`` -> ``vi``, else ``ipi_<ksp>``)."""
+    if ksp == "none":
+        return "vi"
+    err = check_ksp(ksp)
+    if err:
+        raise ValueError(err)
+    name = f"ipi_{ksp}"
+    if name not in _METHODS:     # registered with auto_method=False
+        raise ValueError(
+            f"ksp {ksp!r} has no ipi_{ksp} method registered; register one "
+            f"with repro.api.register_method(ksp={ksp!r}, ...) or select a "
+            f"-method directly")
+    return name
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch: the inner solve and the outer stopping decision                   #
+# --------------------------------------------------------------------------- #
+
+def inner_solve(opts, matvec, b, x0, forcing_tol, axes: Axes, *,
+                context: Mapping[str, Any] | None = None):
+    """Run ``opts.method``'s inner policy-evaluation solve.
+
+    Returns ``(x, iters, resnorm)``.  ``forcing_tol`` is the iPI forcing
+    term ``eta * ||T v - v||_inf`` (already floored); the method's inner
+    policy decides whether it, a fixed sweep count, or a tight absolute
+    tolerance bounds the KSP.
+    """
+    spec = get_method(opts.method)
+    if spec.ksp is None:
+        return x0, jnp.int32(0), jnp.float32(jnp.inf)
+    ksp = get_ksp(spec.ksp)
+    if spec.inner == "sweeps":
+        tol, maxiter = jnp.float32(0.0), max(opts.mpi_sweeps - 1, 0)
+    elif spec.inner == "tight":
+        tol, maxiter = jnp.float32(opts.atol) * 0.01, opts.max_inner
+    else:
+        tol, maxiter = forcing_tol, opts.max_inner
+    return ksp.call(matvec, b, x0, tol=tol, maxiter=maxiter, axes=axes,
+                    opts=opts, context=dict(context or {}))
+
+
+def stop_done(opts, *, res, span, res0, k, gamma) -> jax.Array:
+    """Evaluate ``opts.stop_criterion`` -> boolean "converged" (elementwise
+    over fleet lanes).  NaN residuals never converge."""
+    spec = get_stop(opts.stop_criterion)
+    m = StopMetrics(res=res, span=span, res0=res0, k=k, gamma=gamma,
+                    atol=opts.atol, rtol=opts.rtol)
+    return jnp.asarray(spec.fn(m)) & ~jnp.isnan(res)
+
+
+_ADHOC_STOPS: dict[int, str] = {}
+_ADHOC_SEQ = itertools.count()
+
+
+_ADHOC_LIMIT = 64
+
+
+def adhoc_stop_criterion(fn: Callable[[StopMetrics], jax.Array], *,
+                         needs_span: bool = True) -> str:
+    """Register (once) an anonymous user predicate and return its registry
+    name — how ``Session.solve(stop_criterion=callable)`` threads a traced
+    predicate through the string-keyed options/jit machinery.
+
+    The same callable maps to the same name (and therefore the same
+    compiled program), so pass a *stable* function reference when solving
+    in a loop — a fresh inline lambda per call gets a fresh name and a
+    fresh compile.  Names are monotonic and never recycled onto different
+    code; the table is bounded (oldest entries beyond ``_ADHOC_LIMIT`` are
+    evicted, their compiled programs simply go cold).  ``needs_span``
+    defaults to True so a predicate reading ``m.span`` sees real values
+    (named registration via :func:`register_stop_criterion` opts out)."""
+    key = id(fn)
+    name = _ADHOC_STOPS.get(key)
+    if name is not None and _STOPS.get(name) is not None \
+            and _STOPS[name].fn is fn:
+        return name
+    while len(_ADHOC_STOPS) >= _ADHOC_LIMIT:
+        old_key, old_name = next(iter(_ADHOC_STOPS.items()))
+        del _ADHOC_STOPS[old_key]
+        _STOPS.pop(old_name, None)
+    name = f"custom_{next(_ADHOC_SEQ)}"
+    register_stop_criterion(name, fn, needs_span=needs_span,
+                            doc="ad-hoc user predicate")
+    _ADHOC_STOPS[key] = name
+    return name
+
+
+# --------------------------------------------------------------------------- #
+# Monitor dispatch (host side of the in-loop observability API)              #
+# --------------------------------------------------------------------------- #
+
+_MONITORS: dict[int, tuple[Callable, float, int | None]] = {}
+_MONITOR_SEQ = itertools.count(1)        # 0 is reserved: "no monitor"
+
+
+def monitor_handle(fn: Callable[[dict], None], *,
+                   trim: int | None = None) -> int:
+    """Activate a monitor callable; returns the integer id the compiled
+    loop streams records to (pass it as the traced ``mon_id``).  ``trim``
+    truncates fleet vectors to the true instance count (mesh padding)."""
+    mid = next(_MONITOR_SEQ)
+    _MONITORS[mid] = (fn, time.perf_counter(), trim)
+    return mid
+
+
+def monitor_release(mid: int) -> None:
+    _MONITORS.pop(mid, None)
+
+
+def _record(mid_entry, k, res, inner) -> dict:
+    fn, t0, trim = mid_entry
+    res = np.asarray(res)
+    inner = np.asarray(inner)
+    if res.ndim:                           # batched fleet: per-instance rows
+        if trim is not None:
+            res, inner = res[:trim], inner[:trim]
+        return dict(k=int(np.max(k)), res=[float(x) for x in res],
+                    inner=[int(x) for x in inner],
+                    elapsed=time.perf_counter() - t0)
+    return dict(k=int(k), res=float(res), inner=int(inner),
+                elapsed=time.perf_counter() - t0)
+
+
+def _monitor_cb(mid, lead, k, res, inner) -> None:
+    try:
+        if not bool(lead):
+            return                         # non-lead shard: drop (the record
+        #                                    is replicated device-side)
+        entry = _MONITORS.get(int(mid))
+        if entry is None:
+            return
+        entry[0](_record(entry, k, res, inner))
+    except Exception as e:  # noqa: BLE001 — a monitor bug must not kill the
+        print(f"[monitor] callback error (record dropped): "  # compiled solve
+              f"{type(e).__name__}: {e}")
+
+
+def emit_monitor(mon_id, lead, k, res, inner) -> None:
+    """Device-side: stream one per-iteration record to the active monitor.
+
+    One fixed trampoline for every monitor (``mon_id`` is traced data), so
+    compiled programs are monitor-agnostic and cache across solves.
+    Unordered callback: records arrive in program order on synchronous
+    backends (CPU), but an async accelerator may deliver them out of order —
+    consumers needing strict order should sort by ``k`` (``Session.stats``
+    does; each record carries its ``k``)."""
+    jax.debug.callback(_monitor_cb, mon_id, lead, k, res, inner)
+
+
+def emit_host(mid: int, k, res, inner) -> None:
+    """Host-side record emission (the k=0 / resume record, outside jit);
+    same never-kill-the-solve guard as the device trampoline."""
+    _monitor_cb(mid, True, k, res, inner)
+
+
+def print_monitor(rec: dict) -> None:
+    """The default ``-monitor`` sink (PETSc ``-ksp_monitor`` style lines)."""
+    if isinstance(rec["res"], list):
+        res = rec["res"]
+        print(f"[monitor] k={rec['k']} res_max={max(res):.6e} "
+              f"inner={sum(rec['inner'])} B={len(res)} "
+              f"elapsed={rec['elapsed']:.3f}s", flush=True)
+    else:
+        print(f"[monitor] k={rec['k']} res={rec['res']:.6e} "
+              f"inner={rec['inner']} elapsed={rec['elapsed']:.3f}s",
+              flush=True)
+
+
+# --------------------------------------------------------------------------- #
+# Builtins                                                                    #
+# --------------------------------------------------------------------------- #
+
+register_ksp(
+    "richardson",
+    lambda mv, b, x0, *, tol, maxiter, axes, opts=None:
+        richardson(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
+                   omega=opts.omega if opts is not None else 1.0),
+    doc="(damped) Richardson iteration == repeated T_pi sweeps",
+    deterministic=True, auto_method=False, _builtin=True)
+
+register_ksp(
+    "gmres",
+    lambda mv, b, x0, *, tol, maxiter, axes, opts=None:
+        gmres(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
+              restart=opts.restart if opts is not None else 32,
+              deterministic=bool(opts.deterministic_dots) if opts is not None
+              else False),
+    doc="restarted GMRES (CGS2 + Givens) — the iGMRES-PI inner solver",
+    deterministic=True, auto_method=False, _builtin=True)
+
+register_ksp(
+    "bicgstab",
+    lambda mv, b, x0, *, tol, maxiter, axes:
+        bicgstab(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes),
+    doc="BiCGStab — O(1)-memory Krylov alternative",
+    deterministic=False, auto_method=False, _builtin=True)
+
+register_ksp(
+    "chebyshev",
+    lambda mv, b, x0, *, tol, maxiter, axes, context=None:
+        chebyshev(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
+                  lo=1.0 - (context or {}).get("gamma", 0.999),
+                  hi=1.0 + (context or {}).get("gamma", 0.999)),
+    doc="Chebyshev semi-iteration on [1-gamma, 1+gamma] — no inner products",
+    deterministic=True, auto_method=False, _builtin=True)
+
+register_ksp(
+    "anderson",
+    lambda mv, b, x0, *, tol, maxiter, axes, opts=None:
+        anderson(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
+                 window=opts.anderson_window if opts is not None else 5,
+                 mixing=opts.omega if opts is not None else 1.0),
+    doc="Anderson-accelerated VI (windowed residual extrapolation)",
+    deterministic=False, auto_method=False, _builtin=True)
+
+register_method("vi", ksp=None, inner="none", safeguarded=False,
+                doc="value iteration (0 inner sweeps)", _builtin=True)
+register_method("mpi", ksp="richardson", inner="sweeps", safeguarded=False,
+                doc="modified policy iteration (mpi_sweeps fixed sweeps)",
+                _builtin=True)
+register_method("ipi_richardson", ksp="richardson", inner="forcing",
+                safeguarded=False,
+                doc="iPI + Richardson to the forcing tolerance",
+                _builtin=True)
+register_method("ipi_gmres", ksp="gmres", inner="forcing", safeguarded=True,
+                doc="iPI + restarted GMRES (the paper's iGMRES-PI)",
+                _builtin=True)
+register_method("ipi_bicgstab", ksp="bicgstab", inner="forcing",
+                safeguarded=True, doc="iPI + BiCGStab", _builtin=True)
+register_method("pi", ksp="gmres", inner="tight", safeguarded=True,
+                doc="(near-)exact policy iteration (GMRES at 0.01 * atol)",
+                _builtin=True)
+register_method("ipi_chebyshev", ksp="chebyshev", inner="forcing",
+                safeguarded=True,
+                doc="iPI + Chebyshev semi-iteration (collective-free inner)",
+                _builtin=True)
+register_method("ipi_anderson", ksp="anderson", inner="forcing",
+                safeguarded=True, doc="iPI + Anderson-accelerated VI",
+                _builtin=True)
+
+
+@register_stop_criterion("atol", _builtin=True)
+def _stop_atol(m: StopMetrics):
+    """sup-norm residual: ||T v - v||_inf <= atol."""
+    return m.res <= m.atol
+
+
+@register_stop_criterion("rtol", _builtin=True)
+def _stop_rtol(m: StopMetrics):
+    """relative residual: ||T v - v||_inf <= rtol * (initial residual)."""
+    return m.res <= m.rtol * m.res0
+
+
+@register_stop_criterion("span", needs_span=True, _builtin=True)
+def _stop_span(m: StopMetrics):
+    """span seminorm: sp(T v - v) = max - min <= atol.
+
+    Once the Bellman residual vector is nearly constant (long-mixing chains
+    reach that regime geometrically at the *mixing* rate, far faster than
+    the gamma-rate sup-norm decay) the greedy policy has stabilized: after
+    the standard midpoint correction the value error is bounded by
+    gamma * sp / (2 * (1 - gamma)), so span stopping certifies VI in far
+    fewer outer iterations than ``atol`` at matched certificate scale."""
+    return m.span <= m.atol

@@ -15,6 +15,9 @@ reductions go through :class:`repro.core.comm.Axes`.
 from repro.core.solvers.richardson import richardson
 from repro.core.solvers.gmres import gmres
 from repro.core.solvers.bicgstab import bicgstab
+from repro.core.solvers.chebyshev import chebyshev
+from repro.core.solvers.anderson import anderson
 from repro.core.solvers.direct import dense_policy_value
 
-__all__ = ["richardson", "gmres", "bicgstab", "dense_policy_value"]
+__all__ = ["anderson", "bicgstab", "chebyshev", "dense_policy_value",
+           "gmres", "richardson"]

@@ -1,0 +1,72 @@
+"""Chebyshev semi-iteration — a collective-free Krylov-grade inner solver.
+
+For the policy-evaluation system ``(I - gamma P_pi) x = g_pi`` the spectrum
+of ``A = I - gamma P_pi`` lies in the disk centered at 1 with radius
+``gamma``; for reversible / birth-death policy chains (``chain_walk``-like
+instances) it is *real* and contained in ``[1 - gamma, 1 + gamma]``, where
+the Chebyshev recursion is the optimal polynomial iteration.  Unlike GMRES
+or BiCGStab it needs **no inner products** — the only collective per
+iteration is the sup-norm residual check (one ``pmax``), which makes it
+attractive on wide meshes where Krylov dot-product ``psum`` latency
+dominates, and trivially *batch-invariant*: there is no accumulation a
+``vmap`` width could re-associate, so it composes with
+``-deterministic_dots`` and the fleet-sharded layouts bit-for-bit.
+
+The iteration is Saad, *Iterative Methods for Sparse Linear Systems*,
+Alg. 12.1, with interval center ``theta = (hi + lo) / 2`` and half-width
+``delta = (hi - lo) / 2``.  The caller supplies the spectral bounds — the
+iPI registry wrapper passes ``lo = 1 - gamma, hi = 1 + gamma`` (``gamma``
+may be a traced per-instance scalar in heterogeneous fleets).  On spectra
+with large imaginary parts the interval iteration may stall; the outer iPI
+monotone safeguard (VI fallback) keeps the outer loop globally convergent
+regardless.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Axes
+
+_TINY = 1e-30
+
+
+def chebyshev(matvec, b: jax.Array, x0: jax.Array, *, tol, maxiter: int,
+              axes: Axes, lo, hi, divtol: float = 1e4):
+    """Returns ``(x, iters, ||b - A x||_inf)``.
+
+    ``lo`` / ``hi`` bound the (real part of the) spectrum of ``A``; both may
+    be traced scalars.  Stopping is on the sup-norm residual, consistent
+    with the iPI forcing condition.  ``divtol`` is the PETSc-style
+    divergence guard: the iteration bails out once the residual exceeds
+    ``divtol`` times the initial one (spectra with large imaginary parts
+    sit outside the interval — returning early hands the outer safeguard a
+    cheap rejection instead of ``maxiter`` diverging sweeps).
+    """
+    dt = x0.dtype
+    theta = jnp.asarray((hi + lo) * 0.5, dt)
+    delta = jnp.maximum(jnp.asarray((hi - lo) * 0.5, dt),
+                        jnp.asarray(_TINY, dt))
+    sigma1 = theta / delta
+
+    r0 = b - matvec(x0)
+    n0 = axes.norm_inf(r0)
+    d0 = r0 / theta
+    rho0 = delta / theta
+
+    def cond(s):
+        _, _, _, _, res, it = s
+        return (res > tol) & (it < maxiter) & (res <= divtol * n0 + _TINY)
+
+    def body(s):
+        x, r, d, rho, _, it = s
+        x = x + d
+        r = r - matvec(d)
+        rho_new = 1.0 / (2.0 * sigma1 - rho)
+        d = rho_new * rho * d + (2.0 * rho_new / delta) * r
+        return x, r, d, rho_new, axes.norm_inf(r), it + 1
+
+    x, _, _, _, res, iters = jax.lax.while_loop(
+        cond, body, (x0, r0, d0, rho0, n0, jnp.int32(0)))
+    return x, iters, res

@@ -65,6 +65,8 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def analyze(compiled, lower_s, compile_s) -> dict:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # <= 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     txt = compiled.as_text()
     coll = collective_bytes(txt)
@@ -171,7 +173,8 @@ def run_mdp_cell(name: str, mesh) -> dict:
                           restart=16, halo=halo)
     state_specs = ipi.SolveState(
         v=P(axes.state), tv=P(axes.state), pi=P(axes.state),
-        res=P(), k=P(), inner_total=P(), trace_res=P(), trace_inner=P())
+        res=P(), k=P(), inner_total=P(), trace_res=P(), trace_inner=P(),
+        res0=P(), span=P(), done=P(), n_true=P())
     sspec_tree = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
     nl = n // n_shards
     state_sds = ipi.SolveState(
@@ -185,17 +188,23 @@ def run_mdp_cell(name: str, mesh) -> dict:
         trace_res=jax.ShapeDtypeStruct((opts.max_outer + 1,), jnp.float32,
                                        sharding=sspec_tree.trace_res),
         trace_inner=jax.ShapeDtypeStruct((opts.max_outer,), jnp.int32,
-                                         sharding=sspec_tree.trace_inner))
+                                         sharding=sspec_tree.trace_inner),
+        res0=jax.ShapeDtypeStruct((), jnp.float32, sharding=sspec_tree.res0),
+        span=jax.ShapeDtypeStruct((), jnp.float32, sharding=sspec_tree.span),
+        done=jax.ShapeDtypeStruct((), jnp.bool_, sharding=sspec_tree.done),
+        n_true=jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=sspec_tree.n_true))
     from repro.utils.jax_compat import shard_map as _shard_map
     fn = jax.jit(
         _shard_map(
             partial(ipi.solve_chunk, opts=opts, axes=axes),
             mesh=mesh,
             in_specs=(partition.mdp_pspecs(mdp_abs, axes),
-                      state_specs, P()),
+                      state_specs, P(), P()),
             out_specs=state_specs))
     t0 = time.time()
     lowered = fn.lower(mdp_sds, state_sds,
+                       jax.ShapeDtypeStruct((), jnp.int32),
                        jax.ShapeDtypeStruct((), jnp.int32))
     t1 = time.time()
     compiled = lowered.compile()

@@ -76,7 +76,8 @@ def build_options(args) -> Options:
     not pass fall back to CLI-flavored soft defaults, which still lose to
     ``MADUPITE_OPTIONS``)."""
     opts = Options.from_sources()                    # env ingested here
-    flag_map = {"method": "-method", "atol": "-atol",
+    flag_map = {"method": "-method", "ksp_type": "-ksp_type",
+                "atol": "-atol", "stop_criterion": "-stop_criterion",
                 "max_outer": "-max_outer", "dtype": "-dtype",
                 "layout": "-layout", "fleet": "-fleet",
                 "ckpt_dir": "-checkpoint_dir", "mode": "-mode"}
@@ -86,6 +87,8 @@ def build_options(args) -> Options:
             opts.set(key, val, source="cli")
     if args.single_device:
         opts.set("-layout", "single", source="cli")
+    if args.monitor:
+        opts.set("-monitor", True, source="cli")
     opts.ingest_cli(args.option)
     # the CLI has always defaulted to PETSc-style f64 and a deep outer cap;
     # keep that, but let the environment override
@@ -110,10 +113,18 @@ def main(argv=None):
     ap.add_argument("--size", type=int, default=64)
     ap.add_argument("--gamma", type=float, default=0.99)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--method", default=None, help="option -method")
+    ap.add_argument("--method", default=None,
+                    help="option -method (any live-registry name)")
+    ap.add_argument("--ksp-type", default=None,
+                    help="option -ksp_type (inner solver sugar; any "
+                         "live-registry name incl. user-registered)")
     ap.add_argument("--mode", default=None,
                     choices=["mincost", "maxreward"], help="option -mode")
     ap.add_argument("--atol", type=float, default=None, help="option -atol")
+    ap.add_argument("--stop-criterion", default=None,
+                    help="option -stop_criterion (atol|rtol|span|registered)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="option -monitor (per-outer-iteration records)")
     ap.add_argument("--max-outer", type=int, default=None,
                     help="option -max_outer")
     ap.add_argument("--layout", default=None,

@@ -73,11 +73,28 @@ def restore(ckpt_dir: str, like, step: int | None = None):
             with np.load(path, allow_pickle=False) as z:
                 payload = json.loads(str(z["__manifest__"]))
                 leaves_like, treedef = jax.tree_util.tree_flatten(like)
-                assert payload["n_leaves"] == len(leaves_like), \
-                    "checkpoint/structure mismatch"
+                if payload["n_leaves"] != len(leaves_like):
+                    # A VALID checkpoint whose pytree structure differs from
+                    # the running code (e.g. a release that grew the solver
+                    # state): silently skipping would reinitialize from
+                    # scratch and throw away the run's progress — surface it.
+                    raise _StructureMismatch(
+                        f"checkpoint {path!r} holds {payload['n_leaves']} "
+                        f"leaves but this run's state has "
+                        f"{len(leaves_like)}: it was written by a different "
+                        f"solver version or problem; resume with the "
+                        f"writing version, or point checkpoint_dir at a "
+                        f"fresh directory to restart from scratch")
                 leaves = [z[f"leaf_{i}"] for i in range(len(leaves_like))]
             tree = jax.tree_util.tree_unflatten(treedef, leaves)
             return tree, s, payload["meta"]
-        except Exception:  # torn write / stale structure -> try older
+        except _StructureMismatch as e:
+            raise ValueError(str(e)) from None
+        except Exception:  # torn write -> try older
             continue
     return None
+
+
+class _StructureMismatch(Exception):
+    """Internal: a readable checkpoint with the wrong leaf count (must not
+    be swallowed by the torn-write walk)."""

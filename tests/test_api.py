@@ -584,7 +584,8 @@ def test_session_solve_matches_driver(tmp_path):
         r = s.solve(mdp)
     np.testing.assert_array_equal(r.policy, ref.policy)
     np.testing.assert_array_equal(r.v, ref.v)
-    entries = json.loads(stats.read_text())
+    # default stats format is jsonl: one streamed line per solve
+    entries = [json.loads(ln) for ln in stats.read_text().splitlines()]
     assert len(entries) == 1
     assert entries[0]["method"] == "ipi_gmres"
     assert entries[0]["solves"][0]["converged"] is True
@@ -701,6 +702,7 @@ def test_cli_options_database(tmp_path):
     stats = tmp_path / "cli.json"
     rc = main(["--instance", "maze2d", "--size", "8", "--single-device",
                "--option", "method=vi", "--option", "atol=1e-6",
+               "--option", "file_stats_format=json",   # compat array format
                "--option", f"file_stats={stats}"])
     assert rc == 0
     entries = json.loads(stats.read_text())
@@ -715,4 +717,5 @@ def test_cli_env_ingestion(tmp_path, monkeypatch):
     rc = main(["--instance", "maze2d", "--size", "8", "--single-device",
                "--option", f"file_stats={stats}"])
     assert rc == 0
-    assert json.loads(stats.read_text())[0]["method"] == "vi"
+    # default jsonl: one line per solve
+    assert json.loads(stats.read_text().splitlines()[0])["method"] == "vi"

@@ -31,6 +31,16 @@ def test_torn_write_is_skipped(tmp_path):
     np.testing.assert_array_equal(restored["a"], tree["a"])
 
 
+def test_structure_mismatch_raises_not_silent_reinit(tmp_path):
+    """A readable checkpoint whose pytree grew/shrank (written by another
+    solver version) must raise an actionable error — silently skipping it
+    would reinitialize from k=0 and discard the run's progress."""
+    ckpt.save(str(tmp_path), 1, {"a": np.arange(3.0)})
+    like = {"a": np.arange(3.0), "b": np.zeros(2)}
+    with pytest.raises(ValueError, match="different solver version"):
+        ckpt.restore(str(tmp_path), like)
+
+
 def test_solver_restart_resumes_identically(tmp_path):
     """Kill after a few outer iterations; restart must land on the exact
     same iterate path (deterministic restart = madupite's chunked solve)."""

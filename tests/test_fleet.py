@@ -186,6 +186,81 @@ try:
 finally:
     shutil.rmtree(d, ignore_errors=True)
 
+# monitors under the fleet-sharded layouts (ISSUE 5): the lead-shard
+# gating must yield exactly ONE host record per outer iteration (no
+# per-device duplicate callbacks), with per-instance rows gathered over
+# the fleet axis and trimmed to the true B (not the padded 8)
+for layout, fleet in (("fleet", 4), ("fleet2d", 2)):
+    recs = []
+    mopts = IPIOptions(method="vi", atol=1e-8, dtype="float64",
+                       max_outer=20000, monitor=True)
+    rs_m = solve_many(mdps, mopts, mesh=make_fleet_mesh(fleet,
+                                                        layout=layout),
+                      layout=layout, monitor=recs.append)
+    ks = [r["k"] for r in recs]
+    out[f"monitor/{layout}"] = dict(
+        n_records=len(recs),
+        ks_contiguous=ks == list(range(len(ks))),
+        unique=len(set(ks)) == len(ks),
+        k_max=max(ks),
+        outer_max=max(r.outer_iterations for r in rs_m),
+        rows=len(recs[-1]["res"]),
+        converged=all(r.converged for r in rs_m))
+
+# span-seminorm stopping compiled into the fleet-sharded loop: bit-equal
+# to the replicated span run (vi), strictly fewer outers than atol
+vi_kw = dict(method="vi", atol=1e-8, dtype="float64", max_outer=20000)
+rs_atol = solve_many(mdps, IPIOptions(**vi_kw))
+rs_span_rep = solve_many(mdps, IPIOptions(stop_criterion="span", **vi_kw))
+rs_span = solve_many(mdps, IPIOptions(stop_criterion="span", **vi_kw),
+                     mesh=make_fleet_mesh(4), layout="fleet")
+out["span_fleet"] = dict(
+    converged=all(r.converged for r in rs_span),
+    dv=max(float(np.abs(a.v - b.v).max())
+           for a, b in zip(rs_span, rs_span_rep)),
+    outer_eq=all(a.outer_iterations == b.outer_iterations
+                 for a, b in zip(rs_span, rs_span_rep)),
+    strictly_fewer=all(a.outer_iterations < b.outer_iterations
+                       for a, b in zip(rs_span, rs_atol)),
+    same_policy=all((a.policy == b.policy).all()
+                    for a, b in zip(rs_span, rs_atol)))
+
+# span with NON-divisible n: mesh padding appends residual-0 absorbing
+# rows which must be masked out of the span min (n=301 pads to 304 on 8
+# shards) — sharded outer count must equal the replicated one
+from repro.core.driver import solve as driver_solve
+cw = generators.chain_walk(301, gamma=0.999)
+sp = IPIOptions(method="vi", atol=1e-8, dtype="float64",
+                max_outer=100000, stop_criterion="span")
+r_cw_rep = driver_solve(cw, sp)
+r_cw_sh = driver_solve(cw, sp, mesh=make_host_mesh((8, 1)), layout="1d")
+out["span_nondivisible"] = dict(
+    rep_outer=r_cw_rep.outer_iterations, sh_outer=r_cw_sh.outer_iterations,
+    converged=r_cw_rep.converged and r_cw_sh.converged,
+    dpi=int((r_cw_rep.policy != r_cw_sh.policy).sum()))
+
+# acceptance: a USER-registered ksp (env-ingested -ksp_type) runs under
+# the fleet-sharded layout and matches the replicated path
+from repro.api import Options, register_ksp
+from repro.core.solvers import richardson as _rich
+register_ksp("myrich",
+             lambda mv, b, x0, *, tol, maxiter, axes:
+             _rich(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
+                   omega=0.9))
+os.environ["MADUPITE_OPTIONS"] = "-ksp_type myrich"
+uopts = Options.from_sources(
+    values={"-atol": 1e-8, "-dtype": "float64",
+            "-max_outer": 20000}).to_ipi()
+u_rep = solve_many(mdps, uopts)
+u_fleet = solve_many(mdps, uopts, mesh=make_fleet_mesh(4), layout="fleet")
+out["user_ksp_fleet"] = dict(
+    method=uopts.method,
+    converged=all(r.converged for r in u_fleet),
+    dv=max(float(np.abs(a.v - b.v).max())
+           for a, b in zip(u_fleet, u_rep)),
+    dpi=sum(int((a.policy != b.policy).sum())
+            for a, b in zip(u_fleet, u_rep)))
+
 print("RESULT " + json.dumps(out))
 """
 
@@ -294,6 +369,50 @@ def test_fleet_checkpoint_restores_onto_smaller_fleet_axis(fleet_results):
     assert r["converged"]
     assert r["dv"] < 1e-12 and r["dpi"] == 0, r
     assert r["outer_eq"], "resume diverged from the uninterrupted path"
+
+
+@pytest.mark.parametrize("layout", ["fleet", "fleet2d"])
+def test_monitor_one_record_per_iteration_under_fleet(fleet_results, layout):
+    """ISSUE 5 satellite: the monitor callback fires on every device but
+    only the lead shard's record is kept — exactly one host record per
+    outer iteration (k=0 included), ks contiguous, rows trimmed to the
+    true B=5 (not the padded 8)."""
+    r = fleet_results[f"monitor/{layout}"]
+    assert r["converged"], r
+    assert r["unique"] and r["ks_contiguous"], r
+    assert r["n_records"] == r["k_max"] + 1, r
+    assert r["k_max"] == r["outer_max"], r
+    assert r["rows"] == 5, r
+
+
+def test_span_criterion_under_fleet_layout(fleet_results):
+    """-stop_criterion span compiles into the fleet-sharded loop: bit-equal
+    values vs the replicated span run, strictly fewer outers than atol
+    with the same returned policies."""
+    r = fleet_results["span_fleet"]
+    assert r["converged"], r
+    assert r["dv"] == 0.0 and r["outer_eq"], r
+    assert r["strictly_fewer"], r
+    assert r["same_policy"], r
+
+
+def test_span_masks_mesh_padding_nondivisible_n(fleet_results):
+    """n=301 pads to 304 on 8 state shards; the padded rows' 0 residual
+    must not enter the span min — sharded and replicated span runs stop at
+    the identical outer count."""
+    r = fleet_results["span_nondivisible"]
+    assert r["converged"], r
+    assert r["sh_outer"] == r["rep_outer"], r
+    assert r["dpi"] == 0, r
+
+
+def test_user_registered_ksp_under_fleet_layout(fleet_results):
+    """Acceptance: a register_ksp solver selected via MADUPITE_OPTIONS
+    -ksp_type runs under layout='fleet' and matches the replicated path."""
+    r = fleet_results["user_ksp_fleet"]
+    assert r["method"] == "ipi_myrich", r
+    assert r["converged"], r
+    assert r["dv"] < 1e-10 and r["dpi"] == 0, r
 
 
 def test_elastic_restart_nondivisible_n():

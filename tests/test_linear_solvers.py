@@ -6,7 +6,8 @@ import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core.comm import Axes
-from repro.core.solvers import bicgstab, gmres, richardson
+from repro.core.solvers import anderson, bicgstab, chebyshev, gmres, \
+    richardson
 
 AXES = Axes()
 
@@ -23,7 +24,8 @@ def _mdp_like_system(n, gamma, seed):
 
 
 @pytest.mark.parametrize("solver,kw", [
-    (gmres, dict(restart=25)), (bicgstab, {}), (richardson, {})])
+    (gmres, dict(restart=25)), (bicgstab, {}), (richardson, {}),
+    (anderson, dict(window=5))])
 @pytest.mark.parametrize("gamma", [0.5, 0.95, 0.999])
 def test_solves_mdp_system(solver, kw, gamma):
     a, b = _mdp_like_system(150, gamma, seed=1)
@@ -35,6 +37,47 @@ def test_solves_mdp_system(solver, kw, gamma):
                            maxiter=maxiter, axes=AXES, **kw)
     assert float(res) <= 1e-10
     np.testing.assert_allclose(np.asarray(x), x_true, atol=1e-8)
+
+
+@pytest.mark.parametrize("gamma", [0.5, 0.9])
+def test_chebyshev_solves_mdp_system(gamma):
+    """Chebyshev on [1-gamma, 1+gamma]: exact where the (near-)real-spectrum
+    assumption holds (bulk eigenvalues of the dense random P are tiny at
+    moderate gamma; the gamma -> 1 complex-bulk regime is covered by the
+    divergence-guard test below)."""
+    a, b = _mdp_like_system(150, gamma, seed=1)
+    x_true = np.linalg.solve(a, b)
+    aj = jnp.asarray(a)
+    x, iters, res = chebyshev(lambda v: aj @ v, jnp.asarray(b),
+                              jnp.zeros(150, jnp.float64), tol=1e-10,
+                              maxiter=5000, axes=AXES,
+                              lo=1 - gamma, hi=1 + gamma)
+    assert float(res) <= 1e-10
+    assert int(iters) < 5000
+    np.testing.assert_allclose(np.asarray(x), x_true, atol=1e-8)
+
+
+def test_chebyshev_divergence_guard_bails_early():
+    """On a spectrum far outside the target interval the residual grows;
+    the PETSc-style divtol must stop the sweep long before maxiter so the
+    outer safeguard gets a cheap rejection."""
+    rng = np.random.default_rng(0)
+    q, _ = np.linalg.qr(rng.random((40, 40)))
+    # eigenvalues on a ring of radius 1 around 1: worst case for the
+    # interval iteration
+    ang = np.linspace(0, 2 * np.pi, 20, endpoint=False)
+    blocks = [np.array([[1 + np.cos(t), -np.sin(t)],
+                        [np.sin(t), 1 + np.cos(t)]]) for t in ang]
+    a = q @ (np.kron(np.eye(20), np.zeros((2, 2))) +
+             np.block([[blocks[i] if i == j else np.zeros((2, 2))
+                        for j in range(20)] for i in range(20)])) @ q.T
+    aj = jnp.asarray(a)
+    b = jnp.asarray(rng.random(40))
+    x, iters, res = chebyshev(lambda v: aj @ v, b,
+                              jnp.zeros(40, jnp.float64), tol=1e-12,
+                              maxiter=100000, axes=AXES, lo=0.9, hi=1.1,
+                              divtol=1e4)
+    assert int(iters) < 100000    # bailed out, did not spin to the cap
 
 
 @settings(max_examples=25, deadline=None)

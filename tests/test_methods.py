@@ -1,0 +1,358 @@
+"""The pluggable method registry, stopping criteria, and monitors (ISSUE 5).
+
+Covers: user-registered KSPs round-tripping through env/CLI option
+ingestion, live-registry validation with difflib suggestions, the new
+builtin inner solvers as outer methods, span/rtol/custom stopping
+criteria, monitor record streaming, jsonl stats streaming, and README
+table sync (registry = single source of truth)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import (MDP, Options, OptionTypeError, Session, method_names,
+                       method_table, ksp_names, ksp_table, option_table,
+                       register_ksp, register_method,
+                       register_stop_criterion, stop_names, stop_table,
+                       unregister_ksp, unregister_method,
+                       unregister_stop_criterion)
+from repro.core import IPIOptions, generators, methods
+from repro.core.driver import solve
+from repro.core.solvers import richardson
+
+jax.config.update("jax_enable_x64", True)
+
+README = os.path.join(os.path.dirname(__file__), "..", "README.md")
+
+
+@pytest.fixture
+def garnet():
+    return generators.garnet(n=120, m=5, k=4, gamma=0.95, seed=0)
+
+
+# --------------------------------------------------------------------------- #
+# Registry basics                                                             #
+# --------------------------------------------------------------------------- #
+
+def test_builtin_registries():
+    for m in ("vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab",
+              "pi", "ipi_chebyshev", "ipi_anderson"):
+        assert m in method_names()
+    for k in ("richardson", "gmres", "bicgstab", "chebyshev", "anderson"):
+        assert k in ksp_names()
+    assert set(stop_names(builtin_only=True)) >= {"atol", "rtol", "span"}
+
+
+def test_register_ksp_user_solver_selectable_everywhere(garnet):
+    """A user KSP registered once is selectable from Python overrides, the
+    MADUPITE_OPTIONS environment and --option CLI ingestion, and matches
+    the reference solution."""
+    def myrich(matvec, b, x0, *, tol, maxiter, axes):
+        return richardson(matvec, b, x0, tol=tol, maxiter=maxiter,
+                          axes=axes, omega=0.9)
+
+    register_ksp("myrich", myrich)
+    try:
+        # live options validation: the auto-method is selectable
+        assert "ipi_myrich" in method_names()
+        env = Options.from_sources(env={"MADUPITE_OPTIONS":
+                                        "-ksp_type myrich"})
+        assert env.to_ipi().method == "ipi_myrich"
+        cli = Options().ingest_cli(["ksp_type=myrich"])
+        assert cli.to_ipi().method == "ipi_myrich"
+        with Session({"-dtype": "float64", "-layout": "single"}) as s:
+            r = s.solve(garnet, ksp_type="myrich", atol=1e-9)
+            ref = s.solve(garnet, method="ipi_gmres", atol=1e-9)
+        assert r.converged
+        np.testing.assert_allclose(r.v, ref.v, atol=1e-7)
+        np.testing.assert_array_equal(r.policy, ref.policy)
+    finally:
+        unregister_ksp("myrich")
+    assert "ipi_myrich" not in method_names()
+    with pytest.raises(OptionTypeError):
+        Options({"-ksp_type": "myrich"})
+
+
+def test_register_method_custom_policy(garnet):
+    """register_method composes an existing KSP with a different inner
+    policy (here: near-exact PI on richardson sweeps)."""
+    register_method("my_pi", ksp="richardson", inner="tight",
+                    safeguarded=False)
+    try:
+        r = solve(garnet, IPIOptions(method="my_pi", atol=1e-8,
+                                     dtype="float64", max_inner=10000))
+        assert r.converged
+    finally:
+        unregister_method("my_pi")
+
+
+def test_registry_duplicate_and_builtin_guards():
+    with pytest.raises(ValueError, match="builtin"):
+        register_ksp("gmres", lambda *a, **k: None)
+    with pytest.raises(ValueError, match="builtin"):
+        unregister_method("vi")
+    with pytest.raises(ValueError, match="inner"):
+        register_method("broken", ksp=None, inner="forcing")
+    with pytest.raises(ValueError, match="unknown ksp"):
+        register_method("broken", ksp="nope", inner="forcing")
+
+
+def test_overwrite_reregistration_clears_compiled_caches(garnet):
+    """Hot-swapping a KSP with overwrite=True must retrace: registry
+    lookups happen at trace time, so a stale compiled program would keep
+    running the old solver."""
+    def fn_a(mv, b, x0, *, tol, maxiter, axes):
+        return richardson(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes)
+
+    def fn_b(mv, b, x0, *, tol, maxiter, axes):
+        return richardson(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
+                          omega=0.5)
+
+    register_ksp("swap", fn_a)
+    try:
+        opts = IPIOptions(method="ipi_swap", atol=1e-7, dtype="float64")
+        r_a = solve(garnet, opts)
+        register_ksp("swap", fn_b, overwrite=True, auto_method=False)
+        r_b = solve(garnet, opts)   # same static opts: must NOT reuse fn_a
+        assert r_a.converged and r_b.converged
+        assert r_a.inner_iterations != r_b.inner_iterations
+    finally:
+        unregister_ksp("swap")
+
+
+def test_unknown_names_get_live_suggestions():
+    """Satellite: difflib suggestions drawn from the LIVE registry, in both
+    the options DB and IPIOptions itself (no frozen-tuple duplicate)."""
+    with pytest.raises(OptionTypeError, match="ipi_gmres"):
+        Options({"-method": "ipi_gmers"})
+    with pytest.raises(ValueError, match="ipi_gmres"):
+        IPIOptions(method="ipi_gmers")
+    with pytest.raises(ValueError, match="span"):
+        IPIOptions(stop_criterion="spam")
+    register_ksp("weird_user_solver",
+                 lambda mv, b, x0, *, tol, maxiter, axes:
+                 richardson(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes))
+    try:
+        with pytest.raises(ValueError, match="ipi_weird_user_solver"):
+            IPIOptions(method="ipi_weird_user_solvr")
+    finally:
+        unregister_ksp("weird_user_solver")
+
+
+def test_deterministic_dots_validates_against_ksp_capability():
+    IPIOptions(method="ipi_chebyshev", deterministic_dots=True)  # legal
+    with pytest.raises(ValueError, match="bicgstab"):
+        IPIOptions(method="ipi_bicgstab", deterministic_dots=True)
+    with pytest.raises(ValueError, match="anderson"):
+        IPIOptions(method="ipi_anderson", deterministic_dots=True)
+
+
+# --------------------------------------------------------------------------- #
+# Stopping criteria                                                           #
+# --------------------------------------------------------------------------- #
+
+def test_span_stops_strictly_earlier_same_policy():
+    """Acceptance criterion: -stop_criterion span converges in strictly
+    fewer outer iterations than atol on chain_walk, same returned policy."""
+    mdp = generators.chain_walk(300, gamma=0.999)
+    kw = dict(method="vi", atol=1e-8, dtype="float64", max_outer=100000)
+    r_atol = solve(mdp, IPIOptions(**kw))
+    r_span = solve(mdp, IPIOptions(stop_criterion="span", **kw))
+    assert r_atol.converged and r_span.converged
+    assert r_span.outer_iterations < r_atol.outer_iterations, \
+        (r_span.outer_iterations, r_atol.outer_iterations)
+    np.testing.assert_array_equal(r_span.policy, r_atol.policy)
+    # converged span results are midpoint-corrected: the returned value
+    # carries the gamma*sp/(2(1-gamma)) certificate, so it must agree with
+    # the atol-converged value within the sum of both gap bounds
+    assert np.abs(r_span.v - r_atol.v).max() <= \
+        r_span.gap_bound + r_atol.gap_bound
+    assert r_span.gap_bound <= 0.999 * 1e-8 / (2 * (1 - 0.999)) * (1 + 1e-9)
+
+
+def test_span_masks_mesh_padding_single_device():
+    """Mesh-pad rows are absorbing states with residual exactly 0; left in
+    the span min they erase the early-certification benefit.  A padded
+    single-device solve must stop at the same outer count as unpadded (the
+    cross-layout case runs in tests/test_fleet.py)."""
+    from repro.core import ipi as ipi_mod
+    from repro.core import partition
+    from repro.core.comm import Axes
+    mdp = generators.chain_walk(301, gamma=0.999)
+    opts = IPIOptions(method="vi", atol=1e-8, dtype="float64",
+                      max_outer=100000, stop_criterion="span")
+    r = solve(mdp, opts)
+    padded = partition.pad_mdp(mdp, n_mult=8, m_mult=1)   # 301 -> 304
+    assert padded.n_global == 304
+    st = ipi_mod.init_state(padded, Axes(), opts, n_true=301)
+    st = ipi_mod.solve_chunk(padded, st, 100000, opts=opts, axes=Axes())
+    assert int(st.k) == r.outer_iterations
+    assert bool(st.done)
+
+
+def test_rtol_criterion(garnet):
+    r = solve(garnet, IPIOptions(method="vi", stop_criterion="rtol",
+                                 rtol=1e-3, dtype="float64",
+                                 max_outer=20000))
+    assert r.converged
+    res0 = float(r.trace_residual[0])
+    assert r.residual <= 1e-3 * res0
+    assert float(r.trace_residual[r.outer_iterations - 1]) > 1e-3 * res0
+
+
+def test_atol_criterion_unchanged_results(garnet):
+    """The registry/criterion refactor must not change the default path:
+    converged flag, iterate count and traces equal the atol semantics."""
+    r = solve(garnet, IPIOptions(method="ipi_gmres", atol=1e-9,
+                                 dtype="float64"))
+    assert r.converged and r.residual <= 1e-9
+    assert float(r.trace_residual[r.outer_iterations - 1]) > 1e-9
+
+
+def test_custom_stop_criterion_name_and_callable(garnet):
+    register_stop_criterion("five_outers", lambda m: m.k >= 5)
+    try:
+        r = solve(garnet, IPIOptions(method="vi", dtype="float64",
+                                     stop_criterion="five_outers"))
+        assert r.outer_iterations == 5 and r.converged
+        # callable path through the session (ad-hoc registration)
+        with Session({"-dtype": "float64", "-layout": "single"}) as s:
+            r2 = s.solve(garnet, method="vi",
+                         stop_criterion=lambda m: m.res <= 1e-3)
+        assert r2.converged and r2.residual <= 1e-3
+        assert float(r2.trace_residual[r2.outer_iterations - 1]) > 1e-3
+    finally:
+        unregister_stop_criterion("five_outers")
+
+
+def test_custom_criterion_can_read_span(garnet):
+    """Ad-hoc predicates get span metrics by default (needs_span=True) —
+    a criterion reading m.span must see real values, not +inf."""
+    with Session({"-dtype": "float64", "-layout": "single"}) as s:
+        r = s.solve(garnet, method="vi", max_outer=20000,
+                    stop_criterion=lambda m: m.span <= 1e-6)
+    assert r.converged and r.outer_iterations < 20000
+
+
+def test_adhoc_criterion_name_is_stable():
+    fn = lambda m: m.k >= 2
+    n1 = methods.adhoc_stop_criterion(fn)
+    n2 = methods.adhoc_stop_criterion(fn)
+    assert n1 == n2
+    other = methods.adhoc_stop_criterion(lambda m: m.k >= 3)
+    assert other != n1
+    unregister_stop_criterion(n1)
+    unregister_stop_criterion(other)
+
+
+# --------------------------------------------------------------------------- #
+# Monitors                                                                    #
+# --------------------------------------------------------------------------- #
+
+def test_monitor_streams_one_record_per_outer_iteration(garnet):
+    records = []
+    with Session({"-dtype": "float64", "-layout": "single"}) as s:
+        r = s.solve(garnet, method="ipi_gmres", atol=1e-9,
+                    monitor=records.append)
+    # k=0 record plus one per outer iteration, in order, no duplicates
+    assert [rec["k"] for rec in records] == list(range(
+        r.outer_iterations + 1))
+    assert records[0]["inner"] == 0
+    np.testing.assert_allclose(
+        [rec["res"] for rec in records], r.trace_residual, rtol=1e-12)
+    assert [rec["inner"] for rec in records[1:]] == list(r.trace_inner)
+    assert all(rec["elapsed"] >= 0 for rec in records)
+
+
+def test_monitor_lands_in_stats_with_history(garnet, tmp_path):
+    p = tmp_path / "stats.jsonl"
+    with Session({"-dtype": "float64", "-layout": "single",
+                  "-monitor": True, "-file_stats": str(p)}) as s:
+        r = s.solve(garnet, method="vi", atol=1e-6)
+        entry = s.stats[-1]
+    assert len(entry["monitor"]) == r.outer_iterations + 1
+    assert entry["solves"][0]["trace_residual"] == \
+        [float(x) for x in r.trace_residual]
+    assert entry["solves"][0]["trace_inner"] == [int(x) for x in
+                                                 r.trace_inner]
+    on_disk = json.loads(p.read_text().splitlines()[0])
+    assert len(on_disk["monitor"]) == r.outer_iterations + 1
+
+
+def test_monitor_disabled_no_records(garnet):
+    with Session({"-dtype": "float64", "-layout": "single"}) as s:
+        s.solve(garnet, method="vi", atol=1e-6)
+        assert "monitor" not in s.stats[-1]
+
+
+def test_monitor_exception_does_not_kill_solve(garnet, capsys):
+    """A raising user monitor must not abort the solve — records are
+    dropped with a warning (k=0 host record included)."""
+    def bad(rec):
+        raise KeyError("boom")
+    with Session({"-dtype": "float64", "-layout": "single"}) as s:
+        r = s.solve(garnet, method="vi", atol=1e-6, monitor=bad)
+    assert r.converged
+    assert "callback error" in capsys.readouterr().out
+
+
+def test_monitor_false_overrides_session_monitor(garnet, capsys):
+    """monitor=False must disable a session-level -monitor for this call."""
+    with Session({"-dtype": "float64", "-layout": "single",
+                  "-monitor": True}) as s:
+        s.solve(garnet, method="vi", atol=1e-6, monitor=False)
+        assert "monitor" not in s.stats[-1]
+    assert "[monitor]" not in capsys.readouterr().out
+
+
+# --------------------------------------------------------------------------- #
+# Stats streaming (satellite: -file_stats O(solves^2) fix)                    #
+# --------------------------------------------------------------------------- #
+
+def test_file_stats_jsonl_streams_appends(garnet, tmp_path):
+    p = tmp_path / "stats.jsonl"
+    with Session({"-dtype": "float64", "-layout": "single",
+                  "-file_stats": str(p), "-atol": 1e-6}) as s:
+        sizes = []
+        for _ in range(3):
+            s.solve(garnet, method="vi")
+            sizes.append(p.stat().st_size)
+    lines = p.read_text().splitlines()
+    assert len(lines) == 3
+    per_solve = [sizes[0], sizes[1] - sizes[0], sizes[2] - sizes[1]]
+    # appends are O(1) per solve: every increment is one entry, not the
+    # re-serialized accumulated list
+    assert max(per_solve) < 1.5 * min(per_solve)
+    assert [json.loads(ln)["method"] for ln in lines] == ["vi"] * 3
+
+
+def test_file_stats_json_array_format_available(garnet, tmp_path):
+    p = tmp_path / "stats.json"
+    with Session({"-dtype": "float64", "-layout": "single",
+                  "-file_stats": str(p), "-file_stats_format": "json",
+                  "-atol": 1e-6}) as s:
+        s.solve(garnet, method="vi")
+        s.solve(garnet, method="vi")
+    entries = json.loads(p.read_text())
+    assert isinstance(entries, list) and len(entries) == 2
+
+
+# --------------------------------------------------------------------------- #
+# Docs sync (satellite: registry is the single source of truth)               #
+# --------------------------------------------------------------------------- #
+
+def test_readme_tables_generated_from_registry():
+    text = open(README).read()
+    assert option_table() in text, \
+        "README option table drifted; regenerate with repro.api.option_table()"
+    assert method_table() in text, \
+        "README method table drifted; regenerate with repro.api.method_table()"
+    assert ksp_table() in text, \
+        "README ksp table drifted; regenerate with repro.api.ksp_table()"
+    assert stop_table() in text, \
+        "README stop-criterion table drifted; regenerate with " \
+        "repro.api.stop_table()"

@@ -10,7 +10,7 @@ from repro.core.solvers import dense_policy_value
 
 GAMMA = 0.95
 ALL_METHODS = ["vi", "mpi", "ipi_richardson", "ipi_gmres", "ipi_bicgstab",
-               "pi"]
+               "pi", "ipi_chebyshev", "ipi_anderson"]
 
 
 def _value_iteration_oracle(mdp, tol=1e-10, iters=100000):
