@@ -33,6 +33,7 @@ from typing import Any, Callable, Iterator, Mapping
 
 from repro.core import methods as _methods
 from repro.core.ipi import IPIOptions, MODES
+from repro.utils import xla_flags as _xla_flags
 
 __all__ = ["OptionSpec", "OPTION_SPECS", "Options", "UnknownOptionError",
            "OptionTypeError", "option_table"]
@@ -218,8 +219,20 @@ _SPECS = [
                "pin the GMRES projection accumulation order so "
                "fleet-sharded Krylov values are bit-equal to the "
                "replicated layout"),
-    OptionSpec("-impl", str, None, "kernel implementation override",
-               choices=("xla", "pallas", "pallas_interpret"), nullable=True),
+    OptionSpec("-kernel_impl", str, None,
+               "kernel implementation (auto = blocked XLA on CPU, Pallas "
+               "on TPU, with autotuned tiles); '-impl' is accepted as an "
+               "alias",
+               choices=("auto", "xla", "blocked", "pallas",
+                        "pallas_interpret"),
+               nullable=True),
+    OptionSpec("-kernel_tune", str, "on",
+               "tile autotuner: time tile candidates per (backend, shape, "
+               "dtype) and persist the winners",
+               choices=("on", "off")),
+    OptionSpec("-kernel_tune_cache", str, None,
+               "autotune cache path (default ~/.cache/madupite/"
+               "autotune.json)", nullable=True),
     OptionSpec("-dtype", str, "float32", "value-vector dtype",
                choices=("float32", "float64")),
     OptionSpec("-halo", int, 0,
@@ -229,6 +242,13 @@ _SPECS = [
                "compressed (inexact) gather wire dtype for inner matvecs",
                nullable=True),
     # ---- placement (owned by the session layer) ----------------------------
+    OptionSpec("-xla_flag_bundle", str, None,
+               "named XLA_FLAGS bundle applied at session start "
+               "(repro.utils.xla_flags)",
+               choices_fn=lambda: tuple(_xla_flags.bundle_names()),
+               choices_doc=" \\| ".join(
+                   f"`{n}`" for n in sorted(_xla_flags.BUNDLES)),
+               nullable=True),
     OptionSpec("-layout", str, "auto",
                "mesh layout; 'auto' picks from problem shape and fleet "
                "size, 'single' forces single-device",
@@ -280,9 +300,13 @@ _IPI_FIELDS = {
     "-omega": "omega", "-mpi_sweeps": "mpi_sweeps",
     "-anderson_window": "anderson_window", "-monitor": "monitor",
     "-safeguard": "safeguard", "-deterministic_dots": "deterministic_dots",
-    "-impl": "impl", "-dtype": "dtype",
+    "-kernel_impl": "impl", "-dtype": "dtype",
     "-halo": "halo", "-gather_dtype": "gather_dtype",
 }
+
+
+# retired spellings accepted for compatibility
+_ALIASES = {"-impl": "-kernel_impl"}
 
 
 def _normalize(key: Any) -> str:
@@ -290,6 +314,7 @@ def _normalize(key: Any) -> str:
         raise UnknownOptionError(f"option keys are strings like '-atol', "
                                  f"got {key!r}")
     name = key if key.startswith("-") else "-" + key
+    name = _ALIASES.get(name, name)
     if name not in OPTION_SPECS:
         raise UnknownOptionError(
             f"unknown option {key!r}{_methods.suggest(name, OPTION_SPECS)} "

@@ -82,6 +82,21 @@ class Session:
         # calls skip re-construction, mirroring MDP.place's per-MDP cache
         self._fleet_cache: dict = {}
         _sync_x64(self.options)
+        self._apply_kernel_options()
+
+    def _apply_kernel_options(self) -> None:
+        """Push kernel-facing options into their process-wide services:
+        the XLA flag bundle (must precede backend init to take effect in
+        this process) and the tile-autotuner configuration."""
+        from repro.kernels import tuning as _tuning
+        from repro.utils import xla_flags as _xla_flags
+
+        bundle = self.options.get("-xla_flag_bundle")
+        if bundle:
+            _xla_flags.apply_bundle(bundle)
+        _tuning.configure(
+            enabled=self.options.get("-kernel_tune") != "off",
+            cache_path=self.options.get("-kernel_tune_cache"))
 
     # ---- lifecycle ---------------------------------------------------------
     def __enter__(self) -> "Session":

@@ -16,11 +16,10 @@ Batched fleets
 dim, see :func:`repro.core.mdp.stack_mdps`) with correspondingly batched
 value vectors and vmap themselves over the unbatched path.  The per-instance
 operators additionally take ``gamma_t``, an optional *traced* scalar discount
-override: gamma only ever multiplies ``P v`` products, so scaling the
-gathered value window by ``gamma_t`` (and using coefficient 1 in place of the
-static ``gamma``) is algebraically exact.  This is how heterogeneous-gamma
-fleets (e.g. a gamma sweep) run through kernels whose ``gamma`` is a static
-compile-time constant.
+override, passed straight through to the kernels — the dispatch layer traces
+``gamma`` (it is not a compile-time constant), so a heterogeneous-gamma fleet
+(e.g. a gamma sweep) shares one compiled kernel across instances and computes
+``cost + gamma * P v`` with exactly the same rounding as a replicated solve.
 """
 
 from __future__ import annotations
@@ -90,9 +89,7 @@ def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
                                       gamma_t=gt, mode=mode)
         return jax.vmap(fn, in_axes=(in_ax, 0, None if g_t is None else 0))(
             view, v_global, g_t)
-    if gamma_t is not None:
-        v_global = (gamma_t * v_global).astype(v_global.dtype)
-    gamma = 1.0 if gamma_t is not None else mdp.gamma
+    gamma = mdp.gamma if gamma_t is None else gamma_t
     neg = mode == "maxreward"
     cost = -mdp.cost if neg else mdp.cost
     if neg:
@@ -198,9 +195,7 @@ def t_pi(rows: PolicyRows, x_local: jax.Array, axes: Axes, *,
          gather_dtype=None, gamma_t: jax.Array | None = None) -> jax.Array:
     """Policy-restricted Bellman operator ``T_pi x = g_pi + gamma P_pi x``."""
     x_eff = gather_v(x_local, axes, halo=halo, dtype=gather_dtype)
-    if gamma_t is not None:
-        x_eff = (gamma_t * x_eff).astype(x_eff.dtype)
-    gamma = 1.0 if gamma_t is not None else rows.gamma
+    gamma = rows.gamma if gamma_t is None else gamma_t
     y = _p_pi_matvec(rows, x_eff, axes, impl,
                      _rows_idx_eff(rows, mdp, axes, halo))
     return axes.psum_action(rows.g) + gamma * y
@@ -218,9 +213,7 @@ def a_pi_matvec(rows: PolicyRows, x_local: jax.Array, axes: Axes, *,
     the outer iPI loop bounds the tolerable inner-system perturbation.
     """
     x_eff = gather_v(x_local, axes, halo=halo, dtype=gather_dtype)
-    if gamma_t is not None:
-        x_eff = (gamma_t * x_eff).astype(x_eff.dtype)
-    gamma = 1.0 if gamma_t is not None else rows.gamma
+    gamma = rows.gamma if gamma_t is None else gamma_t
     y = _p_pi_matvec(rows, x_eff, axes, impl,
                      _rows_idx_eff(rows, mdp, axes, halo))
     return x_local - gamma * y.astype(x_local.dtype)

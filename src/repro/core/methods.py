@@ -588,9 +588,11 @@ register_ksp(
     lambda mv, b, x0, *, tol, maxiter, axes, opts=None:
         anderson(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
                  window=opts.anderson_window if opts is not None else 5,
-                 mixing=opts.omega if opts is not None else 1.0),
+                 mixing=opts.omega if opts is not None else 1.0,
+                 deterministic=bool(opts.deterministic_dots)
+                 if opts is not None else False),
     doc="Anderson-accelerated VI (windowed residual extrapolation)",
-    deterministic=False, auto_method=False, _builtin=True)
+    deterministic=True, auto_method=False, _builtin=True)
 
 register_method("vi", ksp=None, inner="none", safeguarded=False,
                 doc="value iteration (0 inner sweeps)", _builtin=True)

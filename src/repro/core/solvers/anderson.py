@@ -22,6 +22,15 @@ The history buffers start at zero, which makes the first iteration a pure
 (damped) Richardson step with no special-casing: zero rows contribute zero
 Gram rows and a zero right-hand side, so their mixing coefficients vanish
 through the Tikhonov term.
+
+``deterministic=True`` composes every reduction the way
+:mod:`repro.core.solvers.gmres` does in deterministic mode: the Gram matrix
+and projection are lane-at-a-time ``lax.map``s of fixed-shape reductions,
+the extrapolation combine is an ordered AXPY loop, and the tiny regularized
+``m x m`` solve is a fixed-order (pivot-free) Gaussian elimination instead
+of ``jnp.linalg.solve`` — no dot-general or LAPACK call whose tiling could
+depend on the vmapped fleet width — so a fleet-sharded Anderson solve is
+bit-identical to the replicated layout at equal state-shard count.
 """
 
 from __future__ import annotations
@@ -34,16 +43,64 @@ from repro.core.comm import Axes
 _TINY = 1e-30
 
 
+def _det_gram(axes: Axes, df):
+    """``DF DF^T`` one (i, j) lane at a time: every entry is the same
+    fixed-shape elementwise-multiply + reduce regardless of fleet width."""
+    return axes.psum_state(
+        jax.lax.map(lambda di: jax.lax.map(lambda dj: jnp.sum(di * dj), df),
+                    df))
+
+
+def _det_rhs(axes: Axes, df, r):
+    """``DF r`` as a lane-at-a-time map of fixed-shape reductions."""
+    return axes.psum_state(jax.lax.map(lambda di: jnp.sum(di * r), df))
+
+
+def _det_combine(w, dx, df, beta):
+    """``(DX + beta DF)^T w`` as an ordered AXPY loop (fixed slot order)."""
+    return jax.lax.fori_loop(
+        0, dx.shape[0],
+        lambda j, acc: acc + w[j] * (dx[j] + beta * df[j]),
+        jnp.zeros_like(dx[0]))
+
+
+def _det_solve(A, rhs):
+    """Fixed-order Gaussian elimination + back-substitution.
+
+    No pivoting: ``A`` is the Tikhonov-regularized window Gram matrix (SPD
+    with a strictly positive diagonal), so the pivot is never zero.  The
+    fixed elimination/substitution order replaces the batched LAPACK path of
+    ``jnp.linalg.solve``, whose algorithm choice may differ under vmap.
+    """
+    m = A.shape[0]
+
+    def elim(i, state):
+        A, b = state
+        f = (A[:, i] / A[i, i]) * (jnp.arange(m) > i).astype(A.dtype)
+        return A - f[:, None] * A[i][None, :], b - f * b[i]
+
+    A, b = jax.lax.fori_loop(0, m, elim, (A, rhs))
+
+    def back(t, y):
+        j = m - 1 - t
+        # y[k] == 0 for k <= j (not yet assigned), so the full-row reduce
+        # only picks up the k > j terms back-substitution needs.
+        return y.at[j].set((b[j] - jnp.sum(A[j] * y)) / A[j, j])
+
+    return jax.lax.fori_loop(0, m, back, jnp.zeros_like(rhs))
+
+
 def anderson(matvec, b: jax.Array, x0: jax.Array, *, tol, maxiter: int,
              axes: Axes, window: int = 5, mixing: float = 1.0,
-             reg: float = 1e-10):
+             reg: float = 1e-10, deterministic: bool = False):
     """Returns ``(x, iters, ||b - A x||_inf)``.
 
     ``window`` is the AA depth ``m`` (memory: two ``(m, n_local)``
     buffers); ``mixing`` is the damped-Richardson mixing parameter beta
     (the registry wrapper maps ``-omega`` onto it, like Richardson's
     damping); ``reg`` scales the relative Tikhonov term on the window
-    Gram matrix.
+    Gram matrix.  ``deterministic`` pins every accumulation order (see the
+    module docstring) so fleet-sharded and replicated solves are bit-equal.
     """
     dt = x0.dtype
     m = int(window)
@@ -60,11 +117,19 @@ def anderson(matvec, b: jax.Array, x0: jax.Array, *, tol, maxiter: int,
 
     def body(s):
         x, r, dx, df, _, it = s
-        gram = axes.psum_state(df @ df.T)                    # (m, m)
-        rhs = axes.psum_state(df @ r)                        # (m,)
+        if deterministic:
+            gram = _det_gram(axes, df)                       # (m, m)
+            rhs = _det_rhs(axes, df, r)                      # (m,)
+        else:
+            gram = axes.psum_state(df @ df.T)                # (m, m)
+            rhs = axes.psum_state(df @ r)                    # (m,)
         lam = reg * (jnp.trace(gram) / m) + jnp.asarray(_TINY, dt)
-        gamma = jnp.linalg.solve(gram + lam * eye, rhs)
-        x_new = x + beta * r - (dx + beta * df).T @ gamma
+        if deterministic:
+            gamma = _det_solve(gram + lam * eye, rhs)
+            x_new = x + beta * r - _det_combine(gamma, dx, df, beta)
+        else:
+            gamma = jnp.linalg.solve(gram + lam * eye, rhs)
+            x_new = x + beta * r - (dx + beta * df).T @ gamma
         r_new = b - matvec(x_new)
         slot = it % m
         dx = dx.at[slot].set(x_new - x)

@@ -25,8 +25,8 @@ DEFAULT_TILE_N = 128
 DEFAULT_TILE_C = 512
 
 
-def _dense_kernel(p_ref, cost_ref, v_ref, out_v_ref, out_pi_ref, acc_ref,
-                  *, gamma: float, c_steps: int):
+def _dense_kernel(gamma_ref, p_ref, cost_ref, v_ref, out_v_ref, out_pi_ref,
+                  acc_ref, *, c_steps: int):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
@@ -42,14 +42,14 @@ def _dense_kernel(p_ref, cost_ref, v_ref, out_v_ref, out_pi_ref, acc_ref,
 
     @pl.when(c == c_steps - 1)
     def _finish():
-        q = cost_ref[...].astype(jnp.float32) + gamma * acc_ref[...]
+        q = cost_ref[...].astype(jnp.float32) + gamma_ref[0, 0] * acc_ref[...]
         out_v_ref[...] = q.min(axis=-1)
         out_pi_ref[...] = jnp.argmin(q, axis=-1).astype(jnp.int32)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("gamma", "interpret", "tile_n", "tile_c"))
-def dense_backup(p, cost, gamma: float, v, *, interpret: bool = False,
+                   static_argnames=("interpret", "tile_n", "tile_c"))
+def dense_backup(p, cost, gamma, v, *, interpret: bool = False,
                  tile_n: int = DEFAULT_TILE_N, tile_c: int = DEFAULT_TILE_C):
     """Fused dense backup -> ``(min_a Q (n,), argmin_a Q (n,) i32)``."""
     n, m, n_cols = p.shape
@@ -64,10 +64,12 @@ def dense_backup(p, cost, gamma: float, v, *, interpret: bool = False,
         v = jnp.pad(v, (0, pad_c))
     np_, ncp = n + pad_n, n_cols + pad_c
     c_steps = ncp // tc
+    gamma_arr = jnp.full((1, 1), gamma, jnp.float32)
     out_v, out_pi = pl.pallas_call(
-        functools.partial(_dense_kernel, gamma=gamma, c_steps=c_steps),
+        functools.partial(_dense_kernel, c_steps=c_steps),
         grid=(np_ // tn, c_steps),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i, c: (0, 0)),
             pl.BlockSpec((tn, m, tc), lambda i, c: (i, 0, c)),
             pl.BlockSpec((tn, m), lambda i, c: (i, 0)),
             pl.BlockSpec((tc,), lambda i, c: (c,)),
@@ -82,5 +84,5 @@ def dense_backup(p, cost, gamma: float, v, *, interpret: bool = False,
         ],
         scratch_shapes=[pltpu.VMEM((tn, m), jnp.float32)],
         interpret=interpret,
-    )(p, cost, v)
+    )(gamma_arr, p, cost, v)
     return out_v[:n], out_pi[:n]

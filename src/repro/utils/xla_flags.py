@@ -1,0 +1,99 @@
+"""Named XLA flag bundles, applied per topology at session start.
+
+madupite ships PETSc options tables tuned per machine; the JAX analogue is
+the ``XLA_FLAGS`` environment variable.  This module names a few vetted
+per-topology combinations so a run can say ``-xla_flag_bundle cpu-single``
+instead of exporting raw flags, and so A/B benchmarks
+(``benchmarks/run.py --only kernels``) can sweep them reproducibly.
+
+Flags must reach XLA before the backend initializes.  ``apply_bundle``
+merges the bundle into ``os.environ["XLA_FLAGS"]`` (existing flags are kept;
+bundle flags are appended, and XLA's last-one-wins parsing makes the bundle
+take precedence on conflicts).  If the JAX backend is already up, the merge
+still happens — useful for subprocess benchmarking — but a warning explains
+that the current process will not see the change.
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+
+# Each bundle: flag name -> value.  Rendered as --name=value.
+BUNDLES: dict[str, dict[str, str]] = {
+    # Single-core CPU solver runs (the common laptop / CI topology): stop
+    # Eigen from spawning a thread pool that only adds scheduling noise at
+    # nproc=1, and keep min/max IEEE-strict so argmin tie-breaks stay exact.
+    "cpu-single": {
+        "xla_cpu_multi_thread_eigen": "false",
+        "xla_cpu_enable_fast_min_max": "false",
+    },
+    # Multi-core CPU hosts: default threading, strict min/max only.
+    "cpu-host": {
+        "xla_cpu_enable_fast_min_max": "false",
+    },
+    # TPU pods: overlap collective latency with compute — matters for the
+    # state-axis all-gather before every backup and psum_state reductions.
+    "tpu-collectives": {
+        "xla_tpu_enable_latency_hiding_scheduler": "true",
+        "xla_enable_async_all_gather": "true",
+        "xla_enable_async_collective_permute": "true",
+    },
+    # TPU single-host: latency hiding only.
+    "tpu-host": {
+        "xla_tpu_enable_latency_hiding_scheduler": "true",
+    },
+}
+
+
+def bundle_names() -> tuple[str, ...]:
+    return tuple(sorted(BUNDLES))
+
+
+def bundle(name: str) -> dict[str, str]:
+    try:
+        return dict(BUNDLES[name])
+    except KeyError:
+        raise KeyError(
+            f"unknown XLA flag bundle {name!r}; "
+            f"available: {', '.join(bundle_names())}") from None
+
+
+def render(name: str) -> str:
+    """The bundle as an XLA_FLAGS fragment: ``--flag=value ...``."""
+    return " ".join(f"--{k}={v}" for k, v in bundle(name).items())
+
+
+def backend_initialized() -> bool:
+    """True if a JAX backend already exists (flags no longer take effect)."""
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:  # noqa: BLE001 - private API; absent means unknown
+        return False
+
+
+def merged_flags(name: str, existing: str | None = None) -> str:
+    """Existing XLA_FLAGS with the bundle appended (bundle wins conflicts)."""
+    fragment = render(name)
+    existing = (existing if existing is not None
+                else os.environ.get("XLA_FLAGS", ""))
+    keep = [tok for tok in existing.split() if tok]
+    # drop stale settings of the same flags so repeated applies stay idempotent
+    names = {f"--{k}=" for k in bundle(name)}
+    keep = [tok for tok in keep
+            if not any(tok.startswith(p) for p in names)]
+    return " ".join(keep + fragment.split())
+
+
+def apply_bundle(name: str, *, env: dict | None = None) -> str:
+    """Merge the bundle into ``env['XLA_FLAGS']`` and return the new value."""
+    env = os.environ if env is None else env
+    merged = merged_flags(name, env.get("XLA_FLAGS"))
+    if env is os.environ and backend_initialized():
+        warnings.warn(
+            f"XLA flag bundle {name!r} applied after the JAX backend "
+            "initialized; the current process keeps its old flags "
+            "(subprocesses inherit the new ones)", stacklevel=2)
+    env["XLA_FLAGS"] = merged
+    return merged

@@ -1,0 +1,127 @@
+"""Cross-layout / cross-impl parity of full solves (multi-device leg).
+
+Two end-to-end invariants of the tiled-kernel rewrite:
+
+* **impl invariance under sharding** — the same fleet solved under the
+  ``xla``, ``blocked`` and ``pallas_interpret`` kernel implementations must
+  produce identical policies (and bit-identical values: every impl pins
+  the same rounding, see :mod:`repro.kernels.ref`), on the replicated, 1d
+  and fleet layouts alike;
+* **anderson deterministic dots** — with ``deterministic_dots=True`` the
+  Anderson inner solver composes its Gram/projection/combine reductions
+  lane-at-a-time (like deterministic GMRES), so a fleet-sharded solve is
+  bit-for-bit equal to the replicated layout at matched state-shard count.
+
+Runs only when the process already has multiple devices (the CI
+multidevice leg forces 8 host devices); single-device runs are covered by
+tests/test_kernels_tiled.py.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs >=4 devices (CI forces 8 host devices)")
+
+
+def _mdps():
+    from repro.core import generators
+
+    return [generators.garnet(n=120, m=5, k=4, gamma=0.95, seed=s)
+            for s in range(5)]
+
+
+def _bitequal_results(rs, base, *, label):
+    for a, b in zip(rs, base):
+        np.testing.assert_array_equal(a.policy, b.policy, err_msg=label)
+        np.testing.assert_array_equal(
+            np.asarray(a.v).view(np.uint8), np.asarray(b.v).view(np.uint8),
+            err_msg=label)
+        assert a.outer_iterations == b.outer_iterations, label
+        assert np.array_equal(a.trace_residual, b.trace_residual,
+                              equal_nan=True), label
+
+
+@multidevice
+@pytest.mark.parametrize("method", ["vi", "ipi_gmres"])
+def test_fleet_solve_impl_invariant(method):
+    from repro.core import IPIOptions
+    from repro.core.driver import solve_many
+    from repro.launch.mesh import make_fleet_mesh
+
+    mdps = _mdps()
+    mesh = make_fleet_mesh(4)
+    results = {}
+    for impl in ("xla", "blocked", "pallas_interpret"):
+        opts = IPIOptions(method=method, atol=1e-8, dtype="float64",
+                          impl=impl, max_outer=20000)
+        rs = solve_many(mdps, opts, mesh=mesh, layout="fleet")
+        assert all(r.converged for r in rs), impl
+        results[impl] = rs
+    base = results["xla"]
+    for impl, rs in results.items():
+        _bitequal_results(rs, base, label=f"{method}/{impl}")
+
+
+@multidevice
+def test_1d_sharded_solve_impl_invariant():
+    from repro.core import IPIOptions, generators
+    from repro.core.driver import solve
+    from repro.launch.mesh import make_host_mesh
+
+    mdp = generators.garnet(n=240, m=5, k=4, gamma=0.95, seed=1)
+    mesh = make_host_mesh((4, 1))
+    results = {}
+    for impl in ("xla", "blocked", "pallas_interpret"):
+        r = solve(mdp, IPIOptions(method="ipi_gmres", atol=1e-8,
+                                  dtype="float64", impl=impl,
+                                  max_outer=20000),
+                  mesh=mesh, layout="1d")
+        assert r.converged, impl
+        results[impl] = r
+    base = results["xla"]
+    for impl, r in results.items():
+        _bitequal_results([r], [base], label=impl)
+
+
+@multidevice
+def test_anderson_fleet_matches_replicated_bitwise():
+    """deterministic_dots pins every Anderson reduction order, so the
+    fleet-sharded solve is bit-equal to the replicated baseline at matched
+    state-shard count (both shard states 2-way; only the fleet-lane
+    batching differs)."""
+    from repro.core import IPIOptions
+    from repro.core.driver import solve_many
+    from repro.launch.mesh import make_fleet_mesh, make_host_mesh
+
+    mdps = _mdps()
+    opts = IPIOptions(method="ipi_anderson", atol=1e-8, dtype="float64",
+                      max_outer=20000, deterministic_dots=True)
+    base = solve_many(mdps, opts, mesh=make_host_mesh((2, 1)), layout="1d")
+    fleet = solve_many(mdps, opts, mesh=make_fleet_mesh(4), layout="fleet")
+    assert all(r.converged for r in base)
+    _bitequal_results(fleet, base, label="anderson/fleet")
+
+
+@multidevice
+def test_anderson_deterministic_still_converges_plain():
+    """Sanity: deterministic composition changes only the reduction order,
+    not the mathematics — plain replicated solves still reach the optimum
+    and report the same iteration counts as the default composition."""
+    from repro.core import IPIOptions
+    from repro.core.driver import solve_many
+
+    mdps = _mdps()
+    det = solve_many(mdps, IPIOptions(method="ipi_anderson", atol=1e-8,
+                                      dtype="float64", max_outer=20000,
+                                      deterministic_dots=True))
+    plain = solve_many(mdps, IPIOptions(method="ipi_anderson", atol=1e-8,
+                                        dtype="float64", max_outer=20000))
+    for a, b in zip(det, plain):
+        assert a.converged and b.converged
+        np.testing.assert_array_equal(a.policy, b.policy)
+        np.testing.assert_allclose(a.v, b.v, rtol=0, atol=1e-9)

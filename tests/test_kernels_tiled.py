@@ -1,0 +1,218 @@
+"""Bit-exactness of the tiled streaming kernels (interpret mode) vs ref.py.
+
+The tiled Pallas rewrite streams the value vector through VMEM-sized
+windows and reduces actions tile-by-tile with a running (min, argmin)
+carried in scratch.  Because every formulation pins the product and the
+``gamma * pv`` rounding (:func:`repro.kernels.ref.pin_rounding`), the tiled
+kernel is required to match the one-shot XLA reference *bit for bit* — not
+within a tolerance — across non-divisible shapes, both float widths, and
+argmin ties that straddle action-tile boundaries (where a naive per-tile
+argmin would lose the global smallest-index tie-break).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import bellman_ell, ops, ref, spmv_ell
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _mk(n, m, k, dtype, seed=0, n_cols=None):
+    n_cols = n_cols or n
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, n_cols, (n, m, k)).astype(np.int32))
+    val = jnp.asarray(rng.random((n, m, k)).astype(dtype))
+    cost = jnp.asarray(rng.random((n, m)).astype(dtype))
+    v = jnp.asarray(rng.random(n_cols).astype(dtype))
+    return idx, val, cost, v
+
+
+def _assert_bitequal(got, want):
+    gv, ga = got
+    wv, wa = want
+    np.testing.assert_array_equal(
+        np.asarray(gv).view(np.uint8), np.asarray(wv).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
+
+
+# --------------------------------------------------------------------------- #
+# Interpret-mode parity sweep                                                 #
+# --------------------------------------------------------------------------- #
+
+# (n, m, k, tile_n, tile_m, tile_v): non-divisible row counts, several
+# action tiles, several value windows, and windows that don't divide n.
+SWEEP = [
+    (64, 4, 3, 64, 4, 64),       # single tile everywhere (degenerate grid)
+    (301, 5, 4, 64, 2, 128),     # ragged rows + ragged action tiles
+    (130, 17, 2, 32, 8, 37),     # m spans 3 action tiles, odd value window
+    (97, 3, 6, 16, 3, 16),       # many value windows, prime n
+    (256, 2, 1, 256, 1, 100),    # K=1, one action per tile, ragged window
+]
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("shape", SWEEP, ids=[str(s) for s in SWEEP])
+def test_tiled_backup_bitmatches_ref(shape, dtype):
+    n, m, k, tn, tm, tv = shape
+    idx, val, cost, v = _mk(n, m, k, dtype)
+    gamma = 0.997
+    want = jax.jit(ref.ell_backup)(idx, val, cost, gamma, v)
+    got = bellman_ell.ell_backup(idx, val, cost, gamma, v, interpret=True,
+                                 tile_n=tn, tile_m=tm, tile_v=tv)
+    _assert_bitequal(got, want)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_tiled_spmv_bitmatches_ref(dtype):
+    for n, k, tn, tv in [(301, 4, 64, 128), (97, 6, 16, 16), (64, 1, 64, 37)]:
+        rng = np.random.default_rng(3)
+        idx = jnp.asarray(rng.integers(0, n, (n, k)).astype(np.int32))
+        val = jnp.asarray(rng.random((n, k)).astype(dtype))
+        x = jnp.asarray(rng.random(n).astype(dtype))
+        want = jax.jit(ref.ell_matvec)(idx, val, x)
+        got = spmv_ell.ell_matvec(idx, val, x, interpret=True,
+                                  tile_n=tn, tile_v=tv)
+        np.testing.assert_array_equal(
+            np.asarray(got).view(np.uint8), np.asarray(want).view(np.uint8))
+
+
+def test_blocked_backup_bitmatches_ref():
+    """The cache-blocked scan formulation is bit-identical to the one-shot
+    chain, including the non-divisible remainder chunk."""
+    for n, bn in [(301, 64), (256, 256), (97, 100), (500, 125)]:
+        idx, val, cost, v = _mk(n, 5, 4, np.float32, seed=n)
+        want = jax.jit(ref.ell_backup)(idx, val, cost, 0.95, v)
+        got = jax.jit(lambda i, w, c, g, u, bn=bn: ref.ell_backup_blocked(
+            i, w, c, g, u, block_rows=bn))(idx, val, cost, 0.95, v)
+        _assert_bitequal(got, want)
+
+
+# --------------------------------------------------------------------------- #
+# Argmin tie-breaks across tile boundaries                                    #
+# --------------------------------------------------------------------------- #
+
+def test_tiebreak_across_action_tiles():
+    """Bitwise-equal Q columns in *different* action tiles must resolve to
+    the smallest action id — the cross-tile running-min must use a strict
+    comparison, or a later tile would steal the tie."""
+    n, m, k = 40, 9, 3
+    idx, val, cost, v = _mk(n, m, k, np.float32, seed=7)
+    # actions 2 and 7 are clones (tiles 0 and 2 under tile_m=3) and strictly
+    # the best: their q columns tie bitwise, argmin must say 2.
+    val = val.at[:, 7].set(val[:, 2])
+    idx = idx.at[:, 7].set(idx[:, 2])
+    cost = cost.at[:, 2].set(-5.0)
+    cost = cost.at[:, 7].set(-5.0)
+    want = jax.jit(ref.ell_backup)(idx, val, cost, 0.9, v)
+    got = bellman_ell.ell_backup(idx, val, cost, 0.9, v, interpret=True,
+                                 tile_n=16, tile_m=3, tile_v=16)
+    _assert_bitequal(got, want)
+    assert (np.asarray(got[1]) == 2).all()
+
+
+def test_tiebreak_within_and_across_tiles_all_equal():
+    """All actions identical: argmin must be 0 everywhere regardless of the
+    action-tile partition."""
+    n, m, k = 33, 8, 2
+    idx, val, cost, v = _mk(n, 1, k, np.float32, seed=11)
+    idx = jnp.broadcast_to(idx, (n, m, k))
+    val = jnp.broadcast_to(val, (n, m, k))
+    cost = jnp.broadcast_to(cost, (n, m))
+    for tm in (1, 2, 3, 8):
+        got = bellman_ell.ell_backup(idx, val, cost, 0.99, v, interpret=True,
+                                     tile_n=8, tile_m=tm, tile_v=11)
+        assert (np.asarray(got[1]) == 0).all(), f"tile_m={tm}"
+
+
+def test_successors_straddle_value_windows():
+    """Successor columns placed exactly at window edges (tv-1, tv, 2tv-1,
+    2tv) must each be owned by exactly one window — no double count, no
+    drop."""
+    n, m, k, tv = 16, 2, 4, 8
+    cols = np.array([tv - 1, tv, 2 * tv - 1, 0], np.int32)
+    idx = jnp.asarray(np.broadcast_to(cols, (n, m, k)).copy())
+    rng = np.random.default_rng(5)
+    val = jnp.asarray(rng.random((n, m, k), dtype=np.float32))
+    cost = jnp.asarray(rng.random((n, m), dtype=np.float32))
+    v = jnp.asarray(rng.random(n, dtype=np.float32))
+    want = jax.jit(ref.ell_backup)(idx, val, cost, 0.9, v)
+    got = bellman_ell.ell_backup(idx, val, cost, 0.9, v, interpret=True,
+                                 tile_n=8, tile_m=1, tile_v=tv)
+    _assert_bitequal(got, want)
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch layer: impl parity, batching, traced gamma                         #
+# --------------------------------------------------------------------------- #
+
+def test_ops_impl_parity_bitwise():
+    idx, val, cost, v = _mk(230, 6, 4, np.float32, seed=2)
+    outs = {impl: ops.ell_backup(idx, val, cost, 0.93, v, impl=impl)
+            for impl in ("xla", "blocked", "pallas_interpret", None)}
+    base = outs["xla"]
+    for impl, got in outs.items():
+        _assert_bitequal(got, base)
+
+
+def test_ops_batched_and_squeeze_paths():
+    b, n, m, k = 3, 120, 4, 3
+    rng = np.random.default_rng(9)
+    idx = jnp.asarray(rng.integers(0, n, (b, n, m, k)).astype(np.int32))
+    val = jnp.asarray(rng.random((b, n, m, k)).astype(np.float32))
+    cost = jnp.asarray(rng.random((b, n, m)).astype(np.float32))
+    v = jnp.asarray(rng.random((b, n)).astype(np.float32))
+    for impl in ("blocked", "pallas_interpret"):
+        tv, am = ops.ell_backup(idx, val, cost, 0.96, v, impl=impl)
+        assert tv.shape == (b, n) and am.shape == (b, n)
+        for i in range(b):
+            want = jax.jit(ref.ell_backup)(idx[i], val[i], cost[i], 0.96,
+                                           v[i])
+            _assert_bitequal((tv[i], am[i]), want)
+        # B_local == 1 (fleet-shard fast path): squeezed, not 1-lane vmapped,
+        # and bit-equal to the batched lane
+        tv1, am1 = ops.ell_backup(idx[:1], val[:1], cost[:1], 0.96, v[:1],
+                                  impl=impl)
+        assert tv1.shape == (1, n) and am1.shape == (1, n)
+        _assert_bitequal((tv1[0], am1[0]), (tv[0], am[0]))
+
+
+def test_gamma_is_traced_no_retrace():
+    """gamma is a traced argument everywhere: sweeping it must not grow the
+    jit cache (one compiled program serves every discount)."""
+    idx, val, cost, v = _mk(64, 3, 2, np.float32, seed=4)
+    ops.ell_backup(idx, val, cost, 0.9, v, impl="blocked")
+    before = ops.ell_backup._cache_size()
+    for g in (0.5, 0.95, 0.99, 0.999):
+        ops.ell_backup(idx, val, cost, g, v, impl="blocked")
+    assert ops.ell_backup._cache_size() == before
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end: a full solve is impl-invariant                                  #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("method", ["vi", "ipi_gmres"])
+def test_solve_1d_impl_invariant(method):
+    """The same problem solved under every CPU impl must produce identical
+    policies and bit-identical value vectors (the kernels are bit-equal, so
+    the whole outer/inner iteration path is too)."""
+    from repro.core import IPIOptions, generators
+    from repro.core.driver import solve
+
+    mdp = generators.garnet(n=150, m=5, k=4, gamma=0.95, seed=3)
+    results = {}
+    for impl in ("xla", "blocked", "pallas_interpret"):
+        r = solve(mdp, IPIOptions(method=method, atol=1e-8, dtype="float64",
+                                  impl=impl, max_outer=20000))
+        assert r.converged
+        results[impl] = r
+    base = results["xla"]
+    for impl, r in results.items():
+        np.testing.assert_array_equal(r.policy, base.policy, err_msg=impl)
+        np.testing.assert_array_equal(
+            np.asarray(r.v).view(np.uint8),
+            np.asarray(base.v).view(np.uint8), err_msg=impl)
+        assert r.outer_iterations == base.outer_iterations, impl

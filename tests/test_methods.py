@@ -145,10 +145,11 @@ def test_unknown_names_get_live_suggestions():
 
 def test_deterministic_dots_validates_against_ksp_capability():
     IPIOptions(method="ipi_chebyshev", deterministic_dots=True)  # legal
+    # anderson gained a deterministic composition (lane-at-a-time Gram /
+    # projection, ordered combines, fixed-order solve) — legal now too
+    IPIOptions(method="ipi_anderson", deterministic_dots=True)
     with pytest.raises(ValueError, match="bicgstab"):
         IPIOptions(method="ipi_bicgstab", deterministic_dots=True)
-    with pytest.raises(ValueError, match="anderson"):
-        IPIOptions(method="ipi_anderson", deterministic_dots=True)
 
 
 # --------------------------------------------------------------------------- #
