@@ -213,6 +213,11 @@ _SPECS = [
     OptionSpec("-monitor", bool, False,
                "stream per-outer-iteration records (residual, inner iters, "
                "elapsed) out of the compiled loop"),
+    OptionSpec("-monitor_mode", str, "stream",
+               "monitor delivery: stream (host callback per outer "
+               "iteration) or chunk (records reconstructed from the "
+               "residual trace once per run chunk — no per-iteration "
+               "host sync)", choices=("stream", "chunk")),
     OptionSpec("-safeguard", bool, True,
                "monotone (VI-fallback) safeguard for Krylov steps"),
     OptionSpec("-deterministic_dots", bool, False,
@@ -241,6 +246,17 @@ _SPECS = [
     OptionSpec("-gather_dtype", str, None,
                "compressed (inexact) gather wire dtype for inner matvecs",
                nullable=True),
+    OptionSpec("-comm_overlap", str, "auto",
+               "overlap the value-window gather with interior-row backup "
+               "compute and shrink the collective to the frontier reach "
+               "when -halo is 0 (bitwise-identical to the synchronous "
+               "path); auto enables it when the interior covers >= half "
+               "the shard",
+               choices=("auto", "on", "off")),
+    OptionSpec("-async_sweeps", int, 1,
+               "method=async_vi: local Bellman sweeps per value exchange "
+               "(1 = synchronous VI)",
+               validate=_positive("async_sweeps")),
     # ---- placement (owned by the session layer) ----------------------------
     OptionSpec("-xla_flag_bundle", str, None,
                "named XLA_FLAGS bundle applied at session start "
@@ -302,6 +318,8 @@ _IPI_FIELDS = {
     "-safeguard": "safeguard", "-deterministic_dots": "deterministic_dots",
     "-kernel_impl": "impl", "-dtype": "dtype",
     "-halo": "halo", "-gather_dtype": "gather_dtype",
+    "-comm_overlap": "comm_overlap", "-async_sweeps": "async_sweeps",
+    "-monitor_mode": "monitor_mode",
 }
 
 

@@ -48,11 +48,17 @@ def gather_v(v_local: jax.Array, axes: Axes, *, halo: int = 0,
 
 
 def _shift_idx(idx: jax.Array, mdp: MDP, axes: Axes, halo: int) -> jax.Array:
-    """Global successor ids -> window-relative ids for the halo layout."""
+    """Global successor ids -> window-relative ids for the halo layout.
+
+    Coordinates are clamped into the window: the auto-halo planner admits
+    MDPs whose *zero-weight* ELL fill (padded rows, short rows) references
+    columns far outside the band, and those entries must read a defined
+    value so 0*v[i] stays exactly 0 instead of poisoning the row with an
+    out-of-bounds gather."""
     if not halo:
         return idx
     row_start = axes.state_index() * mdp.n_local
-    return idx - row_start + halo
+    return jnp.clip(idx - row_start + halo, 0, mdp.n_local + 2 * halo - 1)
 
 
 # --------------------------------------------------------------------------- #
@@ -102,6 +108,15 @@ def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
         assert halo == 0, "halo layout requires the ELL representation"
         vmin, amin = ops.dense_backup(mdp.p, cost, gamma,
                                       v_global, impl=impl)
+    return _finish_argmin(vmin, amin, mdp, axes, neg)
+
+
+def _finish_argmin(vmin: jax.Array, amin: jax.Array, mdp: MDP, axes: Axes,
+                   neg: bool) -> tuple[jax.Array, jax.Array]:
+    """Complete a per-shard (min, argmin) into the global ``(Tv, pi)``:
+    lift local action ids to global ids, reduce over the action axis with a
+    deterministic smallest-global-id tie-break, and undo the maxreward
+    negation."""
     a_glob = amin + mdp.m_local * axes.action_index()
     if axes.action is None:
         return (-vmin if neg else vmin), a_glob
@@ -111,6 +126,105 @@ def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
     cand = jnp.where(vmin == tv, a_glob, jnp.int32(mdp.m_global))
     pi = axes.pmin_action(cand)
     return (-tv if neg else tv), pi
+
+
+def gather_backup(mdp: MDP, v_local: jax.Array, axes: Axes, *,
+                  plan: tuple[int, int] | None = None,
+                  impl: str | None = None, halo: int = 0,
+                  gamma_t: jax.Array | None = None,
+                  mode: str = "mincost") -> tuple[jax.Array, jax.Array,
+                                                  jax.Array]:
+    """Gather the value window and run one Bellman backup; returns
+    ``(tv, pi, window)``.
+
+    ``plan=(f_lo, f_hi)`` (from :func:`repro.core.partition.overlap_margins`)
+    switches to the communication-overlapped path
+    (:func:`backup_overlapped`); ``plan=None`` is the synchronous
+    gather-then-backup reference.  Both produce identical results — the
+    overlapped path only re-routes which buffer each row reads from.
+    """
+    if plan is not None:
+        return backup_overlapped(mdp, v_local, axes, plan=plan, impl=impl,
+                                 halo=halo, gamma_t=gamma_t, mode=mode)
+    w = gather_v(v_local, axes, halo=halo)
+    tv, pi = backup(mdp, w, axes, impl=impl, halo=halo, gamma_t=gamma_t,
+                    mode=mode)
+    return tv, pi, w
+
+
+def backup_overlapped(mdp: MDP, v_local: jax.Array, axes: Axes, *,
+                      plan: tuple[int, int], impl: str | None = None,
+                      halo: int = 0, gamma_t: jax.Array | None = None,
+                      mode: str = "mincost") -> tuple[jax.Array, jax.Array,
+                                                      jax.Array]:
+    """Communication-overlapped Bellman backup; returns ``(tv, pi, window)``.
+
+    Launches the value-window collective (:meth:`Axes.gather_start`), backs
+    up the *interior* rows ``[f_lo, n_local - f_hi)`` — whose nonzero-weight
+    successors are all locally owned — directly against ``v_local`` while
+    the window is in flight, then finishes the frontier rows against the
+    arrived window.  With async collectives enabled the scheduler moves the
+    interior compute between the collective's start/done pair.
+
+    The per-row kernels are row-independent and the interior rows read the
+    same values through ``v_local`` as they would through the gathered
+    window, so the result is identical to the synchronous
+    ``backup(gather_v(v), ...)`` path (zero-weight ELL fill entries may
+    index outside the owned range; they are clamped and contribute exactly
+    0 on both paths).
+    """
+    if mdp.batch is not None:
+        view, in_ax, g_t = batch_parts(mdp)
+        g_t = gamma_t if gamma_t is not None else g_t
+        fn = lambda m, vl, gt: backup_overlapped(
+            m, vl, axes, plan=plan, impl=impl, halo=halo, gamma_t=gt,
+            mode=mode)
+        return jax.vmap(fn, in_axes=(in_ax, 0, None if g_t is None else 0))(
+            view, v_local, g_t)
+    if not isinstance(mdp, EllMDP):
+        raise ValueError("comm overlap requires the ELL representation; "
+                         "DenseMDP rows always reference global columns")
+    f_lo, f_hi = plan
+    n_loc = mdp.n_local
+    window = axes.gather_start(v_local, halo=halo)
+
+    gamma = mdp.gamma if gamma_t is None else gamma_t
+    neg = mode == "maxreward"
+    cost = -mdp.cost if neg else mdp.cost
+    v_own = -v_local if neg else v_local
+    row_start = axes.state_index() * n_loc
+    sl = lambda a, lo, hi: jax.lax.slice_in_dim(a, lo, hi, axis=0)
+
+    parts = []
+    # interior rows: no data dependence on the in-flight window
+    if f_lo + f_hi < n_loc:
+        idx_c = jnp.clip(sl(mdp.idx, f_lo, n_loc - f_hi) - row_start,
+                         0, n_loc - 1)
+        parts.append((f_lo, ops.ell_backup(
+            idx_c, sl(mdp.val, f_lo, n_loc - f_hi),
+            sl(cost, f_lo, n_loc - f_hi), gamma, v_own, impl=impl)))
+
+    # frontier rows: wait for the window, then finish the edges.  Slice the
+    # raw idx BEFORE shifting into window coordinates — shifting the full
+    # tensor would materialize O(n_local * m * nnz) ints per backup for a
+    # few frontier rows' worth of use.
+    win = axes.gather_finish(window)
+    v_win = -win if neg else win
+    shift = lambda lo, hi: _shift_idx(sl(mdp.idx, lo, hi), mdp, axes, halo)
+    if f_lo:
+        parts.insert(0, (0, ops.ell_backup(
+            shift(0, f_lo), sl(mdp.val, 0, f_lo), sl(cost, 0, f_lo),
+            gamma, v_win, impl=impl)))
+    if f_hi:
+        parts.append((n_loc - f_hi, ops.ell_backup(
+            shift(n_loc - f_hi, n_loc), sl(mdp.val, n_loc - f_hi, n_loc),
+            sl(cost, n_loc - f_hi, n_loc), gamma, v_win, impl=impl)))
+
+    parts.sort(key=lambda p: p[0])
+    vmin = jnp.concatenate([p[1][0] for p in parts])
+    amin = jnp.concatenate([p[1][1] for p in parts])
+    tv, pi = _finish_argmin(vmin, amin, mdp, axes, neg)
+    return tv, pi, win
 
 
 def residual_norm(mdp: MDP, v_local: jax.Array, v_global: jax.Array,
@@ -187,7 +301,9 @@ def _rows_idx_eff(rows: PolicyRows, mdp: MDP, axes: Axes, halo: int):
     if not halo or rows.idx is None:
         return None
     row_start = axes.state_index() * mdp.n_local
-    return rows.idx - row_start + halo
+    # clamp like _shift_idx: zero-weight fill may reference far columns
+    return jnp.clip(rows.idx - row_start + halo,
+                    0, mdp.n_local + 2 * halo - 1)
 
 
 def t_pi(rows: PolicyRows, x_local: jax.Array, axes: Axes, *,

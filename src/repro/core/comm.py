@@ -29,6 +29,8 @@ from typing import Optional, Sequence, Union
 import jax
 import jax.numpy as jnp
 
+from repro.utils import jax_compat
+
 AxisName = Union[str, Sequence[str], None]
 
 
@@ -77,6 +79,33 @@ class Axes:
         right = jax.lax.ppermute(x[:halo], self.state, bwd)
         return jnp.concatenate([left, x, right], axis=0)
 
+    # ---- split-phase window movement (communication/computation overlap) --------
+    def gather_start(self, x: jax.Array, *, halo: int = 0, dtype=None) -> jax.Array:
+        """Issue the value-window collective (all-gather, or halo ring when
+        ``halo > 0``) and return the in-flight window.
+
+        JAX has no explicit request object; the split-phase contract is
+        structural: the returned array is the *only* data dependence on the
+        collective, so any compute issued between :meth:`gather_start` and
+        :meth:`gather_finish` that does not touch it is free to overlap.
+        With async collectives enabled (``-xla_flag_bundle
+        cpu-overlap`` / ``tpu-collectives``) XLA splits the op into a
+        ``-start``/``-done`` pair and the latency-hiding scheduler moves the
+        independent compute between them.
+        """
+        if halo:
+            return self.halo_exchange(x, halo, dtype=dtype)
+        return self.allgather_state(x, dtype=dtype)
+
+    def gather_finish(self, window: jax.Array) -> jax.Array:
+        """Close the split-phase window started by :meth:`gather_start`.
+
+        A no-op data-wise (the dependence edge on ``window`` is the real
+        synchronization); kept as an explicit call so call sites read like
+        MPI_Isend/MPI_Wait and so a future backend can hang a barrier here.
+        """
+        return window
+
     def psum_state(self, x):
         if self.state is None:
             return x
@@ -96,10 +125,10 @@ class Axes:
         if self.state is None:
             return 1
         if isinstance(self.state, str):
-            return jax.lax.axis_size(self.state)
+            return jax_compat.axis_size(self.state)
         out = 1
         for name in self.state:
-            out *= jax.lax.axis_size(name)
+            out *= jax_compat.axis_size(name)
         return out
 
     # ---- fleet-axis collectives -------------------------------------------------

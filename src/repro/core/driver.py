@@ -132,6 +132,83 @@ def _validate_banded(mdp, halo: int, mesh, layout: str) -> None:
                 f"smaller halo")
 
 
+def _resolve_overlap(opts: IPIOptions, dev_mdp, mesh, axes: Axes) \
+        -> IPIOptions:
+    """Resolve ``-comm_overlap auto|on|off`` into a static interior/frontier
+    plan baked into ``opts`` (compiled programs key on ``opts`` as a jit
+    static, so a changed plan retraces — exactly right, the row split is a
+    compile-time constant).
+
+    ``on`` overlaps whenever a contiguous interior core exists (banded /
+    stencil instances); ``auto`` additionally requires the core to cover at
+    least half the local rows (hiding the gather behind a sliver of interior
+    compute would not pay for the split).  Dense-random instances have no
+    interior core and silently stay on the synchronous path.
+
+    When a plan exists and the user left ``-halo 0``, the planner also
+    *shrinks the collective*: :func:`partition.frontier_reach` measures how
+    far outside its own block any row's nonzero successors reach, and the
+    solve runs on the banded halo layout at exactly that width — the value
+    exchange drops from the full ``n_global`` all-gather to a ``2 * reach``
+    ring exchange (exact by construction, so no `_validate_banded` pass is
+    needed).  This is where the overlapped path wins on hardware without
+    async collective support; with async collectives the remaining ring
+    exchange additionally hides behind the interior compute.
+    """
+    plan, halo = None, opts.halo
+    if opts.comm_overlap != "off" and mesh is not None:
+        n_shards = partition._axis_size(mesh, axes.state)
+        plan = partition.overlap_margins(dev_mdp, n_shards)
+        if plan is not None and opts.comm_overlap == "auto":
+            n_local = dev_mdp.n_global // n_shards
+            if n_local - plan[0] - plan[1] < n_local // 2:
+                plan = None
+        if plan is not None and opts.halo == 0:
+            reach = partition.frontier_reach(dev_mdp, n_shards)
+            n_local = dev_mdp.n_global // n_shards
+            # ring exchange reaches one neighbour: reach must fit a shard
+            # (use half — beyond that the window approaches the gather)
+            if reach is not None and reach <= n_local // 2:
+                halo = max(int(reach), 1)
+    if plan == opts.overlap_plan and halo == opts.halo:
+        return opts
+    return dataclasses.replace(opts, overlap_plan=plan, halo=halo)
+
+
+def _drain_monitor(mid: int, state: SolveState, done_prev, k_prev) -> None:
+    """``monitor_mode="chunk"``: reconstruct this run-chunk's per-iteration
+    records host-side from the device traces — record-for-record (``k`` /
+    ``res`` / ``inner``) what ``"stream"`` would have emitted, without one
+    ``jax.debug.callback`` host sync per outer iteration (``elapsed`` is the
+    drain time).  ``done_prev`` / ``k_prev`` are the pre-chunk done mask and
+    iteration counts (``done_prev=None`` for a single-instance solve)."""
+    k = np.asarray(jax.device_get(state.k))
+    tr = np.asarray(jax.device_get(state.trace_res))
+    ti = np.asarray(jax.device_get(state.trace_inner))
+    if k.ndim == 0:
+        for kk in range(int(k_prev) + 1, int(k) + 1):
+            methods.emit_host(mid, kk, float(tr[kk]),
+                              max(int(ti[kk - 1]), 0))
+        return
+    act_prev = ~np.asarray(done_prev)
+    if not act_prev.any():
+        return
+    res_f = np.asarray(jax.device_get(state.res))
+    # lockstep invariant: all active lanes share one outer index, so the
+    # stream's per-iteration k_col sequence is exactly this range
+    k_lo = int(np.asarray(k_prev)[act_prev].max())
+    k_hi = int(k[act_prev].max())
+    for kk in range(k_lo + 1, k_hi + 1):
+        col = tr[:, kk]
+        # frozen lanes: the stream reports their (frozen) current residual —
+        # pre-chunk-done lanes override their historical trace value, lanes
+        # frozen mid-chunk have an unwritten (NaN) column
+        col = np.where(~act_prev | np.isnan(col), res_f, col)
+        inn = ti[:, kk - 1]
+        inn = np.where(~act_prev | (inn < 0), 0, inn).astype(np.int32)
+        methods.emit_host(mid, kk, col, inn)
+
+
 _RUN_CHUNK_CACHE: dict = {}
 
 
@@ -178,11 +255,15 @@ def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch,
     lead = () if batch is None else (axes.fleet,)
     scal = P() if batch is None else P(axes.fleet)
     mdp_specs = partition.mdp_pspecs(dev_mdp, axes)
+    # win: the halo window is per-shard (overlapping windows concatenate
+    # along the state axis); the all-gathered window is replicated
+    win_spec = P(*lead, axes.state) if opts.halo else P(*lead)
     state_specs = SolveState(
         v=P(*lead, axes.state), tv=P(*lead, axes.state),
         pi=P(*lead, axes.state),
         res=scal, k=scal, inner_total=scal, trace_res=scal,
-        trace_inner=scal, res0=scal, span=scal, done=scal, n_true=scal)
+        trace_inner=scal, res0=scal, span=scal, done=scal, n_true=scal,
+        win=win_spec)
     # Reuse one jit wrapper per (mesh, opts, axes, specs) so repeated solves
     # of same-shaped problems — a serving fleet, bench reps, the chunked
     # restart loop — hit jax's compilation cache instead of re-tracing a
@@ -241,7 +322,11 @@ def _trim_ckpt_state(state: SolveState, n_orig: int,
         k=lead(host.k), inner_total=lead(host.inner_total),
         trace_res=lead(host.trace_res), trace_inner=lead(host.trace_inner),
         res0=lead(host.res0), span=lead(host.span), done=lead(host.done),
-        n_true=lead(host.n_true))
+        n_true=lead(host.n_true),
+        # the exchanged window is mesh-dependent derived state (invariant
+        # win == gather(v)); checkpoint it empty — restore zero-fills, i.e.
+        # the k=0 iterate, a valid stale async restart window
+        win=lead(host.win)[..., :0])
 
 
 def _pad_restored(tree, like):
@@ -333,6 +418,7 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
         if v0 is not None:
             v0 = jnp.pad(jnp.asarray(v0),
                          (0, dev_mdp.n_global - n_orig))
+    opts = _resolve_overlap(opts, dev_mdp, mesh, axes)
     run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes, None,
                                     n_true=n_orig)
 
@@ -357,6 +443,8 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
                 break
             k_hi = jnp.int32(min(k + chunk, opts.max_outer))
             state = run_chunk(dev_mdp, state, k_hi, jnp.int32(mid))
+            if mid and opts.monitor_mode == "chunk":
+                _drain_monitor(mid, state, None, k)
             if checkpoint_dir:
                 ckpt.save(checkpoint_dir, int(jax.device_get(state.k)),
                           _trim_ckpt_state(state, n_orig, None),
@@ -469,6 +557,7 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
     # per-instance unpadded state counts, 0 for padded dummy fleet lanes
     nt_vec = np.asarray(
         list(n_origs) + [0] * (dev_mdp.batch - len(n_origs)), np.int32)
+    opts = _resolve_overlap(opts, dev_mdp, mesh, axes)
     run_chunk, init = _make_runners(dev_mdp, opts, mesh, axes,
                                     dev_mdp.batch, n_true=nt_vec)
 
@@ -501,6 +590,8 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
             k_hi = jnp.int32(min(int(k[~done].min()) + chunk,
                                  opts.max_outer))
             state = run_chunk(dev_mdp, state, k_hi, jnp.int32(mid))
+            if mid and opts.monitor_mode == "chunk":
+                _drain_monitor(mid, state, done, k)
             if checkpoint_dir:
                 trimmed = _trim_ckpt_state(state, n_true, b_orig)
                 ckpt.save(checkpoint_dir,

@@ -115,6 +115,21 @@ class IPIOptions:
                                 # entries instead of all-gathering v
     gather_dtype: str | None = None  # compressed (inexact) gather for INNER
                                 # matvecs only; outer backups stay exact
+    comm_overlap: str = "auto"  # overlap the backup's value-window movement
+                                # with interior-row compute: "on" whenever an
+                                # interior core exists, "auto" only when it
+                                # covers >= half the local rows, "off" never
+    async_sweeps: int = 1       # async_vi: local Bellman sweeps per value
+                                # exchange (1 == synchronous vi)
+    monitor_mode: str = "stream"  # "stream": one jax.debug.callback per
+                                # outer iteration; "chunk": reconstruct the
+                                # identical records host-side from the
+                                # device traces once per run-chunk (no
+                                # per-iteration host sync)
+    overlap_plan: tuple | None = None  # resolved (f_lo, f_hi) frontier
+                                # margins (driver-set from
+                                # partition.overlap_margins; not a user
+                                # option — compiled programs key on it)
 
     def __post_init__(self):
         # Raised (not assert'd): option validation must survive `python -O`.
@@ -163,6 +178,23 @@ class IPIOptions:
         if not isinstance(self.halo, int) or self.halo < 0:
             raise ValueError(f"halo must be a non-negative int (0 disables "
                              f"the banded layout), got {self.halo!r}")
+        if self.comm_overlap not in ("auto", "on", "off"):
+            raise ValueError(f"comm_overlap must be 'auto', 'on' or 'off', "
+                             f"got {self.comm_overlap!r}")
+        if not isinstance(self.async_sweeps, int) or self.async_sweeps < 1:
+            raise ValueError(f"async_sweeps must be an int >= 1 (1 == "
+                             f"synchronous vi), got {self.async_sweeps!r}")
+        if self.monitor_mode not in ("stream", "chunk"):
+            raise ValueError(f"monitor_mode must be 'stream' or 'chunk', "
+                             f"got {self.monitor_mode!r}")
+        if self.overlap_plan is not None and (
+                not isinstance(self.overlap_plan, tuple)
+                or len(self.overlap_plan) != 2
+                or not all(isinstance(x, int) and x >= 0
+                           for x in self.overlap_plan)):
+            raise ValueError(f"overlap_plan is driver-internal: None or a "
+                             f"(f_lo, f_hi) tuple of ints >= 0, got "
+                             f"{self.overlap_plan!r}")
         if self.gather_dtype is not None:
             try:
                 gd = jnp.dtype(self.gather_dtype)
@@ -204,6 +236,12 @@ class SolveState:
     n_true: jax.Array       # scalar int32, unpadded state count: mesh-pad
                             # rows are absorbing zero-cost states whose 0
                             # residual must not enter the span min
+    win: jax.Array          # last exchanged value window (async methods:
+                            # invariant win == gather_v(v) at outer-step
+                            # boundaries); empty (0,) for synchronous
+                            # methods.  Checkpointed as empty and restored
+                            # as zeros — the k=0 iterate, a valid (stale)
+                            # async restart window.
 
 
 def _local_gamma_t(gamma_t: jax.Array | None, batch: int,
@@ -241,9 +279,10 @@ def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
     dt = jnp.dtype(opts.dtype)
     nt = jnp.int32(mdp.n_global if n_true is None else n_true)
     v = jnp.zeros((mdp.n_local,), dt) if v0 is None else v0.astype(dt)
-    v_g = bellman.gather_v(v, axes, halo=opts.halo)
-    tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl, halo=opts.halo,
-                            gamma_t=gamma_t, mode=opts.mode)
+    tv, pi, v_g = bellman.gather_backup(mdp, v, axes,
+                                        plan=opts.overlap_plan,
+                                        impl=opts.impl, halo=opts.halo,
+                                        gamma_t=gamma_t, mode=opts.mode)
     tv = tv.astype(dt)
     res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
     span = _span_of(tv - v, axes, opts, nt)
@@ -251,12 +290,15 @@ def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
     done = methods.stop_done(opts, res=res, span=span, res0=res,
                              k=jnp.int32(0), gamma=g)
     trace_res = jnp.full((opts.max_outer + 1,), jnp.nan, dt)
+    win = v_g.astype(dt) \
+        if methods.get_method(opts.method).outer is not None \
+        else jnp.zeros((0,), dt)
     return SolveState(
         v=v, tv=tv, pi=pi, res=res, k=jnp.int32(0),
         inner_total=jnp.int32(0),
         trace_res=trace_res.at[0].set(res),
         trace_inner=jnp.full((opts.max_outer,), -1, jnp.int32),
-        res0=res, span=span, done=done, n_true=nt)
+        res0=res, span=span, done=done, n_true=nt, win=win)
 
 
 def _span_of(d: jax.Array, axes: Axes, opts: IPIOptions,
@@ -286,14 +328,22 @@ def _span_of(d: jax.Array, axes: Axes, opts: IPIOptions,
 
 def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
                 axes: Axes, gamma_t: jax.Array | None):
-    """One outer iPI iteration minus the k/trace bookkeeping.
+    """One outer iteration minus the k/trace bookkeeping.
 
-    Returns ``(v1, tv1, pi1, res1, span1, inner_iters)`` — shared by the
-    unbatched :func:`outer_step` and the batched body of :func:`solve_chunk`
-    (which does its bookkeeping fleet-wide, outside the vmap).  The inner
-    policy-evaluation solve dispatches through the live KSP/method registry
+    Returns ``(v1, tv1, pi1, res1, span1, inner_iters, win1)`` — shared by
+    the unbatched :func:`outer_step` and the batched body of
+    :func:`solve_chunk` (which does its bookkeeping fleet-wide, outside the
+    vmap).  Methods with a custom ``outer`` (e.g. ``async_vi``) replace the
+    inner-solve/backup core entirely; everyone else dispatches the inner
+    policy-evaluation solve through the live KSP/method registry
     (:func:`repro.core.methods.inner_solve`).
     """
+    spec = methods.get_method(opts.method)
+    if spec.outer is not None:
+        v1, tv1, pi1, res1, inner_iters, win1 = spec.outer(
+            mdp, state, opts, axes, gamma_t)
+        span1 = _span_of(tv1 - v1, axes, opts, state.n_true)
+        return v1, tv1, pi1, res1, span1, inner_iters, win1
     rows = bellman.policy_rows(mdp, state.pi, axes)
     b = bellman.b_pi(rows, axes).astype(state.tv.dtype)
     gd = None if opts.gather_dtype is None else jnp.dtype(opts.gather_dtype)
@@ -306,15 +356,16 @@ def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
         opts, matvec, b, state.tv, tol, axes, context=dict(gamma=gamma))
 
     def eval_at(v):
-        v_g = bellman.gather_v(v, axes, halo=opts.halo)   # exact gather
-        tv, pi = bellman.backup(mdp, v_g, axes, impl=opts.impl,
-                                halo=opts.halo, gamma_t=gamma_t,
-                                mode=opts.mode)
+        # exact gather; opts.overlap_plan switches in the communication-
+        # overlapped (result-identical) backup path
+        tv, pi, _ = bellman.gather_backup(mdp, v, axes,
+                                          plan=opts.overlap_plan,
+                                          impl=opts.impl, halo=opts.halo,
+                                          gamma_t=gamma_t, mode=opts.mode)
         res = axes.pmax_state(jnp.max(jnp.abs(tv - v)))
         return v, tv, pi, res
 
     cand = eval_at(v1)
-    spec = methods.get_method(opts.method)
     if opts.safeguard and spec.safeguarded and spec.ksp is not None:
         # Krylov-type steps are not contractions; reject any step that
         # increases the Bellman residual and take the (guaranteed) VI step
@@ -324,14 +375,14 @@ def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
                             lambda: cand, lambda: eval_at(state.tv))
     v1, tv1, pi1, res1 = cand
     span1 = _span_of(tv1 - v1, axes, opts, state.n_true)
-    return v1, tv1, pi1, res1, span1, inner_iters
+    return v1, tv1, pi1, res1, span1, inner_iters, state.win
 
 
 def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
                axes: Axes, *, gamma_t: jax.Array | None = None) -> SolveState:
     """One outer iPI iteration (greedy policy is already in ``state``)."""
-    v1, tv1, pi1, res1, span1, inner_iters = _outer_core(mdp, state, opts,
-                                                         axes, gamma_t)
+    v1, tv1, pi1, res1, span1, inner_iters, win1 = _outer_core(
+        mdp, state, opts, axes, gamma_t)
     k1 = state.k + 1
     g = gamma_t if gamma_t is not None else mdp.gamma
     done = methods.stop_done(opts, res=res1, span=span1, res0=state.res0,
@@ -341,7 +392,8 @@ def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
         inner_total=state.inner_total + inner_iters,
         trace_res=state.trace_res.at[k1].set(res1),
         trace_inner=state.trace_inner.at[state.k].set(inner_iters),
-        res0=state.res0, span=span1, done=done, n_true=state.n_true)
+        res0=state.res0, span=span1, done=done, n_true=state.n_true,
+        win=win1)
 
 
 def _lead_flag(axes: Axes) -> jax.Array:
@@ -375,7 +427,7 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
 
         def body(s: SolveState) -> SolveState:
             s1 = outer_step(mdp, s, opts, axes)
-            if opts.monitor:
+            if opts.monitor and opts.monitor_mode == "stream":
                 methods.emit_monitor(mon_id, _lead_flag(axes), s1.k, s1.res,
                                      s1.inner_total - s.inner_total)
             return s1
@@ -393,7 +445,7 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
 
     def body(s: SolveState) -> SolveState:
         act = active(s)
-        v1, tv1, pi1, res1, span1, inner = core(view, s, gamma_t)
+        v1, tv1, pi1, res1, span1, inner, win1 = core(view, s, gamma_t)
         sel = lambda n, o: jnp.where(act[:, None] if n.ndim > 1 else act,
                                      n, o)
         k1 = s.k + act.astype(jnp.int32)
@@ -415,8 +467,9 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
                 s.trace_inner, inner_col[:, None], (jnp.int32(0),
                                                     k_col - 1)),
             res0=s.res0, span=sel(span1, s.span),
-            done=jnp.where(act, done1, s.done), n_true=s.n_true)
-        if opts.monitor:
+            done=jnp.where(act, done1, s.done), n_true=s.n_true,
+            win=sel(win1, s.win))
+        if opts.monitor and opts.monitor_mode == "stream":
             # One fleet-wide record per outer iteration: gather the
             # per-instance rows over the fleet axis (every shard runs the
             # collective; only the lead shard's callback is kept).

@@ -52,7 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.comm import Axes
-from repro.core.solvers import anderson, bicgstab, chebyshev, gmres, richardson
+from repro.core.solvers import (anderson, async_vi_outer, bicgstab, chebyshev,
+                                gmres, richardson)
 
 __all__ = [
     "KSPSpec", "MethodSpec", "StopMetrics", "StopSpec",
@@ -91,7 +92,8 @@ class KSPSpec:
 
 @dataclasses.dataclass(frozen=True)
 class MethodSpec:
-    """One registered outer method: a KSP plus an inner-stopping policy."""
+    """One registered outer method: a KSP plus an inner-stopping policy —
+    or a whole custom outer iteration (``outer``)."""
 
     name: str
     ksp: str | None              # KSP registry name; None -> no inner solve
@@ -101,6 +103,12 @@ class MethodSpec:
     #                              steps are not contractions)
     doc: str = ""
     builtin: bool = False
+    outer: Callable | None = None  # full outer-iteration replacement:
+    #                              fn(mdp, state, opts, axes, gamma_t) ->
+    #                              (v1, tv1, pi1, res1, inner_iters, win1);
+    #                              span/stop bookkeeping stays shared.  Such
+    #                              methods get SolveState.win maintained
+    #                              (the last exchanged value window).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,21 +239,28 @@ def register_ksp(name: str, fn: Callable | None = None, *, doc: str = "",
 
 def register_method(name: str, *, ksp: str | None, inner: str = "forcing",
                     safeguarded: bool = True, doc: str = "",
+                    outer: Callable | None = None,
                     overwrite: bool = False, _builtin: bool = False) \
         -> MethodSpec:
     """Register an outer method: which KSP runs the policy-evaluation step
-    and under which inner-stopping policy (see :data:`INNER_POLICIES`)."""
+    and under which inner-stopping policy (see :data:`INNER_POLICIES`) —
+    or, with ``outer``, a full custom outer iteration (e.g. ``async_vi``)
+    that replaces the inner-solve/backup core entirely."""
     _check_free(_METHODS, "method", name, overwrite)
     if inner not in INNER_POLICIES:
         raise ValueError(f"inner policy must be one of {INNER_POLICIES}, "
                          f"got {inner!r}")
     if ksp is not None and ksp not in _KSPS:
         raise ValueError(check_ksp(ksp))
+    if outer is not None and ksp is not None:
+        raise ValueError(f"method {name!r}: a custom outer iteration "
+                         f"replaces the inner solve — pass ksp=None")
     if (ksp is None) != (inner == "none"):
         raise ValueError(f"method {name!r}: ksp=None requires inner='none' "
                          f"(and vice versa), got ksp={ksp!r} inner={inner!r}")
     spec = MethodSpec(name=name, ksp=ksp, inner=inner,
-                      safeguarded=safeguarded, doc=doc, builtin=_builtin)
+                      safeguarded=safeguarded, doc=doc, builtin=_builtin,
+                      outer=outer)
     _METHODS[name] = spec
     return spec
 
@@ -617,6 +632,11 @@ register_method("ipi_chebyshev", ksp="chebyshev", inner="forcing",
                 _builtin=True)
 register_method("ipi_anderson", ksp="anderson", inner="forcing",
                 safeguarded=True, doc="iPI + Anderson-accelerated VI",
+                _builtin=True)
+register_method("async_vi", ksp=None, inner="none", safeguarded=False,
+                outer=async_vi_outer,
+                doc="asynchronous VI: async_sweeps stale local sweeps per "
+                    "value exchange (span-certified)",
                 _builtin=True)
 
 

@@ -29,6 +29,7 @@ from __future__ import annotations
 import math
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -252,6 +253,87 @@ def already_placed(mdp: MDP, mesh, axes: Axes) -> bool:
             if sh != want:
                 return False
     return True
+
+
+def _eff_extents(mdp: EllMDP) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row ``(min, max)`` *nonzero-weight* ELL successor ids, reduced
+    over (action, slot) and any leading batch dims — the effective column
+    extents the communication planner reasons about.  Rows with no nonzero
+    successors report the empty extents ``(n, -1)``."""
+    n = mdp.n_global
+    nz = mdp.val != 0
+    eff_max = jnp.max(jnp.where(nz, mdp.idx, -1), axis=(-2, -1))
+    eff_min = jnp.min(jnp.where(nz, mdp.idx, n), axis=(-2, -1))
+    if eff_max.ndim > 1:
+        eff_max = jnp.max(eff_max.reshape(-1, n), axis=0)
+        eff_min = jnp.min(eff_min.reshape(-1, n), axis=0)
+    return eff_min, eff_max
+
+
+def frontier_reach(mdp: MDP, n_shards: int) -> int | None:
+    """Smallest halo ``h`` such that every row's nonzero-weight successors
+    fall inside the owning shard's ``[start - h, stop + h)`` window — i.e.
+    the exchange width that makes the banded halo layout exact for this
+    matrix at this shard count.  ``0`` means the partition is block-diagonal
+    (no cross-shard transitions at all); ``None`` when the reach is
+    undefined (dense representation, single shard, ragged partition).
+
+    Unlike the matrix bandwidth this is measured *relative to shard
+    boundaries*, so it is exactly the window the frontier rows of the
+    communication-overlapped backup need — the driver uses it to shrink
+    the full value all-gather (``n`` floats) to a ring exchange
+    (``2 * reach`` floats) when ``-comm_overlap`` finds an interior core
+    and the user left ``-halo 0``.
+    """
+    if not isinstance(mdp, EllMDP) or n_shards <= 1:
+        return None
+    n = mdp.n_global
+    if n % n_shards:
+        return None
+    n_local = n // n_shards
+    eff_min, eff_max = _eff_extents(mdp)
+    start = jnp.arange(n, dtype=jnp.int32) // n_local * n_local
+    lo = jnp.max(start - eff_min)
+    hi = jnp.max(eff_max - (start + n_local) + 1)
+    return int(jnp.maximum(jnp.maximum(lo, hi), 0))
+
+
+def overlap_margins(mdp: MDP, n_shards: int) -> tuple[int, int] | None:
+    """Frontier margins ``(f_lo, f_hi)`` for the communication-overlapped
+    backup, or ``None`` when no contiguous interior core exists.
+
+    A row is *interior* when every nonzero-weight ELL successor falls inside
+    the owning shard's ``[start, stop)`` range — its backup can run against
+    ``v_local`` before the gather/halo window arrives.  The plan must be a
+    compile-time constant shared by every SPMD shard, so the margins are the
+    smallest ``(f_lo, f_hi)`` such that local rows ``[f_lo, n_local - f_hi)``
+    are interior on *every* shard (and every instance of a batched fleet).
+    Banded/stencil instances yield margins ~ the bandwidth; dense-random
+    instances have no interior core and return ``None``.
+
+    Runs as one device-side reduction pass over ``idx``/``val`` (no host
+    gather of the MDP); call after mesh padding, with ``n_shards`` the
+    state-axis size.
+    """
+    if not isinstance(mdp, EllMDP) or n_shards <= 1:
+        return None
+    n = mdp.n_global
+    if n % n_shards:
+        return None
+    n_local = n // n_shards
+    eff_min, eff_max = _eff_extents(mdp)
+    i_loc = jnp.arange(n, dtype=jnp.int32) % n_local
+    start = jnp.arange(n, dtype=jnp.int32) - i_loc
+    bad = ~((eff_min >= start) & (eff_max < start + n_local))
+    half = n_local // 2
+    lo_bad = jnp.max(jnp.where(bad & (i_loc < half), i_loc, -1))
+    hi_bad = jnp.min(jnp.where(bad & (i_loc >= half), i_loc,
+                               jnp.int32(n_local)))
+    f_lo = int(lo_bad) + 1
+    f_hi = n_local - int(hi_bad)
+    if f_lo + f_hi >= n_local:
+        return None
+    return f_lo, f_hi
 
 
 def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d", *,

@@ -17,7 +17,8 @@ from repro.core.solvers.gmres import gmres
 from repro.core.solvers.bicgstab import bicgstab
 from repro.core.solvers.chebyshev import chebyshev
 from repro.core.solvers.anderson import anderson
+from repro.core.solvers.async_vi import async_vi_outer
 from repro.core.solvers.direct import dense_policy_value
 
-__all__ = ["anderson", "bicgstab", "chebyshev", "dense_policy_value",
-           "gmres", "richardson"]
+__all__ = ["anderson", "async_vi_outer", "bicgstab", "chebyshev",
+           "dense_policy_value", "gmres", "richardson"]

@@ -1,0 +1,64 @@
+"""Asynchronous value iteration — shards run ahead between value exchanges.
+
+The bulk-synchronous methods pay one global value-vector movement (all-gather
+or halo exchange) per Bellman backup.  Asynchronous VI (Bertsekas & Tsitsiklis
+style) relaxes that: each shard runs ``opts.async_sweeps`` local Bellman
+sweeps against a *stale* window — the last exchanged value vector, with only
+its own block kept fresh — and exchanges values once per outer iteration.
+Per outer iteration the communication volume is that of plain VI while the
+value-improvement work is ``async_sweeps`` backups.
+
+Convergence stays certified: the residual/span handed to the stop criterion
+is always computed from the *synchronous* backup at the exchange point
+(fresh window everywhere), so the span-seminorm gap certificate
+``gamma * sp(Tv - v) / (2 (1 - gamma))`` holds exactly as for synchronous
+VI — the stale sweeps only change which iterate the certificate is evaluated
+at, never the certificate itself.  Stale sweeps use genuine earlier iterates
+(the classic total-asynchronism convergence condition), so the intermediate
+values are legitimate async-VI iterates.
+
+The stale window lives in ``SolveState.win`` with the invariant
+``win == gather_v(v)`` at every outer-iteration boundary, so checkpoints and
+monitors work unchanged (a restored checkpoint re-enters with a zero window,
+i.e. the k=0 iterate — a valid, if maximally stale, async start).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bellman
+
+
+def async_vi_outer(mdp, state, opts, axes, gamma_t):
+    """One async-VI outer iteration.
+
+    The :data:`repro.core.methods.MethodSpec.outer` contract: called by
+    :func:`repro.core.ipi._outer_core` in place of the inner-solve/backup
+    core, returns ``(v1, tv1, pi1, res1, inner_iters, win1)`` (span and stop
+    bookkeeping stay in the shared outer-step code).  ``state.tv`` is
+    already one synchronous backup ahead, so ``async_sweeps - 1`` stale
+    sweeps + the certifying synchronous backup give ``async_sweeps`` Bellman
+    updates per value exchange; ``async_sweeps=1`` is exactly ``vi``.
+    """
+    dt = state.v.dtype
+    halo = opts.halo
+    # own block's offset in the window: [start-halo, stop+halo) layout puts
+    # it at `halo`; the full gathered vector at this shard's row start
+    off = jnp.int32(halo) if halo else axes.state_index() * mdp.n_local
+
+    def sweep(_, v_loc):
+        w = jax.lax.dynamic_update_slice(state.win, v_loc, (off,))
+        tv, _ = bellman.backup(mdp, w, axes, impl=opts.impl, halo=halo,
+                               gamma_t=gamma_t, mode=opts.mode)
+        return tv.astype(dt)
+
+    v1 = jax.lax.fori_loop(0, opts.async_sweeps - 1, sweep, state.tv)
+    tv1, pi1, win1 = bellman.gather_backup(
+        mdp, v1, axes, plan=opts.overlap_plan, impl=opts.impl, halo=halo,
+        gamma_t=gamma_t, mode=opts.mode)
+    tv1 = tv1.astype(dt)
+    res1 = axes.pmax_state(jnp.max(jnp.abs(tv1 - v1)))
+    return v1, tv1, pi1, res1, jnp.int32(opts.async_sweeps - 1), \
+        win1.astype(dt)

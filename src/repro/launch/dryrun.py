@@ -174,7 +174,8 @@ def run_mdp_cell(name: str, mesh) -> dict:
     state_specs = ipi.SolveState(
         v=P(axes.state), tv=P(axes.state), pi=P(axes.state),
         res=P(), k=P(), inner_total=P(), trace_res=P(), trace_inner=P(),
-        res0=P(), span=P(), done=P(), n_true=P())
+        res0=P(), span=P(), done=P(), n_true=P(),
+        win=P(axes.state) if halo else P())
     sspec_tree = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
     nl = n // n_shards
     state_sds = ipi.SolveState(
@@ -193,7 +194,9 @@ def run_mdp_cell(name: str, mesh) -> dict:
         span=jax.ShapeDtypeStruct((), jnp.float32, sharding=sspec_tree.span),
         done=jax.ShapeDtypeStruct((), jnp.bool_, sharding=sspec_tree.done),
         n_true=jax.ShapeDtypeStruct((), jnp.int32,
-                                    sharding=sspec_tree.n_true))
+                                    sharding=sspec_tree.n_true),
+        # sync methods carry an empty stale window (async_vi state only)
+        win=jax.ShapeDtypeStruct((0,), jnp.float32, sharding=sspec_tree.win))
     from repro.utils.jax_compat import shard_map as _shard_map
     fn = jax.jit(
         _shard_map(
@@ -213,6 +216,13 @@ def run_mdp_cell(name: str, mesh) -> dict:
     rec["layout"] = layout
     rec["method"] = method
     rec["nmk"] = (n, m, k)
+    # per-device value-window bytes received per backup: the banded layout
+    # moves only the +-halo boundary entries, not the full vector — report
+    # the actual window so EXPERIMENTS.md rooflines do not charge halo cells
+    # for an all-gather they never issue
+    itemsize = jnp.dtype(jnp.float32).itemsize
+    rec["window_bytes"] = (2 * halo * itemsize if halo
+                           else (n - nl) * itemsize)
     return rec
 
 

@@ -10,6 +10,19 @@ from __future__ import annotations
 import jax
 
 
+def axis_size(name: str) -> int:
+    """Size of a named mesh axis, callable inside ``shard_map``.
+
+    ``jax.lax.axis_size`` only exists from jax 0.5; on 0.4.x a
+    ``psum(1, name)`` over the axis constant-folds to a concrete Python
+    ``int`` during tracing, which is all the callers need (static
+    ppermute pair lists, window extents).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
 def shard_map(fn, mesh, in_specs, out_specs):
     """``jax.shard_map`` with fallback to the pre-0.5 experimental API.
 

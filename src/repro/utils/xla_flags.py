@@ -32,6 +32,18 @@ BUNDLES: dict[str, dict[str, str]] = {
     "cpu-host": {
         "xla_cpu_enable_fast_min_max": "false",
     },
+    # Communication-overlapped backups on CPU (-comm_overlap): the
+    # concurrency-optimized thunk scheduler lets XLA:CPU run the value-window
+    # collective concurrently with the interior-row backup that does not
+    # depend on it.  On TPU the same overlap needs the async-collective
+    # family instead — use "tpu-collectives" there (the
+    # xla_enable_async_all_gather / xla_enable_async_collective_permute
+    # flags only exist in TPU-capable XLA builds and are fatal on CPU-only
+    # ones, so they must not appear here).
+    "cpu-overlap": {
+        "xla_cpu_enable_concurrency_optimized_scheduler": "true",
+        "xla_cpu_enable_fast_min_max": "false",
+    },
     # TPU pods: overlap collective latency with compute — matters for the
     # state-axis all-gather before every backup and psum_state reductions.
     "tpu-collectives": {

@@ -1,0 +1,280 @@
+"""Communication-overlapped backups + asynchronous VI (ISSUE 7).
+
+Two invariant families:
+
+* **overlap parity** — ``-comm_overlap on`` splits every backup into an
+  interior part (computed while the value window is in flight) and a
+  frontier part (finished against the arrived window); the split must be
+  *bitwise* invisible: identical values, policies and residual traces to
+  ``-comm_overlap off`` for every method and layout, including halo
+  layouts and non-divisible state counts (where the plan degrades to the
+  synchronous path rather than mis-splitting).
+* **async_vi certification** — ``-method async_vi`` runs ``-async_sweeps``
+  stale local sweeps per value exchange; it must converge in fewer value
+  exchanges than synchronous vi, return the same policy, and its
+  midpoint-corrected value must actually lie within the reported span gap
+  certificate of the true optimum.
+
+The distributed cases run the real shard_map path on 8 forced host devices
+in a subprocess (device count must be set before jax initializes).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import IPIOptions, generators, partition
+
+# --------------------------------------------------------------------------- #
+# Interior/frontier split classification (host-side, no mesh needed)          #
+# --------------------------------------------------------------------------- #
+
+
+def test_margins_stencil_chain():
+    """chain_walk successors are {s-1, s, s+1}: exactly one frontier row at
+    each shard edge."""
+    mdp = generators.chain_walk(64, gamma=0.9)
+    assert partition.overlap_margins(mdp, 8) == (1, 1)
+
+
+def test_margins_respect_nonzero_weights_only():
+    """Zero-weight ELL fill entries must not create frontier rows — only
+    columns that actually contribute count."""
+    mdp = generators.chain_walk(64, gamma=0.9)
+    # point every padding-like slot at a remote column with weight 0
+    val = np.asarray(mdp.val).copy()
+    idx = np.asarray(mdp.idx).copy()
+    idx[:, :, -1] = 0            # all rows "reference" state 0 ...
+    val[:, :, -1] = 0.0          # ... with zero weight
+    import dataclasses
+    poked = dataclasses.replace(mdp, idx=idx, val=val)
+    assert partition.overlap_margins(poked, 8) == (1, 1)
+
+
+def test_frontier_reach_stencil_chain():
+    """chain_walk rows reference {s-1, s, s+1}: frontier rows reach exactly
+    one column past the shard boundary, so the planner can run the solve on
+    a width-1 halo ring exchange instead of the full all-gather."""
+    mdp = generators.chain_walk(64, gamma=0.9)
+    assert partition.frontier_reach(mdp, 8) == 1
+
+
+def test_frontier_reach_matches_maze_bandwidth():
+    """maze2d's 5-point stencil couples rows +-width: the reach equals the
+    grid width (up/down neighbours cross shard boundaries by one grid row)."""
+    mdp = generators.maze2d(32, gamma=0.9)
+    assert partition.frontier_reach(mdp, 8) == 32
+
+
+def test_frontier_reach_ignores_zero_weight_fill():
+    import dataclasses
+    mdp = generators.chain_walk(64, gamma=0.9)
+    val = np.asarray(mdp.val).copy()
+    idx = np.asarray(mdp.idx).copy()
+    fill = val == 0
+    idx[fill] = 63          # remote column, but weight 0: must not count
+    mdp = dataclasses.replace(mdp, idx=idx, val=val)
+    assert partition.frontier_reach(mdp, 8) == 1
+
+
+def test_frontier_reach_undefined_cases():
+    mdp = generators.chain_walk(64, gamma=0.9)
+    assert partition.frontier_reach(mdp, 1) is None      # single shard
+    mdp63 = generators.chain_walk(63, gamma=0.9)
+    assert partition.frontier_reach(mdp63, 8) is None    # ragged partition
+
+
+def test_margins_dense_coupling_disables_plan():
+    """garnet rows draw random global columns: no interior — no plan."""
+    mdp = generators.garnet(n=64, m=3, k=4, gamma=0.9, seed=0)
+    assert partition.overlap_margins(mdp, 8) is None
+
+
+def test_margins_non_divisible_n_disables_plan():
+    mdp = generators.chain_walk(63, gamma=0.9)
+    assert partition.overlap_margins(mdp, 8) is None
+
+
+def test_margins_single_shard_disables_plan():
+    mdp = generators.chain_walk(64, gamma=0.9)
+    assert partition.overlap_margins(mdp, 1) is None
+
+
+def test_margins_classification_is_sound():
+    """Every row outside the reported margins must have all of its
+    nonzero-weight successors inside its own shard block."""
+    mdp = generators.maze2d(32, gamma=0.95)          # n = 1024, bandwidth 32
+    n_shards = 8
+    f_lo, f_hi = partition.overlap_margins(mdp, n_shards)
+    n = mdp.n_global
+    n_local = n // n_shards
+    idx = np.asarray(mdp.idx)
+    nz = np.asarray(mdp.val) != 0
+    for s in range(n):
+        i_loc = s % n_local
+        if f_lo <= i_loc < n_local - f_hi:           # classified interior
+            start = s - i_loc
+            cols = idx[s][nz[s]]
+            assert cols.min() >= start
+            assert cols.max() < start + n_local, (s, f_lo, f_hi)
+
+
+def test_comm_overlap_option_validated():
+    with pytest.raises(ValueError, match="comm_overlap"):
+        IPIOptions(comm_overlap="sometimes")
+    with pytest.raises(ValueError, match="async_sweeps"):
+        IPIOptions(async_sweeps=0)
+
+
+# --------------------------------------------------------------------------- #
+# 8-fake-device parity (subprocess: real shard_map + collectives)             #
+# --------------------------------------------------------------------------- #
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, json
+from repro.core import generators, IPIOptions
+from repro.core.driver import solve, solve_many
+from repro.launch.mesh import make_fleet_mesh, mesh_kwargs
+
+out = {}
+
+
+def pair(tag, mdp, method, mesh, layout, **kw):
+    rs = {}
+    for ov in ("off", "on"):
+        opts = IPIOptions(method=method, dtype="float64",
+                          comm_overlap=ov, **kw)
+        rs[ov] = solve(mdp, opts, mesh=mesh, layout=layout)
+    a, b = rs["off"], rs["on"]
+    out[tag] = dict(
+        dv_bits=int((np.asarray(a.v).view(np.uint64)
+                     != np.asarray(b.v).view(np.uint64)).sum()),
+        dpi=int((a.policy != b.policy).sum()),
+        trace_eq=bool(np.array_equal(a.trace_residual, b.trace_residual,
+                                     equal_nan=True)),
+        outer=int(a.outer_iterations), outer_on=int(b.outer_iterations))
+
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), **mesh_kwargs(2))
+mesh1d = jax.make_mesh((8,), ("data",), **mesh_kwargs(1))
+chain = generators.chain_walk(512, gamma=0.99)
+maze = generators.maze2d(24, gamma=0.99)
+
+# stencil workload, every method, 1d + 2d layouts — parity along the whole
+# (unconverged) trajectory, which is stricter than at the fixed point
+for method in ("vi", "mpi", "ipi_gmres"):
+    pair(f"{method}/1d", chain, method, mesh1d, "1d",
+         atol=1e-12, max_outer=40)
+    pair(f"{method}/2d", chain, method, mesh, "2d",
+         atol=1e-12, max_outer=40)
+
+# halo layout: window is the +-halo exchange, margins come from the band
+pair("vi/halo", maze, "vi", mesh1d, "1d", atol=1e-12, max_outer=40, halo=24)
+
+# non-divisible n: plan must degrade to the synchronous path, not mis-split
+pair("vi/raggedn", generators.chain_walk(509, gamma=0.99), "vi", mesh1d,
+     "1d", atol=1e-12, max_outer=40)
+
+# fleet layout (solve_many): margins on the batched shard
+fleet_mdps = [generators.chain_walk(256, gamma=g) for g in (0.95, 0.97)]
+frs = {}
+for ov in ("off", "on"):
+    frs[ov] = solve_many(
+        fleet_mdps, IPIOptions(method="vi", dtype="float64", atol=1e-12,
+                               max_outer=40, comm_overlap=ov),
+        mesh=make_fleet_mesh(4), layout="fleet")
+out["vi/fleet"] = dict(
+    dv_bits=int(sum((np.asarray(a.v).view(np.uint64)
+                     != np.asarray(b.v).view(np.uint64)).sum()
+                    for a, b in zip(frs["off"], frs["on"]))),
+    dpi=int(sum((a.policy != b.policy).sum()
+                for a, b in zip(frs["off"], frs["on"]))),
+    trace_eq=all(np.array_equal(a.trace_residual, b.trace_residual,
+                                equal_nan=True)
+                 for a, b in zip(frs["off"], frs["on"])),
+    outer=int(frs["off"][0].outer_iterations),
+    outer_on=int(frs["on"][0].outer_iterations))
+
+# ---- async_vi: fewer exchanges, same policy, certificate actually holds ----
+ref = solve(chain, IPIOptions(method="vi", atol=1e-10, dtype="float64",
+                              max_outer=20000), mesh=mesh1d, layout="1d")
+sync = solve(chain, IPIOptions(method="vi", atol=1e-6,
+                               stop_criterion="span", dtype="float64",
+                               max_outer=20000), mesh=mesh1d, layout="1d")
+asy = solve(chain, IPIOptions(method="async_vi", async_sweeps=8, atol=1e-6,
+                              stop_criterion="span", dtype="float64",
+                              max_outer=20000), mesh=mesh1d, layout="1d")
+out["async"] = dict(
+    converged=bool(asy.converged and sync.converged),
+    outer_sync=int(sync.outer_iterations), outer_async=int(asy.outer_iterations),
+    dpi=int((asy.policy != sync.policy).sum()),
+    gap=float(asy.gap_bound),
+    err=float(np.abs(np.asarray(asy.v) - np.asarray(ref.v)).max()))
+
+# async_sweeps=1 IS synchronous vi (bit-for-bit, including the trace)
+a1 = solve(chain, IPIOptions(method="async_vi", async_sweeps=1, atol=1e-6,
+                             stop_criterion="span", dtype="float64",
+                             max_outer=20000), mesh=mesh1d, layout="1d")
+out["async1"] = dict(
+    dv_bits=int((np.asarray(a1.v).view(np.uint64)
+                 != np.asarray(sync.v).view(np.uint64)).sum()),
+    outer_eq=bool(a1.outer_iterations == sync.outer_iterations),
+    trace_eq=bool(np.array_equal(a1.trace_residual, sync.trace_residual,
+                                 equal_nan=True)))
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+_PAIR_KEYS = ["vi/1d", "vi/2d", "mpi/1d", "mpi/2d", "ipi_gmres/1d",
+              "ipi_gmres/2d", "vi/halo", "vi/raggedn", "vi/fleet"]
+
+
+@pytest.mark.parametrize("key", _PAIR_KEYS)
+def test_overlap_is_bitwise_invisible(results, key):
+    r = results[key]
+    assert r["dv_bits"] == 0, r
+    assert r["dpi"] == 0, r
+    assert r["trace_eq"], r
+    assert r["outer"] == r["outer_on"], r
+
+
+def test_async_vi_fewer_exchanges_same_policy(results):
+    r = results["async"]
+    assert r["converged"]
+    assert r["outer_async"] < r["outer_sync"], r
+    assert r["dpi"] == 0, r
+
+
+def test_async_vi_certificate_holds(results):
+    """The midpoint-corrected value must really be within gap_bound of the
+    optimum — the certificate is a guarantee, not a heuristic."""
+    r = results["async"]
+    assert r["gap"] > 0
+    assert r["err"] <= r["gap"] * 1.01 + 1e-9, r
+
+
+def test_async_sweeps_one_is_vi(results):
+    r = results["async1"]
+    assert r["dv_bits"] == 0 and r["outer_eq"] and r["trace_eq"], r
