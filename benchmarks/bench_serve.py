@@ -1,0 +1,163 @@
+"""Serving throughput/latency: the batched server vs sequential solves
+(ISSUE 8 tentpole claim: >= 2x per-request throughput on a warm ragged
+workload, B >= 16 over two shape buckets, with bitwise-equal results).
+
+Two measurements:
+
+* ``warm_ragged`` — 48 requests, state counts 64/96 (two shape buckets
+  under the pad-waste rule), all programs warm, submitted in one burst.
+  Baseline: a sequential loop of ``Session.solve`` calls.  Server: the
+  scheduler coalesces the burst into a handful of compiled dispatches
+  (one per shape bucket per take).  Per-request results must be
+  **bitwise-equal** to the sequential baseline (vi is elementwise —
+  lanes cannot perturb each other).
+* ``poisson`` — the same workload arriving on a seeded Poisson clock;
+  p50/p95 request latency and throughput, batched server vs a
+  no-batching server (``-serve_max_batch 1``, sequential dispatch
+  discipline).  The warm-up wave replays the identical arrival schedule
+  so the timed wave runs warm slots.
+
+Run directly:  PYTHONPATH=src:. python -m benchmarks.bench_serve
+or via:        PYTHONPATH=src:. python -m benchmarks.run --only serve
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+import numpy as np
+
+from repro.api import MDP, Session
+from repro.serve import Server
+from repro.serve.stats import percentile
+
+B = 48
+NS = [64, 96]                      # two shape buckets (pad waste > 25%)
+OPTS = {"-method": "vi", "-atol": 1e-8, "-dtype": "float64",
+        "-verbose": False, "-serve_max_batch": 64}
+
+
+def _fleet(seed0: int) -> list[MDP]:
+    rng = random.Random(seed0)
+    ns = [NS[i % 2] for i in range(B)]
+    rng.shuffle(ns)
+    return [MDP.from_generator("garnet", n=n, m=4, k=4, gamma=0.95,
+                               seed=seed0 + i) for i, n in enumerate(ns)]
+
+
+def _burst(server: Server, mdps):
+    """Submit everything in one burst (fixed order, so the scheduler's
+    take/bucket partition — and therefore the compiled slot shapes — is
+    reproducible across waves), then wait for all results."""
+    t0 = time.perf_counter()
+    reqs = [server.submit(m) for m in mdps]
+    results = [r.result(timeout=600) for r in reqs]
+    return results, time.perf_counter() - t0
+
+
+def _prewarm_slots(server: Server, cap: int = 32) -> None:
+    """Compile every mid2 slot the timed waves can touch: for each shape
+    bucket, one burst per slot size.  Arrival-timing jitter changes how a
+    Poisson wave groups into takes — without this sweep a timed wave can
+    hit a slot the seeded warm replay never compiled, and one cold compile
+    swamps the latency quantiles."""
+    slots = [1, 2, 3, 4, 6, 8, 12, 16, 24, 32]
+    for n in NS:
+        for s in (x for x in slots if x <= cap):
+            reqs = [server.submit(MDP.from_generator(
+                "garnet", n=n, m=4, k=4, gamma=0.95, seed=j))
+                for j in range(s)]
+            for r in reqs:
+                r.result(timeout=600)
+
+
+def _poisson_wave(server: Server, mdps, rate: float, seed: int):
+    """Concurrent client threads on a seeded Poisson arrival clock."""
+    rng = random.Random(seed)
+    lats = [None] * len(mdps)
+
+    def client(i):
+        t0 = time.perf_counter()
+        server.submit(mdps[i]).result(timeout=600)
+        lats[i] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    threads = []
+    for i in range(len(mdps)):
+        t = threading.Thread(target=client, args=(i,))
+        threads.append(t)
+        t.start()
+        if i + 1 < len(mdps):
+            time.sleep(rng.expovariate(rate))
+    for t in threads:
+        t.join()
+    return lats, time.perf_counter() - t0
+
+
+def run(rows) -> None:
+    mdps = _fleet(0)
+
+    # -- warm ragged: sequential Session.solve baseline --------------------- #
+    with Session(OPTS) as sess:
+        for m in mdps:
+            sess.solve(m)                  # compile both shapes
+        t0 = time.perf_counter()
+        base = [sess.solve(m) for m in mdps]
+        seq_wall = time.perf_counter() - t0
+    rows.append((f"serve/warm_ragged_seq_B{B}", seq_wall * 1e6, "baseline"))
+    print(f"  warm ragged B={B}: sequential {seq_wall*1e3:.0f} ms "
+          f"({seq_wall / B * 1e3:.2f} ms/req)", flush=True)
+
+    # -- warm ragged: batched server ---------------------------------------- #
+    with Server({**OPTS, "-serve_batch_window": 0.005}) as srv:
+        _burst(srv, mdps)                                 # warm programs
+        warm_dispatches = srv.stats()["dispatches"]
+        results, srv_wall = _burst(srv, mdps)
+        st = srv.stats()
+    bitwise = all(
+        np.array_equal(np.asarray(a.v), np.asarray(b.v)) and
+        np.array_equal(np.asarray(a.policy), np.asarray(b.policy))
+        for a, b in zip(results, base))
+    pc = st["program_cache"]
+    speedup = seq_wall / srv_wall
+    dispatches = st["dispatches"] - warm_dispatches       # timed wave only
+    rows.append((f"serve/warm_ragged_server_B{B}", srv_wall * 1e6,
+                 f"speedup={speedup:.2f}x bitwise={bitwise} "
+                 f"dispatches={dispatches} "
+                 f"cache_hit_rate={pc['hit_rate']:.2f}"))
+    print(f"  warm ragged B={B}: server {srv_wall*1e3:.0f} ms "
+          f"-> {speedup:.2f}x  bitwise={bitwise} "
+          f"dispatches={dispatches} "
+          f"cache_hit_rate={pc['hit_rate']:.2f}", flush=True)
+
+    # -- Poisson arrivals: batched vs no-batching dispatch ------------------ #
+    rate = 400.0
+    legs = [("batched", {"-serve_batch_window": 0.01}),
+            ("nobatch", {"-serve_max_batch": 1,
+                         "-serve_batch_window": 0.0})]
+    for tag, extra in legs:
+        with Server({**OPTS, **extra}) as srv:
+            # warm every pow2 slot, then replay the identical seeded
+            # arrival schedule once before timing it
+            _prewarm_slots(srv, cap=1 if tag == "nobatch" else 32)
+            _poisson_wave(srv, mdps, rate, seed=4)
+            d0 = srv.stats()["dispatches"]
+            lats, wall = _poisson_wave(srv, mdps, rate, seed=4)
+            st = srv.stats()
+        p50, p95 = percentile(lats, 50), percentile(lats, 95)
+        thr = B / wall
+        rows.append((f"serve/poisson{int(rate)}_{tag}_B{B}", p50 * 1e6,
+                     f"p95_ms={p95*1e3:.1f} throughput={thr:.0f}req/s "
+                     f"dispatches={st['dispatches'] - d0}"))
+        print(f"  poisson rate={rate:.0f}/s {tag}: p50 {p50*1e3:.1f} ms  "
+              f"p95 {p95*1e3:.1f} ms  {thr:.0f} req/s", flush=True)
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -18,6 +18,8 @@ Tables:
                   e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
   api           — session-layer dispatch overhead (<5% warm) +
                   from_functions million-state construction
+  serve         — batched serving vs sequential solves (>= 2x claim) +
+                  Poisson-arrival latency quantiles
   lm_substrate  — per-arch smoke train-step timing
 (roofline terms live in benchmarks/roofline.py -> results/roofline.json)
 """
@@ -31,7 +33,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: solvers,conditioning,kernels,scaling,"
-                         "batch,fleet,api,lm_substrate")
+                         "batch,fleet,api,serve,lm_substrate")
     ap.add_argument("--json-out", default=None,
                     help="path for the machine-readable results "
                          "(default: benchmarks/results/BENCH_batch.json)")
@@ -39,7 +41,7 @@ def main() -> None:
 
     from benchmarks import (bench_api, bench_batch, bench_conditioning,
                             bench_fleet, bench_kernels, bench_lm_substrate,
-                            bench_scaling, bench_solvers)
+                            bench_scaling, bench_serve, bench_solvers)
     suites = {
         "solvers": bench_solvers.run,
         "conditioning": bench_conditioning.run,
@@ -48,6 +50,7 @@ def main() -> None:
         "batch": bench_batch.run,
         "fleet": bench_fleet.run,
         "api": bench_api.run,
+        "serve": bench_serve.run,
         "lm_substrate": bench_lm_substrate.run,
     }
     pick = args.only.split(",") if args.only else list(suites)

@@ -1,10 +1,81 @@
 """Serve a reduced-config architecture: batched prefill + greedy decode.
 
+This is the LM prefill/decode scaffold that used to live at
+``repro.launch.serve`` (that entry point now serves MDP solves — see
+``python -m repro.launch.serve --help``).
+
     PYTHONPATH=src python examples/serve_lm.py [arch]
 """
-import sys
-from repro.launch.serve import main
+from __future__ import annotations
 
-arch = sys.argv[1] if len(sys.argv) > 1 else "zamba2-1.2b"
-raise SystemExit(main(["--arch", arch, "--smoke", "--batch", "4",
-                       "--prompt-len", "32", "--gen", "12"]))
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import build_model
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, t, g = args.batch, args.prompt_len, args.gen
+
+    key = jax.random.PRNGKey(7)
+    prompts = jax.random.randint(key, (b, t), 0, cfg.vocab_size, jnp.int32)
+    extra = None
+    if cfg.family == "vlm":
+        extra = jax.random.normal(key, (b, cfg.n_patches, cfg.d_model),
+                                  jnp.float32)
+    if cfg.family == "encdec":
+        extra = jax.random.normal(key, (b, cfg.encoder_len, cfg.d_model),
+                                  jnp.float32)
+
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, extra)
+
+    # grow the attention caches to prompt+gen slots
+    def pad_kv(path, x):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if names and names[-1] in ("k", "v"):
+            return jnp.pad(x, ((0, 0), (0, 0), (0, g), (0, 0), (0, 0)))
+        return x
+    cache = jax.tree_util.tree_map_with_path(pad_kv, cache)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    t1 = time.time()
+
+    out = [tok]
+    for _ in range(g - 1):
+        tok, _, cache = decode(params, tok, cache)
+        out.append(tok)
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    t2 = time.time()
+    print(f"[serve_lm] arch={cfg.name} prefill={t1-t0:.3f}s "
+          f"decode={(t2-t1)/max(g-1,1)*1e3:.1f}ms/tok")
+    for i in range(min(b, 2)):
+        print(f"[serve_lm] sample {i}: {gen[i][:12].tolist()}")
+    assert np.isfinite(gen).all()
+    return 0
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "zamba2-1.2b"
+    raise SystemExit(main(["--arch", arch, "--smoke", "--batch", "4",
+                           "--prompt-len", "32", "--gen", "12"]))

@@ -290,6 +290,37 @@ _SPECS = [
     OptionSpec("-checkpoint_dir", str, None,
                "persist solver state between chunks", nullable=True),
     OptionSpec("-verbose", bool, False, "per-chunk progress lines"),
+    # ---- serving (repro.serve.Server) --------------------------------------
+    OptionSpec("-serve_batch_window", float, 0.02,
+               "serving: seconds the scheduler waits after the oldest "
+               "queued request to coalesce compatible arrivals into one "
+               "batched dispatch (0 = dispatch whatever is queued "
+               "immediately)",
+               validate=_non_negative("serve_batch_window")),
+    OptionSpec("-serve_max_queue", int, 256,
+               "serving: admission-control queue depth; submits beyond it "
+               "are rejected with AdmissionError('queue_full')",
+               validate=_positive("serve_max_queue")),
+    OptionSpec("-serve_max_states", int, None,
+               "serving: per-request state-count limit; larger MDPs are "
+               "rejected with AdmissionError('too_large') (default: "
+               "unlimited)", nullable=True,
+               validate=_positive("serve_max_states")),
+    OptionSpec("-serve_max_batch", int, 32,
+               "serving: max requests per dispatched bucket (also caps the "
+               "padded fleet-slot size)",
+               validate=_positive("serve_max_batch")),
+    OptionSpec("-serve_program_cache", int, 16,
+               "serving: LRU capacity of the warm compiled-program cache "
+               "keyed by shape bucket (hit/miss/eviction counters in "
+               "Server.stats())",
+               validate=_positive("serve_program_cache")),
+    OptionSpec("-serve_slot_policy", str, "mid2",
+               "serving: fleet-slot sizing — mid2 pads each bucket's "
+               "request count up on the pow2-with-midpoints grid "
+               "(1,2,3,4,6,8,12,16,24,...; waste <= 1/3 of the slot), "
+               "pow2 on the classic power-of-two grid, exact dispatches "
+               "the raw count", choices=("mid2", "pow2", "exact")),
     # ---- output ------------------------------------------------------------
     OptionSpec("-file_stats", str, None,
                "write run statistics here after each solve",

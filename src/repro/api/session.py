@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
 import weakref
 from typing import Any, Mapping, Sequence
@@ -45,8 +46,13 @@ from repro.core import driver
 from repro.core.driver import SolveResult
 from repro.core.mdp import DenseMDP, EllMDP
 from repro.core.mdp import MDP as CoreMDP
+from repro.utils.lru import LRUCache
 
 __all__ = ["Session", "madupite_session"]
+
+# capacity of the per-session device-fleet container cache: entries hold
+# whole fleets of device shards, so the bound stays small
+_FLEET_CACHE_CAPACITY = 8
 
 
 class Session:
@@ -79,8 +85,14 @@ class Session:
         self._placed_mdps: weakref.WeakSet = weakref.WeakSet()
         # device-materialized fleet containers, keyed by (mesh, layout,
         # mode, pad_fleet, instance identities): warm repeated solve_fleet
-        # calls skip re-construction, mirroring MDP.place's per-MDP cache
-        self._fleet_cache: dict = {}
+        # calls skip re-construction, mirroring MDP.place's per-MDP cache.
+        # A proper LRU — hit/miss/eviction counters land in the run stats
+        # (and the serving program cache builds on the same mechanism).
+        self._fleet_cache = LRUCache(_FLEET_CACHE_CAPACITY)
+        # serializes stats recording + output-file writes: solves may run
+        # concurrently from scheduler/client threads (repro.serve), and
+        # interleaved -file_stats jsonl appends must stay line-atomic
+        self._io_lock = threading.RLock()
         _sync_x64(self.options)
         self._apply_kernel_options()
 
@@ -133,7 +145,18 @@ class Session:
     @property
     def stats(self) -> list[dict]:
         """Accumulated per-solve statistics (what ``-file_stats`` holds)."""
-        return list(self._stats)
+        with self._io_lock:
+            return list(self._stats)
+
+    @property
+    def cache_stats(self) -> dict:
+        """Counters of the session-owned caches: the device-fleet container
+        LRU (hits/misses/evictions) and the current compiled run-chunk
+        cache population."""
+        return {
+            "fleet": self._fleet_cache.stats(),
+            "run_chunk_programs": len(driver._RUN_CHUNK_CACHE),
+        }
 
     # ---- placement ---------------------------------------------------------
     def placement(self, opts: Options | None = None, *,
@@ -357,19 +380,16 @@ class Session:
             # weakly keyed on the builder identities: an entry whose fleet
             # the caller dropped can never be requested again, so purge it
             # (its device container would otherwise stay pinned till close)
-            self._fleet_cache = {
-                k: v for k, v in self._fleet_cache.items()
-                if all(r() is not None for r in k[4])}
+            for k in self._fleet_cache.keys():
+                if not all(r() is not None for r in k[4]):
+                    self._fleet_cache.pop(k)
             key = (mesh, layout, mode, pad,
                    tuple(weakref.ref(m) for m in bmdps))
             batched = self._fleet_cache.get(key)
             if batched is None:
-                if len(self._fleet_cache) > 8:   # bound: these hold whole
-                    self._fleet_cache.pop(       # fleets of device shards
-                        next(iter(self._fleet_cache)))
                 batched = place_function_fleet(bmdps, mesh, layout, mode,
                                                pad_fleet=pad)
-                self._fleet_cache[key] = batched
+                self._fleet_cache.put(key, batched)
             return batched
         return [m.build(mat) for m in bmdps]
 
@@ -405,6 +425,9 @@ class Session:
                 for m, r in zip(mdps, results)
             ],
         }
+        if fleet is not None:
+            fleet = dict(fleet, cache=self._fleet_cache.stats())
+            entry["fleet"] = fleet
         if monitor is not None:
             # monitoring on: the streamed records plus the dense
             # convergence-history arrays land in the run stats
@@ -413,21 +436,24 @@ class Session:
             for s, r in zip(entry["solves"], results):
                 s["trace_residual"] = [float(x) for x in r.trace_residual]
                 s["trace_inner"] = [int(x) for x in r.trace_inner]
-        self._stats.append(entry)
+        with self._io_lock:
+            self._stats.append(entry)
 
     def _write_outputs(self, results, opts: Options) -> None:
-        self._write_stats(opts)
-        for key, field in (("-file_policy", "policy"), ("-file_cost", "v")):
-            path = opts.get(key)
-            if not path:
-                continue
-            _ensure_dir(path)
-            arrays = [np.asarray(getattr(r, field)) for r in results]
-            if len(arrays) == 1:
-                np.save(path, arrays[0])
-            else:
-                np.savez(path, **{f"instance_{i}": a
-                                  for i, a in enumerate(arrays)})
+        with self._io_lock:
+            self._write_stats(opts)
+            for key, field in (("-file_policy", "policy"),
+                               ("-file_cost", "v")):
+                path = opts.get(key)
+                if not path:
+                    continue
+                _ensure_dir(path)
+                arrays = [np.asarray(getattr(r, field)) for r in results]
+                if len(arrays) == 1:
+                    np.save(path, arrays[0])
+                else:
+                    np.savez(path, **{f"instance_{i}": a
+                                      for i, a in enumerate(arrays)})
 
     def _write_stats(self, opts: Options) -> None:
         """Persist run statistics.  The default ``jsonl`` format appends
@@ -436,7 +462,13 @@ class Session:
         long-lived serving session O(solves^2) in stats I/O).  ``json``
         keeps the original single-array format (rewritten per solve).
         Toggling the format on one path mid-session forces a full rewrite
-        (appending JSONL lines after a JSON array would corrupt both)."""
+        (appending JSONL lines after a JSON array would corrupt both).
+
+        Callers hold ``self._io_lock`` (via :meth:`_write_outputs`):
+        concurrent solves from scheduler/client threads append entries and
+        advance the per-path ``(format, written)`` cursor under one lock,
+        so each entry lands in the file exactly once and every jsonl line
+        stays whole."""
         path = opts.get("-file_stats")
         if not path:
             return

@@ -232,6 +232,7 @@ def _clear_compiled() -> None:
     jit cache — must be dropped or the old code keeps running."""
     _RUN_CHUNK_CACHE.clear()
     ipi.solve_chunk.clear_cache()
+    ipi.init_state_jit.clear_cache()
 
 
 methods.on_overwrite_clear(_clear_compiled)
@@ -246,8 +247,8 @@ def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch,
     span stop criterion masks mesh-pad rows with it."""
     if mesh is None:
         run_chunk = partial(ipi.solve_chunk, opts=opts, axes=axes)
-        init = lambda v0: ipi.init_state(dev_mdp, axes, opts, v0,
-                                         n_true=n_true)
+        init = lambda v0: ipi.init_state_jit(dev_mdp, v0, None, n_true,
+                                             opts=opts, axes=axes)
         return run_chunk, init
     # Batched fleets: the leading instance dim (and the per-instance res / k
     # / trace vectors) shard over axes.fleet — which is None (replicated)
@@ -429,12 +430,14 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
         mid = methods.monitor_handle(monitor or methods.print_monitor)
     try:
         if mid:   # the k=0 (or resume-point) record, emitted host-side
-            methods.emit_host(mid, int(jax.device_get(state.k)),
-                              float(jax.device_get(state.res)), 0)
+            k0, res0 = jax.device_get((state.k, state.res))
+            methods.emit_host(mid, int(k0), float(res0), 0)
         while True:
-            k = int(jax.device_get(state.k))
-            res = float(jax.device_get(state.res))
-            done = bool(jax.device_get(state.done))
+            # one host round-trip for the whole control tuple: three
+            # separate device_gets triple the per-chunk sync latency,
+            # which dominates warm small-n solves
+            k, res, done = jax.device_get((state.k, state.res, state.done))
+            k, res, done = int(k), float(res), bool(done)
             if verbose:
                 print(f"[driver] k={k} residual={res:.3e}")
             # NaN residual (inner-solver breakdown): neither "active" on
@@ -571,14 +574,13 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
                                      trim=b_orig)
     try:
         if mid:
-            methods.emit_host(mid,
-                              np.asarray(jax.device_get(state.k)),
-                              np.asarray(jax.device_get(state.res)),
+            k0, res0 = jax.device_get((state.k, state.res))
+            methods.emit_host(mid, np.asarray(k0), np.asarray(res0),
                               np.zeros(dev_mdp.batch, np.int32))
         while True:
-            k = np.asarray(jax.device_get(state.k))
-            res = np.asarray(jax.device_get(state.res))
-            crit = np.asarray(jax.device_get(state.done))
+            # one host round-trip per chunk (see the solve() loop)
+            k, res, crit = (np.asarray(x) for x in jax.device_get(
+                (state.k, state.res, state.done)))
             # isnan: a broken-down lane is not device-active -> count it done
             done = crit | (k >= opts.max_outer) | np.isnan(res)
             if verbose:

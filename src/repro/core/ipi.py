@@ -301,6 +301,19 @@ def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
         res0=res, span=span, done=done, n_true=nt, win=win)
 
 
+@partial(jax.jit, static_argnames=("opts", "axes"))
+def init_state_jit(mdp: MDP, v0: jax.Array | None = None,
+                   gamma_t: jax.Array | None = None, n_true=None, *,
+                   opts: IPIOptions = None,
+                   axes: Axes = None) -> SolveState:
+    """Compiled :func:`init_state` for the single-device path: the vmapped
+    eager init re-traces its op graph on every call, which dominates warm
+    repeated solves (a serving fleet, bench reps).  The mesh path already
+    wraps its init in jit+shard_map, so jitting here keeps both paths'
+    numerics aligned."""
+    return init_state(mdp, axes, opts, v0, gamma_t=gamma_t, n_true=n_true)
+
+
 def _span_of(d: jax.Array, axes: Axes, opts: IPIOptions,
              n_true: jax.Array) -> jax.Array:
     """Span seminorm ``sp(d) = max(d) - min(d)`` over the TRUE states —

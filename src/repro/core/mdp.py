@@ -183,17 +183,6 @@ def gammas_of(mdp: MDP) -> tuple:
     return (mdp.gamma,) * (mdp.batch or 1)
 
 
-def _pad_states_ell(mdp: EllMDP, n_to: int) -> EllMDP:
-    """Pad an unbatched ELL instance to ``n_to`` global states with absorbing
-    zero-cost self-loops (value identically 0, unreachable from real states —
-    solution-preserving).  Delegates to :func:`partition.pad_mdp` with
-    ``n_mult=n_to`` (for ``n <= n_to`` that pads to exactly ``n_to``)."""
-    if mdp.n_global == n_to:
-        return mdp
-    from repro.core import partition  # deferred: partition imports this module
-    return partition.pad_mdp(mdp, n_mult=n_to, m_mult=1)
-
-
 def stack_mdps(mdps: Sequence[MDP]) -> MDP:
     """Stack per-instance MDPs into one batched fleet container.
 
@@ -230,12 +219,33 @@ def stack_mdps(mdps: Sequence[MDP]) -> MDP:
         raise ValueError("stack_mdps(EllMDP): nnz/row differ "
                          f"({[m.nnz_per_row for m in mdps]})")
     n_to = max(m.n_global for m in mdps)
-    mdps = [_pad_states_ell(m, n_to) for m in mdps]
-    idx0 = np.asarray(mdps[0].idx)
-    shared = all(np.array_equal(np.asarray(m.idx), idx0) for m in mdps[1:])
-    idx = mdps[0].idx if shared else jnp.stack([m.idx for m in mdps])
-    return EllMDP(idx=idx, val=jnp.stack([m.val for m in mdps]),
-                  cost=jnp.stack([m.cost for m in mdps]),
+    # one bulk device->host transfer for every lane, pad + stack in numpy,
+    # one upload per field: per-lane device_get/jnp.stack round-trips make
+    # host sync latency scale with B, which dominates warm serving dispatch
+    host = jax.device_get([(m.idx, m.val, m.cost) for m in mdps])
+    k, m_g = first.nnz_per_row, first.m_global
+    idxs, vals, costs = [], [], []
+    for m, (hi, hv, hc) in zip(mdps, host):
+        hi, hv, hc = np.asarray(hi), np.asarray(hv), np.asarray(hc)
+        if m.n_global < n_to:
+            # absorbing zero-cost self-loops, exactly pad_mdp's state
+            # padding (value identically 0, unreachable from real states)
+            n_pad = n_to - m.n_global
+            pad_idx = np.zeros((n_pad, m_g, k), hi.dtype)
+            pad_idx[..., 0] = np.arange(m.n_global, n_to,
+                                        dtype=hi.dtype)[:, None]
+            pad_val = np.zeros((n_pad, m_g, k), hv.dtype)
+            pad_val[..., 0] = 1.0
+            hi = np.concatenate([hi, pad_idx])
+            hv = np.concatenate([hv, pad_val])
+            hc = np.concatenate([hc, np.zeros((n_pad, m_g), hc.dtype)])
+        idxs.append(hi)
+        vals.append(hv)
+        costs.append(hc)
+    shared = all(np.array_equal(i, idxs[0]) for i in idxs[1:])
+    idx = jnp.asarray(idxs[0]) if shared else jnp.asarray(np.stack(idxs))
+    return EllMDP(idx=idx, val=jnp.asarray(np.stack(vals)),
+                  cost=jnp.asarray(np.stack(costs)),
                   gamma=gamma, n_global=n_to, m_global=first.m_global)
 
 

@@ -1,0 +1,42 @@
+"""Solve-as-a-service: a batched MDP serving subsystem over ``Session``.
+
+A :class:`Server` is a persistent in-process service accepting solve
+requests from many concurrent clients.  Requests pass admission control
+(queue depth, per-request state-count limits), coalesce in a background
+scheduler that dynamically batches compatible arrivals — same solver
+options, same container family, state counts grouped by the fleet
+pad-waste rule — inside a ``-serve_batch_window`` linger, and dispatch as
+one compiled ``solve_many`` program per shape bucket through the owning
+:class:`repro.api.Session`.  Per-request results and per-iteration
+``-monitor`` records are demultiplexed back to the submitting clients in
+input order; a warm compiled-program cache keyed by shape bucket reports
+hit/miss/eviction counters in ``Server.stats()``.
+
+    from repro.serve import Server
+    with Server({"-method": "vi", "-serve_batch_window": 0.02}) as srv:
+        req = srv.submit(mdp, monitor=True)
+        for rec in srv.stream(req):
+            print(rec)
+        result = req.result()
+
+The CLI entry point is ``python -m repro.launch.serve``.
+"""
+
+from repro.serve.cache import ProgramCache, program_key
+from repro.serve.queue import AdmissionError, Request, RequestQueue
+from repro.serve.scheduler import Scheduler, slot_size
+from repro.serve.server import Server
+from repro.serve.stats import Telemetry, percentile
+
+__all__ = [
+    "AdmissionError",
+    "ProgramCache",
+    "Request",
+    "RequestQueue",
+    "Scheduler",
+    "Server",
+    "Telemetry",
+    "percentile",
+    "program_key",
+    "slot_size",
+]

@@ -1,0 +1,60 @@
+"""The warm compiled-program cache, keyed by shape bucket.
+
+The scheduler dispatches every bucket as one compiled batched program
+whose identity is fully determined by its *shape slot*: the padded state
+count, the fleet-slot size (request count padded per
+``-serve_slot_policy``), and the solver-option signature.  JAX owns the
+compiled executables themselves (the driver's bounded run-chunk cache and
+the ``solve_chunk`` jit cache); this cache is the serving layer's
+accounting of **which slots are warm** — a dispatch whose slot is resident
+reuses a compiled program, a miss pays a compile.
+
+Built on the same LRU mechanism as the session's device-fleet container
+cache (:class:`repro.utils.lru.LRUCache`); hits / misses / evictions
+surface in ``Server.stats()["program_cache"]``.  An evicted slot is
+*cold* again from the server's perspective: its next dispatch is counted
+(and budgeted) as a compile.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.utils.lru import LRUCache
+
+__all__ = ["ProgramCache", "program_key"]
+
+
+def program_key(sig: tuple, n_pad: int, slot: int) -> tuple:
+    """The shape-bucket identity of one dispatch: compatibility signature
+    (options + mode + container family + m + nnz) x padded state count x
+    fleet-slot size."""
+    return (sig, int(n_pad), int(slot))
+
+
+class ProgramCache:
+    """Thread-safe LRU of warm program slots with per-slot dispatch counts."""
+
+    def __init__(self, capacity: int):
+        self._lru = LRUCache(capacity)
+        self._lock = threading.Lock()
+
+    def touch(self, key: tuple) -> bool:
+        """Record a dispatch against ``key``; True on a warm hit, False
+        when the slot was cold (compile expected)."""
+        with self._lock:
+            entry = self._lru.get(key)
+            if entry is None:
+                self._lru.put(key, {"dispatches": 1})
+                return False
+            entry["dispatches"] += 1
+            return True
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = self._lru.stats()
+            out["slots"] = [
+                {"n_pad": k[1], "fleet_slot": k[2],
+                 "dispatches": v["dispatches"]}
+                for k, v in self._lru.items()]
+            return out

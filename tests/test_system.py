@@ -86,6 +86,39 @@ def test_train_cli(tmp_path):
 
 def test_serve_cli():
     from repro.launch.serve import main
-    rc = main(["--arch", "olmoe-1b-7b", "--smoke", "--batch", "2",
-               "--prompt-len", "16", "--gen", "4"])
+    rc = main(["--requests", "6", "--instance", "garnet",
+               "--n-choices", "48,64", "--m", "4", "--k", "4",
+               "--rate", "200", "--window", "0.05",
+               "--option", "method=vi", "--option", "atol=1e-6"])
+    assert rc == 0
+
+
+def test_serve_cli_workload_file(tmp_path):
+    import json
+
+    from repro.launch.serve import main
+    wl = tmp_path / "wl.jsonl"
+    wl.write_text("\n".join(json.dumps(s) for s in [
+        {"instance": "garnet", "n": 48, "m": 4, "k": 4, "seed": 1,
+         "gamma": 0.9, "monitor": True},
+        {"instance": "garnet", "n": 48, "m": 4, "k": 4, "seed": 2,
+         "gamma": 0.9},
+        {"instance": "garnet", "n": 64, "m": 4, "k": 4, "seed": 3,
+         "gamma": 0.9, "overrides": {"-atol": 1e-6}},
+    ]) + "\n")
+    rc = main(["--workload", str(wl), "--rate", "0", "--window", "0.05",
+               "--option", "method=vi"])
+    assert rc == 0
+
+
+def test_serve_lm_example():
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parents[1] / "examples" \
+        / "serve_lm.py"
+    spec = importlib.util.spec_from_file_location("serve_lm_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    rc = mod.main(["--arch", "olmoe-1b-7b", "--smoke", "--batch", "2",
+                   "--prompt-len", "16", "--gen", "4"])
     assert rc == 0
