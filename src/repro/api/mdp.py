@@ -60,8 +60,9 @@ from repro.core import partition
 from repro.core.generators import FN_REGISTRY as FN_GENERATORS
 from repro.core.generators import REGISTRY as GENERATORS
 from repro.core.ipi import MODES
-from repro.core.mdp import DenseMDP, EllMDP
+from repro.core.mdp import DenseMDP, EllMDP, MatrixFreeMDP
 from repro.core.mdp import MDP as CoreMDP
+from repro.kernels import matrix_free
 
 __all__ = ["MDP", "place_function_fleet"]
 
@@ -74,7 +75,7 @@ _BIG = 1e30
 # (the common case) take the single-vmap fast path
 _DEVICE_CHUNK = 1 << 20
 
-MATERIALIZE_MODES = ("auto", "host", "device")
+MATERIALIZE_MODES = ("auto", "host", "device", "matrix_free")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +93,7 @@ class _FunctionSpec:
     gamma: float
     vectorized: bool
     device: bool | None = None
+    band: int | None = None     # declared |successor - row| bound, or None
 
 
 # --------------------------------------------------------------------------- #
@@ -102,72 +104,14 @@ def _device_rows_block(spec: _FunctionSpec, rows, acts: tuple, mode: str):
     """One traced ELL block: ``rows`` (traced global ids) x ``acts``
     (static global action ids, padding included).
 
-    Mirrors the host ``MDP._block`` semantics bit-for-bit: padded states
-    (``rows >= n``) are zero-cost absorbing self-loops; padded action
-    columns (``a >= m``) carry the never-greedy ``±BIG`` cost of the solve
-    ``mode`` and point at state 0.  Constructors see the raw row ids —
-    including shard-padding ids ``>= n``, whose outputs are masked — so
-    they must tolerate any int32 input (clip/where, not assert).
-
-    Returns ``(idx, val, cost, bad)`` where ``bad`` is a per-row ``(R, 2)``
-    count of validation failures over the *real* entries — successor ids
-    outside ``[0, n)`` and probability rows not summing to ~1 — folded into
-    the same compiled program so the host raise costs one scalar readback.
+    Delegates to the kernel-layer builder
+    :func:`repro.kernels.matrix_free.build_rows_block`: the SAME traced
+    code materializes device shards here and rebuilds transient row tiles
+    inside the matrix-free backup, which is what makes the materialized
+    and matrix-free paths bit-identical *by construction* — there is one
+    builder, not two implementations to keep in sync.
     """
-    import jax
-    import jax.numpy as jnp
-
-    big = _BIG if mode == "mincost" else -_BIG
-    K, R = spec.nnz, rows.shape[0]
-    pad_row = rows >= spec.n
-    bad_ids = jnp.zeros((R,), jnp.int32)
-    bad_sum = jnp.zeros((R,), jnp.int32)
-    self_idx = jnp.zeros((R, K), jnp.int32).at[:, 0].set(
-        rows.astype(jnp.int32))
-    self_val = jnp.zeros((R, K), jnp.float32).at[:, 0].set(1.0)
-
-    def conform(what, a, arr, shape, dtype):
-        arr = jnp.asarray(arr)
-        if arr.shape != shape:
-            raise ValueError(
-                f"device {what}(rows, a={a}) must return shape {shape} "
-                f"(nnz={K} slots per row — zero-pad unused slots), got "
-                f"{arr.shape}")
-        return arr.astype(dtype)
-
-    cols_i, cols_v, cols_c = [], [], []
-    for a in acts:
-        if a >= spec.m:
-            # never-greedy padded action: cost ±BIG, self-transition to 0
-            cols_i.append(jnp.zeros((R, K), jnp.int32))
-            cols_v.append(self_val)
-            cols_c.append(jnp.full((R,), big, jnp.float32))
-            continue
-        if spec.vectorized:
-            ids, probs = spec.p_fn(rows, int(a))
-            ids = conform("P_fn", a, ids, (R, K), jnp.int32)
-            probs = conform("P_fn", a, probs, (R, K), jnp.float32)
-            g = jnp.broadcast_to(
-                jnp.asarray(spec.g_fn(rows, int(a)), jnp.float32), (R,))
-        else:
-            def one(r, a=a):
-                i, p = spec.p_fn(r, int(a))
-                return (conform("P_fn", a, i, (K,), jnp.int32),
-                        conform("P_fn", a, p, (K,), jnp.float32),
-                        jnp.asarray(spec.g_fn(r, int(a)),
-                                    jnp.float32).reshape(()))
-            ids, probs, g = jax.vmap(one)(rows)
-        real = ~pad_row
-        bad_ids = bad_ids + jnp.where(
-            real, ((ids < 0) | (ids >= spec.n)).sum(-1, dtype=jnp.int32), 0)
-        bad_sum = bad_sum + jnp.where(
-            real & (jnp.abs(probs.astype(jnp.float32).sum(-1) - 1.0) > 1e-4),
-            1, 0)
-        cols_i.append(jnp.where(pad_row[:, None], self_idx, ids))
-        cols_v.append(jnp.where(pad_row[:, None], self_val, probs))
-        cols_c.append(jnp.where(pad_row, jnp.float32(0.0), g))
-    return (jnp.stack(cols_i, axis=1), jnp.stack(cols_v, axis=1),
-            jnp.stack(cols_c, axis=1), jnp.stack([bad_ids, bad_sum], axis=1))
+    return matrix_free.build_rows_block(spec, rows, acts, mode)
 
 
 def _map_row_chunks(fn, rows, pad_id):
@@ -192,8 +136,10 @@ def _map_row_chunks(fn, rows, pad_id):
 # Compiled block builders are shared *across* MDP objects: a fleet sweep
 # reusing one (P_fn, g_fn) pair with different gammas compiles exactly one
 # program per (shape, action-block, mode).  Bounded like the driver's
-# run-chunk cache; entries hold compiled code, not device arrays, so the
-# session-close eviction (device shards) does not need to touch this.
+# run-chunk cache.  Entries hold compiled code whose closures pin the
+# constructor callables (and anything *they* close over), so a full
+# ``MDP.evict()`` also drops this MDP's entries — long-lived serving
+# processes would otherwise accumulate dead constructors' programs.
 _BUILDER_CACHE: dict = {}
 
 
@@ -336,7 +282,8 @@ class MDP:
                        *, nnz: int, gamma: float = 0.99,
                        mode: str = "mincost",
                        vectorized: bool = False,
-                       device: bool | None = None) -> "MDP":
+                       device: bool | None = None,
+                       band: int | None = None) -> "MDP":
         """Define the MDP by callables; materialize lazily, shard-locally.
 
         ``P_fn(s, a) -> (ids, probs)`` gives state ``s``'s successors under
@@ -360,21 +307,32 @@ class MDP:
         * ``None`` (default) — decided at materialization time by the
           ``-mdp_materialize`` option and trace auto-detection.
 
+        ``band`` optionally declares the matrix bandwidth: every
+        nonzero-weight successor satisfies ``|successor - row| <= band``.
+        Matrix-free solves have no stored table to measure, so the banded
+        halo exchange and the overlapped interior/frontier split are only
+        available when the bandwidth is declared here (``None`` = rows
+        reach globally; still solvable, via the all-gather layout).
+
         Nothing is evaluated here.  At solve time the session materializes
         exactly the row block each device owns (padding included) directly
-        into that device's shard, so no host-side ``(n, m, nnz)`` tensor is
-        ever built.
+        into that device's shard — or, under ``-mdp_materialize
+        matrix_free``, never materializes at all and re-traces the
+        constructors inside every Bellman backup.
         """
         if n < 1 or m < 1 or nnz < 1:
             raise ValueError(f"from_functions needs n, m, nnz >= 1, got "
                              f"n={n} m={m} nnz={nnz}")
         if not 0.0 < gamma < 1.0:
             raise ValueError(f"gamma must lie in (0, 1), got {gamma}")
+        if band is not None and band < 0:
+            raise ValueError(f"band must be >= 0 (or None), got {band}")
         return cls(None, mode=mode,
                    spec=_FunctionSpec(P_fn, g_fn, int(n), int(m), int(nnz),
                                       float(gamma), bool(vectorized),
                                       None if device is None else
-                                      bool(device)))
+                                      bool(device),
+                                      None if band is None else int(band)))
 
     # ---- introspection -----------------------------------------------------
     @property
@@ -419,12 +377,15 @@ class MDP:
         return self._trace_ok
 
     def materialization(self, option: str = "auto") -> str:
-        """Resolve the pipeline for this MDP: ``"device"`` or ``"host"``.
+        """Resolve the pipeline for this MDP: ``"device"``, ``"host"`` or
+        ``"matrix_free"``.
 
         Precedence: the ``device=`` pin given to :meth:`from_functions`,
         then ``option`` (the ``-mdp_materialize`` database value), then
-        auto-detection.  Raises when device is *required* but the
-        constructors do not trace.
+        auto-detection.  Raises when device (or matrix-free, which needs
+        the same jit-ability) is *required* but the constructors do not
+        trace.  ``"auto"`` never selects matrix-free: recompute-over-store
+        is a deliberate memory/compute trade the user opts into.
         """
         if not self.deferred:
             raise ValueError("materialization() applies to function-backed "
@@ -433,6 +394,17 @@ class MDP:
             raise ValueError(f"unknown materialization {option!r}; pick one "
                              f"of {MATERIALIZE_MODES}")
         pinned = self._spec.device
+        if option == "matrix_free":
+            if pinned is False:
+                return "host"   # explicit host pin wins, like for "device"
+            ok, why = self._device_traceable()
+            if ok:
+                return "matrix_free"
+            raise ValueError(
+                f"matrix-free solving re-traces P_fn/g_fn inside every "
+                f"Bellman backup, but the constructors do not trace "
+                f"({why}); write them in jax.numpy over the traced state "
+                f"indices, or drop to -mdp_materialize auto/host")
         if pinned is False or (pinned is None and option == "host"):
             return "host"
         ok, why = self._device_traceable()
@@ -446,6 +418,13 @@ class MDP:
                 f"-mdp_materialize host")
         return "host"
 
+    def _row_spec(self) -> matrix_free.RowSpec:
+        """This MDP's static row-constructor spec for the matrix-free
+        operator (gamma-free: a sweep shares one spec, one program)."""
+        s = self._spec
+        return matrix_free.RowSpec(s.p_fn, s.g_fn, s.n, s.m, s.nnz,
+                                   s.vectorized, s.band)
+
     # ---- materialization ---------------------------------------------------
     def build(self, materialize: str = "auto") -> CoreMDP:
         """The core container, fully materialized (single-device / host
@@ -457,6 +436,18 @@ class MDP:
         if key not in self._device_cache:
             import jax.numpy as jnp
             s = self._spec
+            if key[1] == "matrix_free":
+                # the operator re-traces the constructors per sweep, where
+                # a bad P_fn cannot raise host-side — validate a sampled
+                # row block once, through the same checked builder the
+                # materialized pipeline uses
+                f = _device_builder(s, min(s.n, 4096),
+                                    tuple(range(s.m)), self.mode)
+                _checked_block(f, 0, s)
+                self._device_cache[key] = MatrixFreeMDP(
+                    tag=jnp.zeros((s.n,), jnp.int8), gamma=s.gamma,
+                    n_global=s.n, m_global=s.m, spec=self._row_spec())
+                return self._device_cache[key]
             if key[1] == "device":
                 f = _device_builder(s, s.n, tuple(range(s.m)), "mincost")
                 idx, val, cost = _checked_block(f, 0, s)
@@ -492,6 +483,11 @@ class MDP:
             return self._core
         if mesh is None:
             return self.build(materialize)
+        if self.materialization(materialize) == "matrix_free":
+            # nothing to pre-place: the operator container is O(n) metadata
+            # and the driver's partition layer places its tag per layout
+            # (so there is no mesh-keyed shard cache to manage either)
+            return self.build(materialize)
         key = (mesh, layout, mode or self.mode,
                self.materialization(materialize))
         if key not in self._device_cache:
@@ -499,11 +495,22 @@ class MDP:
                 mesh, layout, mode or self.mode, device=key[3] == "device")
         return self._device_cache[key]
 
-    def evict(self, mesh=None) -> int:
+    def evict(self, mesh=None, *, builders: bool = False) -> int:
         """Drop cached materializations — the shards placed on ``mesh``,
         or every cached container when ``mesh`` is None.  Returns the
         number of entries dropped.  The session layer calls this on close
-        so reused builders do not pin device memory for dead meshes."""
+        so reused builders do not pin device memory for dead meshes.
+
+        ``builders=True`` additionally drops this MDP's compiled block
+        builders from the shared program cache (their closures pin the
+        constructor callables and whatever those close over) — for
+        long-lived processes retiring a constructor pair for good.  The
+        default keeps them: re-materializing after a plain evict is meant
+        to hit the warm compiled builder."""
+        if builders and self._spec is not None:
+            skey = dataclasses.replace(self._spec, gamma=0.0)
+            for k in [k for k in _BUILDER_CACHE if k[0] == skey]:
+                del _BUILDER_CACHE[k]
         if mesh is None:
             n = len(self._device_cache)
             self._device_cache.clear()

@@ -284,9 +284,12 @@ _SPECS = [
                choices=("auto", "off")),
     OptionSpec("-mdp_materialize", str, "auto",
                "function-backed MDP materialization: device (jit the row "
-               "constructors, no host numpy), host (numpy callbacks), or "
-               "auto (device when the constructors trace)",
-               choices=("auto", "host", "device")),
+               "constructors, no host numpy), host (numpy callbacks), "
+               "matrix_free (never store the table — re-trace the "
+               "constructors inside every Bellman backup; O(n) per shard), "
+               "or auto (device when the constructors trace; never "
+               "matrix_free)",
+               choices=("auto", "host", "device", "matrix_free")),
     OptionSpec("-checkpoint_dir", str, None,
                "persist solver state between chunks", nullable=True),
     OptionSpec("-verbose", bool, False, "per-chunk progress lines"),
@@ -303,8 +306,10 @@ _SPECS = [
                validate=_positive("serve_max_queue")),
     OptionSpec("-serve_max_states", int, None,
                "serving: per-request state-count limit; larger MDPs are "
-               "rejected with AdmissionError('too_large') (default: "
-               "unlimited)", nullable=True,
+               "rejected with AdmissionError('too_large'). The limit names "
+               "a materialized-table byte budget, so matrix-free requests "
+               "(O(n) footprint) are admitted up to the same bytes — far "
+               "more states (default: unlimited)", nullable=True,
                validate=_positive("serve_max_states")),
     OptionSpec("-serve_max_batch", int, 32,
                "serving: max requests per dispatched bucket (also caps the "

@@ -44,7 +44,7 @@ from repro.core import methods as _methods
 from repro.core import partition
 from repro.core import driver
 from repro.core.driver import SolveResult
-from repro.core.mdp import DenseMDP, EllMDP
+from repro.core.mdp import DenseMDP, EllMDP, MatrixFreeMDP
 from repro.core.mdp import MDP as CoreMDP
 from repro.utils.lru import LRUCache
 
@@ -83,6 +83,11 @@ class Session:
         # mesh-keyed device shards are evicted on close (the builders may
         # outlive the session, but the meshes should not pin device memory)
         self._placed_mdps: weakref.WeakSet = weakref.WeakSet()
+        # builders this session solved matrix-free: their O(n) operator
+        # containers (and the compiled solve programs whose closures pin
+        # the row constructors) are released on close — MDP.evict's
+        # mesh-keyed cache only tracks materialized shards
+        self._mf_mdps: weakref.WeakSet = weakref.WeakSet()
         # device-materialized fleet containers, keyed by (mesh, layout,
         # mode, pad_fleet, instance identities): warm repeated solve_fleet
         # calls skip re-construction, mirroring MDP.place's per-MDP cache.
@@ -130,14 +135,26 @@ class Session:
         for this session's meshes stops reused builders from pinning
         device memory for meshes that no longer solve anything."""
         if not self._closed:
+            mf = list(self._mf_mdps)
             if self._clear_cache:
                 driver.clear_run_cache()
+                if mf:
+                    # matrix-free solves also compile through the
+                    # module-level single-device jit caches, whose closures
+                    # pin the RowSpec constructors (and whatever they close
+                    # over) — clear_run_cache alone leaves them resident
+                    driver._clear_compiled()
             meshes = set(self._mesh_cache.values())
             if self._mesh_override is not None:
                 meshes.add(self._mesh_override)
             for mdp in list(self._placed_mdps):
                 for mesh in meshes:
                     mdp.evict(mesh)
+            for mdp in mf:
+                # the O(n) operator container (placement tag + RowSpec);
+                # cheap to rebuild, wrong to keep pinned past the session
+                mdp._device_cache.pop(("built", "matrix_free"), None)
+            self._mf_mdps = weakref.WeakSet()
             self._fleet_cache.clear()
             self._mesh_cache.clear()
             self._closed = True
@@ -242,6 +259,8 @@ class Session:
                          materialize=opts.get("-mdp_materialize"))
         if mdp.deferred and mesh is not None:
             self._placed_mdps.add(mdp)
+        if mdp.deferred and isinstance(core, MatrixFreeMDP):
+            self._mf_mdps.add(mdp)
         t0 = time.time()
         r = driver.solve(core, ipi, mesh=mesh, layout=layout,
                          checkpoint_dir=opts.get("-checkpoint_dir"),
@@ -359,17 +378,20 @@ class Session:
     def _wrap(self, mdp: MDP | CoreMDP, opts: Options) -> MDP:
         if isinstance(mdp, MDP):
             return mdp
-        if isinstance(mdp, (EllMDP, DenseMDP)):
+        if isinstance(mdp, (EllMDP, DenseMDP, MatrixFreeMDP)):
             return MDP(mdp, mode=opts.get("-mode"))
         raise TypeError(f"solve wants a repro.api.MDP (or a core "
-                        f"EllMDP/DenseMDP), got {type(mdp).__name__}")
+                        f"EllMDP/DenseMDP/MatrixFreeMDP), got "
+                        f"{type(mdp).__name__}")
 
     def _fleet_cores(self, bmdps: list[MDP], mesh, layout: str, mode: str,
                      opts: Options):
         """What one bucket hands :func:`repro.core.driver.solve_many`:
         the device-materialized batched container for an all-deferred
-        bucket under a fleet-sharded layout, else per-instance host
-        builds."""
+        bucket under a fleet-sharded layout, else per-instance builds —
+        which under ``-mdp_materialize matrix_free`` are O(n) operator
+        containers the driver stacks and places itself (no fleet-cache
+        entry to manage: there are no device tables to pin)."""
         mat = opts.get("-mdp_materialize")
         if (mesh is not None and layout in partition.FLEET_LAYOUTS
                 and mat != "host"
@@ -391,7 +413,11 @@ class Session:
                                                pad_fleet=pad)
                 self._fleet_cache.put(key, batched)
             return batched
-        return [m.build(mat) for m in bmdps]
+        cores = [m.build(mat) for m in bmdps]
+        for m, c in zip(bmdps, cores):
+            if m.deferred and isinstance(c, MatrixFreeMDP):
+                self._mf_mdps.add(m)
+        return cores
 
     def _ipi(self, opts: Options, mdp_mode: str):
         """IPIOptions from the database; the MDP's mode wins unless the

@@ -30,8 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.comm import Axes
-from repro.core.mdp import DenseMDP, EllMDP, MDP, batch_parts
-from repro.kernels import ops
+from repro.core.mdp import (DenseMDP, EllMDP, MatrixFreeMDP, MDP,
+                            batch_parts)
+from repro.kernels import matrix_free, ops
 
 
 # --------------------------------------------------------------------------- #
@@ -97,6 +98,18 @@ def backup(mdp: MDP, v_global: jax.Array, axes: Axes, *,
             view, v_global, g_t)
     gamma = mdp.gamma if gamma_t is None else gamma_t
     neg = mode == "maxreward"
+    if isinstance(mdp, MatrixFreeMDP):
+        # rebuild row tiles from the constructors inside the backup; the
+        # negation happens inside mf_backup (there is no stored cost to
+        # flip), and the returned (vmin, amin) live in the same negated
+        # min-space as the materialized branch below
+        row0 = axes.state_index() * mdp.n_local
+        idx_map = (lambda i: _shift_idx(i, mdp, axes, halo)) if halo \
+            else None
+        vmin, amin = matrix_free.mf_backup(
+            mdp.spec, row0, mdp.n_local, mdp.acts, gamma, v_global,
+            mode=mode, idx_map=idx_map, impl=impl)
+        return _finish_argmin(vmin, amin, mdp, axes, neg)
     cost = -mdp.cost if neg else mdp.cost
     if neg:
         v_global = -v_global
@@ -181,6 +194,10 @@ def backup_overlapped(mdp: MDP, v_local: jax.Array, axes: Axes, *,
             mode=mode)
         return jax.vmap(fn, in_axes=(in_ax, 0, None if g_t is None else 0))(
             view, v_local, g_t)
+    if isinstance(mdp, MatrixFreeMDP):
+        return _mf_backup_overlapped(mdp, v_local, axes, plan=plan,
+                                     impl=impl, halo=halo, gamma_t=gamma_t,
+                                     mode=mode)
     if not isinstance(mdp, EllMDP):
         raise ValueError("comm overlap requires the ELL representation; "
                          "DenseMDP rows always reference global columns")
@@ -219,6 +236,53 @@ def backup_overlapped(mdp: MDP, v_local: jax.Array, axes: Axes, *,
         parts.append((n_loc - f_hi, ops.ell_backup(
             shift(n_loc - f_hi, n_loc), sl(mdp.val, n_loc - f_hi, n_loc),
             sl(cost, n_loc - f_hi, n_loc), gamma, v_win, impl=impl)))
+
+    parts.sort(key=lambda p: p[0])
+    vmin = jnp.concatenate([p[1][0] for p in parts])
+    amin = jnp.concatenate([p[1][1] for p in parts])
+    tv, pi = _finish_argmin(vmin, amin, mdp, axes, neg)
+    return tv, pi, win
+
+
+def _mf_backup_overlapped(mdp: "MatrixFreeMDP", v_local: jax.Array,
+                          axes: Axes, *, plan: tuple[int, int],
+                          impl: str | None, halo: int,
+                          gamma_t: jax.Array | None,
+                          mode: str) -> tuple[jax.Array, jax.Array,
+                                              jax.Array]:
+    """The interior/frontier split for the matrix-free operator: same
+    structure as the materialized path above, but each part *rebuilds* its
+    row range from the constructors instead of slicing stored tables.  The
+    per-row math is unchanged, so the split is bitwise invisible exactly
+    as for the materialized operator."""
+    f_lo, f_hi = plan
+    n_loc = mdp.n_local
+    window = axes.gather_start(v_local, halo=halo)
+
+    gamma = mdp.gamma if gamma_t is None else gamma_t
+    neg = mode == "maxreward"
+    row_start = axes.state_index() * n_loc
+    spec, acts = mdp.spec, mdp.acts
+    part = lambda lo, n_rows, idx_map, v: matrix_free.mf_backup(
+        spec, row_start + lo, n_rows, acts, gamma, v, mode=mode,
+        idx_map=idx_map, impl=impl)
+
+    parts = []
+    # interior rows: no data dependence on the in-flight window; their
+    # nonzero successors are locally owned, so global ids shift by the
+    # row offset (clamped: zero-weight fill contributes exactly 0)
+    if f_lo + f_hi < n_loc:
+        own_map = lambda i: jnp.clip(i - row_start, 0, n_loc - 1)
+        parts.append((f_lo, part(f_lo, n_loc - f_lo - f_hi, own_map,
+                                 v_local)))
+
+    # frontier rows: wait for the window, then finish the edges against it
+    win = axes.gather_finish(window)
+    win_map = (lambda i: _shift_idx(i, mdp, axes, halo)) if halo else None
+    if f_lo:
+        parts.insert(0, (0, part(0, f_lo, win_map, win)))
+    if f_hi:
+        parts.append((n_loc - f_hi, part(n_loc - f_hi, f_hi, win_map, win)))
 
     parts.sort(key=lambda p: p[0])
     vmin = jnp.concatenate([p[1][0] for p in parts])
@@ -268,6 +332,16 @@ def policy_rows(mdp: MDP, pi: jax.Array, axes: Axes) -> PolicyRows:
     a_rel = pi - mdp.m_local * axes.action_index()
     own = (a_rel >= 0) & (a_rel < mdp.m_local)
     a_sel = jnp.clip(a_rel, 0, mdp.m_local - 1)
+    if isinstance(mdp, MatrixFreeMDP):
+        # rebuild row tiles and select the greedy action's slots in-tile:
+        # the output is the same O(n_local * nnz) PolicyRows transient the
+        # materialized selection produces, so the inner solvers (and their
+        # halo/gather machinery) run on it completely unchanged
+        row0 = axes.state_index() * mdp.n_local
+        idx_pi, val_pi, g_pi = matrix_free.mf_policy_rows(
+            mdp.spec, row0, mdp.n_local, mdp.acts, a_sel, own)
+        return PolicyRows(idx=idx_pi, val=val_pi, p=None, g=g_pi,
+                          gamma=mdp.gamma)
     if isinstance(mdp, EllMDP):
         take = lambda x: jnp.take_along_axis(
             x, a_sel[:, None, None], axis=1)[:, 0]

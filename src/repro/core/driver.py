@@ -47,7 +47,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import ipi, methods, partition
 from repro.core.comm import Axes
 from repro.core.ipi import IPIOptions, SolveState
-from repro.core.mdp import DenseMDP, EllMDP, MDP, gammas_of, stack_mdps
+from repro.core.mdp import (DenseMDP, EllMDP, MatrixFreeMDP, MDP, gammas_of,
+                            stack_mdps)
 from repro.utils import checkpoint as ckpt
 from repro.utils.jax_compat import shard_map as _shard_map
 
@@ -109,12 +110,22 @@ def _validate_banded(mdp, halo: int, mesh, layout: str) -> None:
     """The halo layout is only exact when every transition stays within
     +-halo of its source row (matrix bandwidth <= halo) and the halo fits in
     one shard.  Raises ``ValueError`` (not assert: must survive -O)."""
-    if not isinstance(mdp, EllMDP):
+    if isinstance(mdp, MatrixFreeMDP):
+        # no arrays to measure: trust (and require) the declared bandwidth
+        if mdp.spec.band is None:
+            raise ValueError(
+                "halo>0 on a matrix-free operator needs a declared matrix "
+                "bandwidth — there is no stored table to measure; pass "
+                "band=... to from_functions() (max |successor - row| over "
+                "all nonzero transitions) or drop to halo=0")
+        band = int(mdp.spec.band)
+    elif not isinstance(mdp, EllMDP):
         raise ValueError("halo>0 requires the ELL representation; DenseMDP "
                          "columns are global — drop halo or convert the MDP")
-    idx = np.asarray(mdp.idx)
-    rows = np.arange(mdp.n_global).reshape(-1, 1, 1)
-    band = int(np.abs(idx - rows).max())
+    else:
+        idx = np.asarray(mdp.idx)
+        rows = np.arange(mdp.n_global).reshape(-1, 1, 1)
+        band = int(np.abs(idx - rows).max())
     if band > halo:
         raise ValueError(
             f"matrix bandwidth {band} exceeds halo {halo}: the banded "
@@ -510,7 +521,7 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
     checkpoint meta would record the mesh-padded shapes and refuse an
     elastic resume on a differently-padding mesh.
     """
-    if isinstance(mdps, (EllMDP, DenseMDP)):
+    if isinstance(mdps, (EllMDP, DenseMDP, MatrixFreeMDP)):
         if mdps.batch is None:
             raise ValueError("solve_many() wants a fleet; for a single "
                              "instance use solve()")

@@ -136,7 +136,7 @@ REGISTRY = {"garnet": garnet, "maze2d": maze2d, "sis": sis,
 # --------------------------------------------------------------------------- #
 #
 # Each ``*_functions`` builder returns the keyword dict
-# ``{"P_fn", "g_fn", "n", "m", "nnz", "gamma", "vectorized"}`` for
+# ``{"P_fn", "g_fn", "n", "m", "nnz", "gamma", "vectorized", "band"}`` for
 # ``repro.api.MDP.from_functions(**spec, device=True)``: the constructors are
 # written in jax.numpy over a *traced* row-index array (the action is a
 # static Python int), so the session layer materializes each device's ELL
@@ -189,8 +189,9 @@ def garnet_functions(n: int, m: int, k: int = 8, gamma: float = 0.95,
     """GARNET via a counter-based PRNG: any row block is generated
     independently on the device that owns it."""
     P_fn, g_fn = _garnet_fns(n, m, k, seed)
+    # band=None: successors are drawn globally — no banded structure
     return dict(P_fn=P_fn, g_fn=g_fn, n=n, m=m, nnz=k, gamma=gamma,
-                vectorized=True)
+                vectorized=True, band=None)
 
 
 @lru_cache(maxsize=64)
@@ -223,8 +224,9 @@ def maze2d_functions(size: int, gamma: float = 0.99, slip: float = 0.1,
                      seed: int = 0) -> dict:
     """Device maze2d; bit-identical tables to :func:`maze2d`."""
     P_fn, g_fn = _maze2d_fns(size, slip)
+    # band=size: a row move shifts the flat index by +-size (N/S moves)
     return dict(P_fn=P_fn, g_fn=g_fn, n=size * size, m=5, nnz=2,
-                gamma=gamma, vectorized=True)
+                gamma=gamma, vectorized=True, band=size)
 
 
 @lru_cache(maxsize=64)
@@ -261,8 +263,9 @@ def sis_functions(pop: int, n_actions: int = 4, gamma: float = 0.99,
     """Device SIS chain (f32 on-device arithmetic: matches :func:`sis` to
     rounding, not bitwise — the host generator computes in f64)."""
     P_fn, g_fn = _sis_fns(pop, n_actions)
+    # band=1: birth-death chain, transitions only to i-1 / i / i+1
     return dict(P_fn=P_fn, g_fn=g_fn, n=pop + 1, m=n_actions, nnz=3,
-                gamma=gamma, vectorized=True)
+                gamma=gamma, vectorized=True, band=1)
 
 
 @lru_cache(maxsize=64)
@@ -288,8 +291,9 @@ def chain_walk_functions(n: int, gamma: float = 0.9999, p_fwd: float = 0.7,
                          seed: int = 0) -> dict:
     """Device chain walk; bit-identical tables to :func:`chain_walk`."""
     P_fn, g_fn = _chain_walk_fns(n, p_fwd)
+    # band=1: random walk steps at most one state left/right
     return dict(P_fn=P_fn, g_fn=g_fn, n=n, m=2, nnz=2, gamma=gamma,
-                vectorized=True)
+                vectorized=True, band=1)
 
 
 FN_REGISTRY = {"garnet": garnet_functions, "maze2d": maze2d_functions,

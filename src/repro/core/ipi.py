@@ -449,6 +449,11 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
 
     view, in_ax, gamma_t = batch_parts(mdp)
     gamma_t = _local_gamma_t(gamma_t, mdp.batch, axes)
+    if gamma_t is not None:
+        # pin the traced per-lane discounts to the solve dtype: under
+        # jax_enable_x64 the vector defaults to float64 and every gamma*Pv
+        # product would promote, breaking the float32 while-loop carry
+        gamma_t = gamma_t.astype(jnp.dtype(opts.dtype))
     core = jax.vmap(
         lambda m, s, gt: _outer_core(m, s, opts, axes, gt),
         in_axes=(in_ax, 0, None if gamma_t is None else 0))

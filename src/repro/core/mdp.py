@@ -169,7 +169,73 @@ class DenseMDP:
             assert 0.0 < g < 1.0
 
 
-MDP = EllMDP | DenseMDP
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MatrixFreeMDP:
+    """Matrix-free MDP block: no stored tables, rows are rebuilt on the fly.
+
+    The only array leaf is ``tag`` — a zero int8 vector of the local state
+    extent whose *sharding* carries the placement (which rows each device
+    owns); everything else is static metadata.  ``spec`` is a
+    :class:`repro.kernels.matrix_free.RowSpec` holding the jit-able row
+    constructors; the Bellman layer re-traces them inside every backup /
+    policy-row extraction (recompute-over-store), so per-shard memory is
+    O(n_local) instead of O(n_local * m * nnz).
+
+    Batched fleet: ``tag`` gains a leading ``B`` dim.  All lanes share the
+    single static ``spec`` (identical constructors and shape — the
+    gamma-sweep fleet); per-lane discounts ride in the ``gamma`` tuple
+    exactly as for the array containers.
+    """
+
+    tag: jax.Array
+    gamma: float | tuple = dataclasses.field(metadata=dict(static=True))
+    n_global: int = dataclasses.field(metadata=dict(static=True))
+    m_global: int = dataclasses.field(metadata=dict(static=True))
+    spec: object = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def batch(self) -> int | None:
+        return self.tag.shape[0] if self.tag.ndim == 2 else None
+
+    @property
+    def shared_topology(self) -> bool:
+        return False
+
+    @property
+    def n_local(self) -> int:
+        return self.tag.shape[-1]
+
+    @property
+    def m_local(self) -> int:
+        # matrix-free shards states only: every shard traces all actions
+        return self.m_global
+
+    @property
+    def nnz_per_row(self) -> int:
+        return self.spec.nnz
+
+    @property
+    def acts(self) -> tuple:
+        """The static global action ids every backup covers."""
+        return tuple(range(self.m_global))
+
+    def instance(self, b: int) -> "MatrixFreeMDP":
+        if self.batch is None:
+            raise ValueError("instance() is only defined on a batched MDP")
+        return MatrixFreeMDP(tag=self.tag[b], gamma=gammas_of(self)[b],
+                             n_global=self.n_global, m_global=self.m_global,
+                             spec=self.spec)
+
+    def validate(self) -> None:
+        assert self.tag.dtype == jnp.int8, self.tag.dtype
+        assert self.n_global >= self.spec.n
+        assert self.m_global == self.spec.m
+        for g in gammas_of(self):
+            assert 0.0 < g < 1.0
+
+
+MDP = EllMDP | DenseMDP | MatrixFreeMDP
 
 
 # --------------------------------------------------------------------------- #
@@ -208,6 +274,22 @@ def stack_mdps(mdps: Sequence[MDP]) -> MDP:
                          f"({[m.m_global for m in mdps]}); pad actions first")
     gammas = tuple(float(m.gamma) for m in mdps)
     gamma = gammas[0] if len(set(gammas)) == 1 else gammas
+    if isinstance(first, MatrixFreeMDP):
+        # one static spec per batched container: lanes must share the
+        # constructors and shape (the gamma-sweep fleet); anything else
+        # would need per-lane re-tracing inside one compiled program
+        if any(m.spec != first.spec or m.n_global != first.n_global
+               for m in mdps):
+            raise ValueError(
+                "stack_mdps(MatrixFreeMDP): all lanes must share one row "
+                "spec (identical P_fn/g_fn and n/m/nnz — gamma may "
+                "differ); heterogeneous matrix-free fleets must be "
+                "materialized (-mdp_materialize device) or solved "
+                "separately")
+        return MatrixFreeMDP(
+            tag=jnp.zeros((len(mdps), first.n_global), jnp.int8),
+            gamma=gamma, n_global=first.n_global,
+            m_global=first.m_global, spec=first.spec)
     if isinstance(first, DenseMDP):
         if any(m.n_global != first.n_global for m in mdps):
             raise ValueError("stack_mdps(DenseMDP): state counts must match")
@@ -273,6 +355,8 @@ def batch_parts(mdp: MDP):
     if isinstance(mdp, EllMDP):
         in_axes = dataclasses.replace(
             view, idx=None if mdp.shared_topology else 0, val=0, cost=0)
+    elif isinstance(mdp, MatrixFreeMDP):
+        in_axes = dataclasses.replace(view, tag=0)
     else:
         in_axes = dataclasses.replace(view, p=0, cost=0)
     return view, in_axes, gamma_t

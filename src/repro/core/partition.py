@@ -26,6 +26,7 @@ stay frozen under the solver's active mask, so they cost one no-op lane.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
@@ -34,7 +35,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.comm import Axes
-from repro.core.mdp import DenseMDP, EllMDP, MDP
+from repro.core.mdp import DenseMDP, EllMDP, MatrixFreeMDP, MDP
 
 _BIG_COST = 1e30
 
@@ -212,6 +213,9 @@ def mdp_pspecs(mdp: MDP, axes: Axes):
     """
     s, a = axes.state, axes.action
     lead = () if mdp.batch is None else (axes.fleet,)
+    if isinstance(mdp, MatrixFreeMDP):
+        # the tag's sharding IS the placement: states sharded, nothing else
+        return dataclasses.replace(mdp, tag=P(*lead, s))
     if isinstance(mdp, EllMDP):
         idx_spec = P(s, a, None) if mdp.idx.ndim == 3 \
             else P(*lead, s, a, None)
@@ -238,8 +242,11 @@ def already_placed(mdp: MDP, mesh, axes: Axes) -> bool:
     if (mdp.batch or 1) % _axis_size(mesh, axes.fleet):
         return False
     specs = mdp_pspecs(mdp, axes)
-    fields = (("idx", "val", "cost") if isinstance(mdp, EllMDP)
-              else ("p", "cost"))
+    if isinstance(mdp, MatrixFreeMDP):
+        fields = ("tag",)
+    else:
+        fields = (("idx", "val", "cost") if isinstance(mdp, EllMDP)
+                  else ("p", "cost"))
     for f in fields:
         arr = getattr(mdp, f)
         sh = getattr(arr, "sharding", None)
@@ -285,6 +292,13 @@ def frontier_reach(mdp: MDP, n_shards: int) -> int | None:
     (``2 * reach`` floats) when ``-comm_overlap`` finds an interior core
     and the user left ``-halo 0``.
     """
+    if isinstance(mdp, MatrixFreeMDP):
+        # no arrays to measure: the reach comes from the declared matrix
+        # bandwidth (|successor - row| <= band), a valid — if conservative
+        # near shard centers — halo width for every shard boundary
+        if n_shards <= 1 or mdp.n_global % n_shards:
+            return None
+        return None if mdp.spec.band is None else int(mdp.spec.band)
     if not isinstance(mdp, EllMDP) or n_shards <= 1:
         return None
     n = mdp.n_global
@@ -315,6 +329,18 @@ def overlap_margins(mdp: MDP, n_shards: int) -> tuple[int, int] | None:
     gather of the MDP); call after mesh padding, with ``n_shards`` the
     state-axis size.
     """
+    if isinstance(mdp, MatrixFreeMDP):
+        # margins from the declared bandwidth: rows >= band away from both
+        # shard edges are provably interior.  Conservative vs the measured
+        # margins of a materialized table — harmless, since the overlap
+        # split is bitwise invisible for any valid margins
+        band = mdp.spec.band
+        if band is None or n_shards <= 1 or mdp.n_global % n_shards:
+            return None
+        n_local = mdp.n_global // n_shards
+        if 2 * int(band) >= n_local:
+            return None
+        return int(band), int(band)
     if not isinstance(mdp, EllMDP) or n_shards <= 1:
         return None
     n = mdp.n_global
@@ -360,6 +386,9 @@ def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d", *,
                          "or solve a fleet via solve_many()")
     if already_placed(mdp, mesh, axes):
         return mdp, axes, mdp.n_global
+    if isinstance(mdp, MatrixFreeMDP):
+        return _shard_matrix_free(mdp, mesh, axes, layout,
+                                  pad_fleet=pad_fleet)
     n_mult = _axis_size(mesh, axes.state)
     m_mult = _axis_size(mesh, axes.action)
     n_orig = mdp.n_global
@@ -375,4 +404,44 @@ def shard_mdp(mdp: EllMDP, mesh, layout: str = "1d", *,
                  cost=place(padded.cost, specs.cost),
                  gamma=padded.gamma, n_global=padded.n_global,
                  m_global=padded.m_global)
+    return dev, axes, n_orig
+
+
+def _shard_matrix_free(mdp: MatrixFreeMDP, mesh, axes: Axes, layout: str, *,
+                       pad_fleet: bool = True):
+    """Pad + place a matrix-free container: there are no tables to move,
+    so placement is one ``device_put`` of the (padded) zero tag.
+
+    State padding is free — the row builder masks ``rows >= spec.n`` into
+    zero-cost absorbing self-loops, exactly :func:`pad_mdp`'s padding.
+    Fleet padding duplicates the (single, static) spec with the last
+    lane's gamma; the dummy lanes re-solve that lane's problem and
+    converge in lockstep with it, then are trimmed from the results.
+    """
+    if _axis_size(mesh, axes.action) > 1:
+        raise ValueError(
+            f"matrix-free operators shard states only (every shard traces "
+            f"the full static action tuple); layout {layout!r} shards the "
+            f"action dim — use layout '1d'/'fleet', or materialize via "
+            f"-mdp_materialize device")
+    n_mult = _axis_size(mesh, axes.state)
+    n_orig = mdp.n_global
+    n_to = -(-n_orig // n_mult) * n_mult
+    gamma = mdp.gamma
+    shape: tuple = (n_to,)
+    lead: tuple = ()
+    if mdp.batch is not None:
+        b_to = mdp.batch
+        if axes.fleet is not None:
+            b_to = fleet_padded_batch(mdp.batch,
+                                      _axis_size(mesh, axes.fleet),
+                                      pad_fleet)
+            if isinstance(gamma, tuple) and b_to > mdp.batch:
+                gamma = gamma + (gamma[-1],) * (b_to - mdp.batch)
+        shape = (b_to, n_to)
+        lead = (axes.fleet,)
+    tag = jax.device_put(jnp.zeros(shape, jnp.int8),
+                         NamedSharding(mesh, P(*lead, axes.state)))
+    dev = MatrixFreeMDP(tag=tag, gamma=gamma, n_global=n_to,
+                        m_global=mdp.m_global, spec=mdp.spec)
     return dev, axes, n_orig

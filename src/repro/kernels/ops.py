@@ -190,6 +190,32 @@ def ell_backup(idx, val, cost, gamma, v, *, impl: str | None = None,
     return _ell_backup(idx, val, cost, gamma, v, impl, block_rows)
 
 
+def ell_backup_chunk(idx, val, cost, gamma, v, *, impl: str | None = None):
+    """Un-jitted fused backup on ONE row chunk — the matrix-free tile body.
+
+    The matrix-free operator rebuilds row tiles inside an already-traced
+    scan, so this entry point skips the jit wrapper and the chunk-level
+    re-blocking of :func:`ell_backup` (the caller owns the tiling) while
+    dispatching to the same per-implementation math:
+
+    * ``"xla"``     — ``ref.ell_backup`` (jnp.min/argmin chain);
+    * ``"blocked"`` — the exact per-chunk body of ``ref.ell_backup_blocked``
+      (``rowmin_argmin`` over ``ell_qvalues`` — bit-identical to ``"xla"``);
+    * ``"pallas"``/``"pallas_interpret"`` — the Pallas kernel on the chunk.
+
+    Bit-identical to running the materialized kernel over the same rows:
+    the math is row-independent, so any chunking yields the same bits.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.ell_backup(idx, val, cost, gamma, v)
+    if impl == "blocked":
+        return ref.rowmin_argmin(ref.ell_qvalues(idx, val, cost, gamma, v))
+    from . import bellman_ell
+    return bellman_ell.ell_backup(idx, val, cost, gamma, v,
+                                  interpret=(impl == "pallas_interpret"))
+
+
 def _ell_qvalues(idx, val, cost, gamma, v, impl, block_rows):
     if impl == "xla":
         return ref.ell_qvalues(idx, val, cost, gamma, v)

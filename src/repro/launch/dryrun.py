@@ -138,6 +138,24 @@ MDP_CELLS = {
     "mdp_dense_32k": (1 << 15, 64, 0, "1d", "vi", 0),
 }
 
+# Matrix-free cells: the abstract container is an O(n) placement tag plus a
+# REAL FN_REGISTRY row spec, so lowering re-traces the constructors inside
+# every backup — the compiled cost_analysis therefore charges the per-sweep
+# recompute FLOPs automatically, and memory_analysis shows the O(n)
+# argument footprint (no table anywhere).
+MDP_MF_CELLS = {
+    # name: (fn-registry family, family kwargs, layout, method, halo)
+    "mdp_mf_vi_64m": ("garnet", dict(n=1 << 26, m=8, k=8), "1d", "vi", 0),
+    "mdp_mf_gmres_64m": ("garnet", dict(n=1 << 26, m=8, k=8), "1d",
+                         "ipi_gmres", 0),
+    # the state-ceiling cell: 2^30 states would need a 100+ GB/device ELL
+    # table; the operator solves it in ~GBs of value vectors per device
+    "mdp_mf_vi_1g": ("garnet", dict(n=1 << 30, m=8, k=8), "1d", "vi", 0),
+    # banded family (sis: band=1) under the halo ring exchange
+    "mdp_mf_vi_16m_halo": ("sis", dict(pop=(1 << 24) - 1, n_actions=4),
+                           "1d", "vi", 1),
+}
+
 
 def run_mdp_cell(name: str, mesh) -> dict:
     from functools import partial
@@ -145,15 +163,27 @@ def run_mdp_cell(name: str, mesh) -> dict:
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.core import ipi, partition
-    from repro.core.mdp import DenseMDP, EllMDP
+    from repro.core.mdp import DenseMDP, EllMDP, MatrixFreeMDP
 
-    n, m, k, layout, method, halo = MDP_CELLS[name]
+    spec = None
+    if name in MDP_MF_CELLS:
+        fam, fam_kw, layout, method, halo = MDP_MF_CELLS[name]
+        from repro.api.mdp import MDP as _ApiMDP
+        spec = _ApiMDP.from_generator(fam, deferred=True,
+                                      **fam_kw)._row_spec()
+        n, m, k = spec.n, spec.m, spec.nnz
+    else:
+        n, m, k, layout, method, halo = MDP_CELLS[name]
     axes = partition.mesh_axes(mesh, layout)
     import math
     n_shards = math.prod(mesh.shape[a] for a in (
         axes.state if isinstance(axes.state, tuple) else (axes.state,)))
     m_shards = 1 if axes.action is None else mesh.shape[axes.action]
-    if k == 0:  # dense transition tensor
+    if spec is not None:  # matrix-free operator: O(n) tag, no table
+        mdp_abs = MatrixFreeMDP(
+            tag=jax.ShapeDtypeStruct((n,), jnp.int8),
+            gamma=0.9999, n_global=n, m_global=m, spec=spec)
+    elif k == 0:  # dense transition tensor
         mdp_abs = DenseMDP(
             p=jax.ShapeDtypeStruct((n, m, n), jnp.float32),
             cost=jax.ShapeDtypeStruct((n, m), jnp.float32),
@@ -223,6 +253,25 @@ def run_mdp_cell(name: str, mesh) -> dict:
     itemsize = jnp.dtype(jnp.float32).itemsize
     rec["window_bytes"] = (2 * halo * itemsize if halo
                            else (n - nl) * itemsize)
+    if spec is not None:
+        # memory crossover: both footprints are linear in n, so the trade
+        # is a constant ratio — report it plus the per-host state ceilings
+        # each way (the recompute FLOPs the operator pays per sweep are
+        # already in rec["flops"]: lowering traced the constructors)
+        from repro.kernels import matrix_free as _mf
+        krylov = method not in ("vi", "async_vi")
+        tb = _mf.table_bytes(n, m, k)
+        ob = _mf.operator_bytes(n, k, krylov=krylov)
+        host = 16 << 30   # a 16 GB device/host as the reference budget
+        rec["table_bytes"] = tb
+        rec["operator_bytes"] = ob
+        rec["memory_ratio"] = round(tb / ob, 2)
+        rec["states_per_16g_materialized"] = host // (tb // n)
+        rec["states_per_16g_matrix_free"] = host // (ob // n)
+        print(f"[mf] {name}: table {tb / 1e9:.2f} GB vs operator "
+              f"{ob / 1e9:.3f} GB ({tb / ob:.0f}x); a 16 GB device holds "
+              f"{host // (tb // n):,} materialized vs "
+              f"{host // (ob // n):,} matrix-free states", flush=True)
     return rec
 
 
@@ -254,7 +303,8 @@ def main():
     if args.suite in ("lm", "all"):
         jobs += [("lm", a, s.name) for a in ARCHS for s in cells(a)]
     if args.suite in ("mdp", "all"):
-        jobs += [("mdp", name, "") for name in MDP_CELLS]
+        jobs += [("mdp", name, "")
+                 for name in list(MDP_CELLS) + list(MDP_MF_CELLS)]
 
     results = {}
     for mesh_name in mesh_names:

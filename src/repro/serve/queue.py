@@ -22,6 +22,8 @@ import time
 from collections import deque
 from typing import Any, Iterator
 
+from repro.kernels import matrix_free
+
 __all__ = ["AdmissionError", "Request", "RequestQueue"]
 
 # end-of-stream sentinel pushed into a request's record queue at completion
@@ -49,11 +51,14 @@ class Request:
     """
 
     def __init__(self, mdp, sig: tuple, overrides: dict, *,
-                 monitor: bool = False):
+                 monitor: bool = False, materialization: str | None = None):
         self.id = next(_REQUEST_IDS)
         self.mdp = mdp
         self.sig = sig
         self.overrides = overrides
+        # the resolved pipeline ("device"/"host"/"matrix_free"; None for
+        # array-backed MDPs) — admission charges the *actual* footprint
+        self.materialization = materialization
         self.monitor = bool(monitor)
         self.submitted = time.monotonic()
         self.dispatched: float | None = None
@@ -140,14 +145,43 @@ class RequestQueue:
             return len(self._items)
 
     def push(self, req: Request) -> None:
-        """Admit one request or raise :class:`AdmissionError`."""
+        """Admit one request or raise :class:`AdmissionError`.
+
+        ``-serve_max_states`` names a *materialized-table byte budget*
+        (the ELL table of ``max_states`` states at the request's shape):
+        materialized requests are limited by state count exactly as
+        before, while matrix-free requests — whose per-solve footprint is
+        O(n), not O(n*m*nnz) — are admitted up to the same bytes, i.e.
+        one to two orders of magnitude more states for typical shapes.
+        """
         n = req.mdp.n
-        if self.max_states is not None and n > self.max_states:
-            raise AdmissionError(
-                "too_large",
-                f"request rejected: {n} states exceeds the per-request "
-                f"limit -serve_max_states={self.max_states}; split the "
-                f"problem or raise the limit")
+        if self.max_states is not None:
+            if req.materialization == "matrix_free":
+                spec = req.mdp._spec
+                per = matrix_free.operator_bytes(1, spec.nnz)
+                est = matrix_free.operator_bytes(n, spec.nnz)
+                budget = matrix_free.table_bytes(
+                    self.max_states, spec.m, spec.nnz)
+                if est > budget:
+                    raise AdmissionError(
+                        "too_large",
+                        f"request rejected: matrix-free solve needs "
+                        f"~{est} bytes ({n} states x {per} B/state), over "
+                        f"the -serve_max_states={self.max_states} byte "
+                        f"budget ({budget} B — the materialized table of "
+                        f"{self.max_states} states at m={spec.m}, "
+                        f"nnz={spec.nnz}); this family admits up to "
+                        f"{budget // per} matrix-free states — split the "
+                        f"problem or raise the limit")
+            elif n > self.max_states:
+                raise AdmissionError(
+                    "too_large",
+                    f"request rejected: {n} states exceeds the per-request "
+                    f"limit -serve_max_states={self.max_states}; split the "
+                    f"problem, raise the limit, or — for a function-backed "
+                    f"MDP — submit with -mdp_materialize matrix_free, "
+                    f"whose O(n) footprint admits far more states under "
+                    f"the same byte budget")
         with self.cv:
             if len(self._items) >= self.max_depth:
                 raise AdmissionError(

@@ -19,6 +19,7 @@ actionable errors — rather than queueing unboundedly.
 
 from __future__ import annotations
 
+import dataclasses
 import weakref
 from typing import Any, Iterator, Mapping
 
@@ -199,8 +200,25 @@ class Server:
         # submit, not a scheduler-thread failure mid-bucket)
         ov = Options(overrides).as_dict(explicit_only=True) \
             if overrides else {}
-        sig = (tuple(sorted(ov.items())), mdp.mode) + _mdp_family(mdp)
-        return Request(mdp, sig, ov, monitor=monitor)
+        mat = None
+        if mdp.deferred:
+            # resolve the pipeline at submit (per-request override, else
+            # the session option): admission charges matrix-free requests
+            # their O(n) footprint, and matrix-free batches only with
+            # matrix-free over the identical constructor pair
+            mat = mdp.materialization(
+                ov.get("-mdp_materialize",
+                       self._session.options.get("-mdp_materialize")))
+        if mat == "matrix_free":
+            # gamma-free spec: a gamma sweep batches into one fleet, while
+            # different constructors/shapes (stack_mdps requires one shared
+            # RowSpec) never share a bucket
+            fam = ("matrix_free",
+                   dataclasses.replace(mdp._spec, gamma=0.0))
+        else:
+            fam = _mdp_family(mdp)
+        sig = (tuple(sorted(ov.items())), mdp.mode) + fam
+        return Request(mdp, sig, ov, monitor=monitor, materialization=mat)
 
     def _as_request(self, request: Request | int) -> Request:
         if isinstance(request, Request):

@@ -1,0 +1,481 @@
+"""Matrix-free Bellman operators (ISSUE 9).
+
+The non-negotiable invariant: solving through the matrix-free operator —
+row tiles rebuilt from the ``from_functions`` constructors inside every
+backup, never a stored table — is *bitwise* identical to solving the
+materialized container: same values, same policies, same iteration
+counts, for every method, mode, FN_REGISTRY family, kernel impl and
+layout.  Plus the seams: materialization resolution and its actionable
+errors, band metadata for halo layouts, admission-control byte budgets,
+and cache eviction on ``Session.close``.
+
+The multi-device legs (1d sharding, fleet batching, comm-overlap on a
+banded family) run the real shard_map path on 8 forced host devices in a
+subprocess (device count must be set before jax initializes).
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import MDP, Session
+from repro.api.mdp import _BUILDER_CACHE
+from repro.core import IPIOptions, generators, partition
+from repro.core.driver import _validate_banded, solve as driver_solve
+from repro.core.mdp import MatrixFreeMDP, stack_mdps
+from repro.kernels import matrix_free, ops
+from repro.serve.queue import AdmissionError, Request, RequestQueue
+
+# small instances of every FN_REGISTRY family (each exercises a different
+# structure: global random columns, 5-point stencil, birth-death band,
+# 2-successor chain)
+FAMS = {
+    "garnet": dict(n=300, m=6, k=4, gamma=0.9, seed=0),
+    "maze2d": dict(size=12, gamma=0.95),
+    "sis": dict(pop=150, n_actions=4, gamma=0.95),
+    "chain_walk": dict(n=200, gamma=0.95),
+}
+
+
+def _bits(x):
+    x = np.asarray(x)
+    return x.view(np.uint64 if x.dtype == np.float64 else np.uint32)
+
+
+def _cores(name, mode="mincost"):
+    fam = FAMS[name]
+    mat = MDP.from_generator(name, deferred=True, mode=mode, **fam)
+    mf = MDP.from_generator(name, deferred=True, mode=mode, **fam)
+    return mat.build(), mf.build("matrix_free")
+
+
+def _assert_same(a, b):
+    assert (_bits(a.v) != _bits(b.v)).sum() == 0
+    assert (a.policy != b.policy).sum() == 0
+    assert a.outer_iterations == b.outer_iterations
+    assert a.inner_iterations == b.inner_iterations
+    assert np.array_equal(a.trace_residual, b.trace_residual,
+                          equal_nan=True)
+
+
+# --------------------------------------------------------------------------- #
+# Bitwise parity: methods x families x modes (single device)                  #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("name", sorted(FAMS))
+def test_parity_every_family_ipi(name):
+    """ipi_gmres runs the whole machinery — backup for the outer residual,
+    policy_rows for the inner Krylov solve — on each family's structure."""
+    core_mat, core_mf = _cores(name)
+    opts = IPIOptions(method="ipi_gmres", atol=1e-8, max_outer=200)
+    _assert_same(driver_solve(core_mat, opts), driver_solve(core_mf, opts))
+
+
+@pytest.mark.parametrize("method", ["vi", "mpi", "async_vi"])
+@pytest.mark.parametrize("mode", ["mincost", "maxreward"])
+def test_parity_methods_and_modes(method, mode):
+    """The backup-only methods, in both optimization senses — maxreward
+    exercises the negate-inside-the-rebuilt-tile path of mf_backup."""
+    core_mat, core_mf = _cores("maze2d", mode=mode)
+    opts = IPIOptions(method=method, mode=mode, atol=1e-7, max_outer=3000)
+    _assert_same(driver_solve(core_mat, opts), driver_solve(core_mf, opts))
+
+
+def test_parity_interpret_chunk_kernel():
+    """The un-jitted tile body (the kernel the matrix-free scan consumes)
+    is bit-identical across impls, including the Pallas interpreter."""
+    mdp = generators.chain_walk(128, gamma=0.95)
+    import jax.numpy as jnp
+    v = jnp.linspace(-1.0, 1.0, 128, dtype=jnp.float32)
+    ref_vals, ref_acts = ops.ell_backup_chunk(
+        mdp.idx, mdp.val, mdp.cost, 0.95, v, impl="xla")
+    for impl in ("blocked", "pallas_interpret"):
+        vals, acts = ops.ell_backup_chunk(
+            mdp.idx, mdp.val, mdp.cost, 0.95, v, impl=impl)
+        assert (_bits(vals) != _bits(ref_vals)).sum() == 0, impl
+        assert np.array_equal(np.asarray(acts), np.asarray(ref_acts)), impl
+
+
+def test_parity_mf_backup_interpret_impl():
+    """mf_backup's impl override threads through to the rebuilt tiles."""
+    spec = MDP.from_generator("chain_walk", deferred=True,
+                              **FAMS["chain_walk"])._row_spec()
+    import jax.numpy as jnp
+    v = jnp.linspace(0.0, 1.0, spec.n, dtype=jnp.float32)
+    acts = tuple(range(spec.m))
+    ref_vals, ref_acts = matrix_free.mf_backup(
+        spec, 0, spec.n, acts, 0.95, v, impl="xla")
+    vals, acts_out = matrix_free.mf_backup(
+        spec, 0, spec.n, acts, 0.95, v, impl="pallas_interpret")
+    assert (_bits(vals) != _bits(ref_vals)).sum() == 0
+    assert np.array_equal(np.asarray(acts_out), np.asarray(ref_acts))
+
+
+def test_parity_chunked_rebuild():
+    """Tiling the rebuild (block_rows) cannot change a single bit — the
+    math is row-independent.  Run under jit with a traced row0 exactly
+    like the solver does (eager whole-array calls constant-fold the
+    constructors through a different evaluator and can differ by ULPs —
+    that path never executes inside a solve)."""
+    import jax
+    import jax.numpy as jnp
+    spec = MDP.from_generator("sis", deferred=True,
+                              **FAMS["sis"])._row_spec()
+    v = jnp.linspace(-2.0, 2.0, spec.n, dtype=jnp.float32)
+    acts = tuple(range(spec.m))
+    bk = jax.jit(
+        lambda r0, v, bn: matrix_free.mf_backup(
+            spec, r0, spec.n, acts, 0.9, v, block_rows=bn),
+        static_argnums=2)
+    whole = bk(jnp.int32(0), v, None)
+    core = MDP.from_generator("sis", deferred=True, **FAMS["sis"]).build()
+    mat = ops.ell_backup_chunk(core.idx, core.val, core.cost, 0.9, v)
+    for bn in (37, 64):
+        tiled = bk(jnp.int32(0), v, bn)
+        assert (_bits(whole[0]) != _bits(tiled[0])).sum() == 0, bn
+        assert np.array_equal(np.asarray(whole[1]),
+                              np.asarray(tiled[1])), bn
+        assert (_bits(mat[0]) != _bits(tiled[0])).sum() == 0, bn
+
+
+# --------------------------------------------------------------------------- #
+# Materialization resolution + actionable errors                              #
+# --------------------------------------------------------------------------- #
+
+
+def _np_mdp(n=64, **kw):
+    def P(rs, a):
+        nxt = np.clip(rs + 1, 0, n - 1)
+        return (np.stack([nxt, rs], -1),
+                np.broadcast_to(np.array([0.9, 0.1]), (len(rs), 2)))
+
+    def g(rs, a):
+        return np.where(rs == 0, 0.0, 1.0)
+
+    return MDP.from_functions(P, g, n, 2, nnz=2, vectorized=True, **kw)
+
+
+def test_host_callbacks_error_is_actionable():
+    """numpy constructors cannot be re-traced inside a backup: asking for
+    matrix_free must fail loudly, pointing at the fix."""
+    mdp = _np_mdp()
+    with pytest.raises(ValueError, match="jax.numpy"):
+        mdp.materialization("matrix_free")
+    with pytest.raises(ValueError, match="matrix-free"):
+        mdp.build("matrix_free")
+
+
+def test_auto_never_picks_matrix_free():
+    mdp = MDP.from_generator("chain_walk", deferred=True,
+                             **FAMS["chain_walk"])
+    assert mdp.materialization() == "device"
+    assert mdp.materialization("matrix_free") == "matrix_free"
+
+
+def test_host_pin_wins_over_matrix_free():
+    """device=False is an explicit host pin; the option defers to it the
+    same way it does for 'device'."""
+    fam = dict(generators.FN_REGISTRY["chain_walk"](**FAMS["chain_walk"]))
+    mdp = MDP.from_functions(**fam, device=False)
+    assert mdp.materialization("matrix_free") == "host"
+
+
+def test_matrix_free_container_shape():
+    _, core = _cores("chain_walk")
+    assert isinstance(core, MatrixFreeMDP)
+    assert core.tag.dtype == np.int8
+    assert core.n_local == FAMS["chain_walk"]["n"]
+    assert core.gamma == FAMS["chain_walk"]["gamma"]
+
+
+def test_negative_band_rejected():
+    fam = dict(generators.FN_REGISTRY["chain_walk"](**FAMS["chain_walk"]))
+    fam["band"] = -1
+    with pytest.raises(ValueError, match="band"):
+        MDP.from_functions(**fam)
+
+
+# --------------------------------------------------------------------------- #
+# Band metadata: partition planning + halo validation                         #
+# --------------------------------------------------------------------------- #
+
+
+def test_band_metadata_drives_partition_planning():
+    """With no table to measure, margins/reach come from the declared
+    band — sis is birth-death (band=1), garnet declares none."""
+    sis = MDP.from_generator("sis", deferred=True, pop=149,
+                             n_actions=4).build("matrix_free")   # n=150
+    assert sis.spec.band == 1
+    assert partition.overlap_margins(sis, 5) == (1, 1)
+    assert partition.frontier_reach(sis, 5) == 1
+    _, gar = _cores("garnet")
+    assert gar.spec.band is None
+    assert partition.overlap_margins(gar, 5) is None
+
+
+def test_halo_without_band_is_actionable():
+    _, gar = _cores("garnet")
+    with pytest.raises(ValueError, match="declared matrix"):
+        _validate_banded(gar, 2, None, "1d")
+
+
+# --------------------------------------------------------------------------- #
+# Batching: stack_mdps on matrix-free containers                              #
+# --------------------------------------------------------------------------- #
+
+
+def test_stack_requires_shared_spec():
+    _, a = _cores("chain_walk")
+    _, b = _cores("chain_walk")
+    stacked = stack_mdps([a, b])
+    assert stacked.batch == 2
+    assert stacked.tag.shape == (2, a.n_local)
+    _, other = _cores("sis")
+    with pytest.raises(ValueError):
+        stack_mdps([a, other])
+
+
+def test_gamma_sweep_parity_solve_many():
+    """A fleet-style gamma sweep over one constructor pair: each lane
+    bitwise-matches its materialized solo solve."""
+    from repro.core.driver import solve_many
+    fam = dict(generators.FN_REGISTRY["chain_walk"](n=160))
+    gammas = (0.9, 0.95, 0.99)
+    cores = []
+    for g in gammas:
+        fam_g = dict(fam, gamma=g)
+        cores.append(MDP.from_functions(**fam_g).build("matrix_free"))
+    opts = IPIOptions(method="vi", atol=1e-7, max_outer=3000)
+    rs = solve_many(cores, opts)
+    for g, r in zip(gammas, rs):
+        fam_g = dict(fam, gamma=g)
+        ref = driver_solve(MDP.from_functions(**fam_g).build(), opts)
+        assert (_bits(r.v) != _bits(ref.v)).sum() == 0
+        assert (r.policy != ref.policy).sum() == 0
+
+
+# --------------------------------------------------------------------------- #
+# Serve admission: the byte budget                                            #
+# --------------------------------------------------------------------------- #
+
+
+def _request(mdp, mat):
+    return Request(mdp, ("sig",), {}, materialization=mat)
+
+
+def test_admission_matrix_free_byte_budget():
+    """-serve_max_states names the materialized-table byte budget: the
+    same n that is rejected materialized is admitted matrix-free, and the
+    matrix-free rejection only kicks in past the byte-equivalent count."""
+    fam = dict(generators.FN_REGISTRY["garnet"](n=500, m=8, k=8))
+    mdp = MDP.from_functions(**fam)
+    q = RequestQueue(max_depth=8, max_states=100)
+    with pytest.raises(AdmissionError, match="matrix_free") as ei:
+        q.push(_request(mdp, None))          # materialized: 500 > 100
+    assert ei.value.reason == "too_large"
+    q.push(_request(mdp, "matrix_free"))     # same n, O(n) footprint: fits
+    assert len(q) == 1
+    # garnet m=8, nnz=8: table 544 B/state vs (krylov-conservative)
+    # operator 85 B/state — the byte budget admits 6.4x the states
+    cap = matrix_free.table_bytes(100, 8, 8) \
+        // matrix_free.operator_bytes(1, 8)
+    assert cap > 500
+    big = MDP.from_functions(**dict(generators.FN_REGISTRY["garnet"](
+        n=cap + 1, m=8, k=8)))
+    with pytest.raises(AdmissionError, match="byte") as ei:
+        q.push(_request(big, "matrix_free"))
+    assert ei.value.reason == "too_large"
+
+
+def test_server_resolves_materialization_per_request():
+    """End-to-end: a server whose session pins matrix_free solves a
+    function-backed MDP through the operator and matches the materialized
+    answer bit for bit."""
+    from repro.serve import Server
+    fam = FAMS["chain_walk"]
+    opts = {"-method": "vi", "-atol": 1e-7, "-serve_batch_window": 0.01,
+            "-mdp_materialize": "matrix_free"}
+    with Server(opts) as srv:
+        req = srv.submit(MDP.from_generator("chain_walk", deferred=True,
+                                            **fam))
+        assert req.materialization == "matrix_free"
+        assert req.sig[-2] == "matrix_free"
+        r = req.result(timeout=600)
+    ref = driver_solve(
+        MDP.from_generator("chain_walk", deferred=True, **fam).build(),
+        IPIOptions(method="vi", atol=1e-7))
+    assert (_bits(r.v) != _bits(ref.v)).sum() == 0
+    assert (r.policy != ref.policy).sum() == 0
+
+
+# --------------------------------------------------------------------------- #
+# Eviction: Session.close drops operator programs and containers             #
+# --------------------------------------------------------------------------- #
+
+
+def test_session_close_evicts_matrix_free_state():
+    fam = FAMS["chain_walk"]
+    s = Session({"-method": "vi", "-atol": 1e-7,
+                 "-mdp_materialize": "matrix_free"})
+    mdp = MDP.from_generator("chain_walk", deferred=True, **fam)
+    r = s.solve(mdp)
+    assert np.isfinite(r.residual)
+    assert ("built", "matrix_free") in mdp._device_cache
+    s.close()
+    assert ("built", "matrix_free") not in mdp._device_cache
+
+
+def test_evict_builders_purges_program_cache():
+    mdp = MDP.from_generator("chain_walk", deferred=True,
+                             **FAMS["chain_walk"])
+    mdp.build("matrix_free")
+    skey = dataclasses.replace(mdp._spec, gamma=0.0)
+    assert any(k[0] == skey for k in _BUILDER_CACHE)
+    mdp.evict()                       # plain evict keeps the warm builder
+    assert any(k[0] == skey for k in _BUILDER_CACHE)
+    mdp.evict(builders=True)
+    assert not any(k[0] == skey for k in _BUILDER_CACHE)
+
+
+# --------------------------------------------------------------------------- #
+# Dryrun: matrix-free memory model + crossover                                #
+# --------------------------------------------------------------------------- #
+
+
+def test_dryrun_matrix_free_cell(monkeypatch):
+    """The dryrun memory model: a matrix-free cell reports both footprints
+    and the crossover, and its lowering (which traces the constructors)
+    charges the recompute FLOPs."""
+    import jax
+
+    from repro.launch import dryrun
+    from repro.launch.mesh import mesh_kwargs
+    assert "mdp_mf_vi_1g" in dryrun.MDP_MF_CELLS    # the 1B-state cell
+    monkeypatch.setitem(
+        dryrun.MDP_MF_CELLS, "mdp_mf_test_small",
+        ("garnet", dict(n=1 << 14, m=8, k=8), "1d", "vi", 0))
+    mesh = jax.make_mesh((1, 1), ("data", "model"), **mesh_kwargs(2))
+    rec = dryrun.run_mdp_cell("mdp_mf_test_small", mesh)
+    assert rec["operator_bytes"] < rec["table_bytes"] / 10
+    assert rec["memory_ratio"] > 10
+    assert rec["states_per_16g_matrix_free"] > \
+        10 * rec["states_per_16g_materialized"]
+    assert rec["flops"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# 8-fake-device parity (subprocess: real shard_map + collectives)             #
+# --------------------------------------------------------------------------- #
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np, json
+from repro.api import MDP
+from repro.core import IPIOptions, generators
+from repro.core.driver import solve, solve_many
+from repro.launch.mesh import make_fleet_mesh, mesh_kwargs
+
+out = {}
+
+
+def bits(x):
+    x = np.asarray(x)
+    return x.view(np.uint64 if x.dtype == np.float64 else np.uint32)
+
+
+def record(tag, a, b):
+    out[tag] = dict(
+        dv_bits=int((bits(a.v) != bits(b.v)).sum()),
+        dpi=int((a.policy != b.policy).sum()),
+        trace_eq=bool(np.array_equal(a.trace_residual, b.trace_residual,
+                                     equal_nan=True)),
+        outer=int(a.outer_iterations), outer_mf=int(b.outer_iterations))
+
+
+mesh1d = jax.make_mesh((8,), ("data",), **mesh_kwargs(1))
+
+# 1d sharded: materialized vs matrix-free along the whole (unconverged)
+# trajectory — stricter than parity at the fixed point
+fam = dict(generators.FN_REGISTRY["sis"](pop=333, n_actions=4, gamma=0.99))
+for method in ("vi", "ipi_gmres"):
+    opts = IPIOptions(method=method, atol=1e-12, max_outer=40)
+    a = solve(MDP.from_functions(**fam).build(), opts,
+              mesh=mesh1d, layout="1d")
+    b = solve(MDP.from_functions(**fam).build("matrix_free"), opts,
+              mesh=mesh1d, layout="1d")
+    record(f"{method}/1d", a, b)
+
+# halo layout on the declared band (sis: birth-death, band=1)
+opts = IPIOptions(method="vi", atol=1e-12, max_outer=40, halo=1)
+fam319 = dict(generators.FN_REGISTRY["sis"](pop=319, n_actions=4,
+                                            gamma=0.99))
+a = solve(MDP.from_functions(**fam319).build(), opts,
+          mesh=mesh1d, layout="1d")
+b = solve(MDP.from_functions(**fam319).build("matrix_free"), opts,
+          mesh=mesh1d, layout="1d")
+record("vi/halo", a, b)
+
+# comm overlap must stay bitwise-invisible through the operator too
+record("vi/overlap",
+       solve(MDP.from_functions(**fam319).build("matrix_free"),
+             IPIOptions(method="vi", atol=1e-12, max_outer=40,
+                        comm_overlap="off"), mesh=mesh1d, layout="1d"),
+       solve(MDP.from_functions(**fam319).build("matrix_free"),
+             IPIOptions(method="vi", atol=1e-12, max_outer=40,
+                        comm_overlap="on"), mesh=mesh1d, layout="1d"))
+
+# fleet layout: a gamma sweep batched into one fleet program
+fam_fn = generators.FN_REGISTRY["chain_walk"]
+gammas = (0.9, 0.95, 0.99, 0.995)
+opts = IPIOptions(method="vi", atol=1e-10, max_outer=4000)
+mats = [MDP.from_functions(**dict(fam_fn(n=240), gamma=g)).build()
+        for g in gammas]
+mfs = [MDP.from_functions(**dict(fam_fn(n=240), gamma=g))
+       .build("matrix_free") for g in gammas]
+fleet = make_fleet_mesh(4)
+ra = solve_many(mats, opts, mesh=fleet, layout="fleet")
+rb = solve_many(mfs, opts, mesh=fleet, layout="fleet")
+out["vi/fleet"] = dict(
+    dv_bits=int(sum((bits(a.v) != bits(b.v)).sum()
+                    for a, b in zip(ra, rb))),
+    dpi=int(sum((a.policy != b.policy).sum() for a, b in zip(ra, rb))),
+    trace_eq=all(np.array_equal(a.trace_residual, b.trace_residual,
+                                equal_nan=True)
+                 for a, b in zip(ra, rb)),
+    outer=int(ra[0].outer_iterations), outer_mf=int(rb[0].outer_iterations))
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+_PAIR_KEYS = ["vi/1d", "ipi_gmres/1d", "vi/halo", "vi/overlap", "vi/fleet"]
+
+
+@pytest.mark.parametrize("key", _PAIR_KEYS)
+def test_sharded_matrix_free_is_bitwise_identical(results, key):
+    r = results[key]
+    assert r["dv_bits"] == 0, r
+    assert r["dpi"] == 0, r
+    assert r["trace_eq"], r
+    assert r["outer"] == r["outer_mf"], r
