@@ -1,0 +1,112 @@
+"""Benchmark 10 — the adaptive driver's claim: ``-method auto`` lands
+within 1.3x of the best fixed method on every instance family, including
+the GMRES outliers where the fixed-method spread covers orders of
+magnitude (ISSUE 10 tentpole).
+
+For each instance family: every fixed leg (vi / mpi / ipi_gmres, plus the
+preconditioned ``ipi_gmres -pc_type jacobi`` combo the rule table selects
+in the ill-conditioned regime) and the ``auto`` leg, all timed **warm**
+through one :class:`repro.api.Session` — the second solve reuses both the
+compiled programs and (for auto) the session's per-family probe cache, so
+the ratio reflects steady-state method quality, not probe or compile cost.
+
+The pc-vs-plain pair on the hard chain doubles as the preconditioning
+acceptance row (jacobi >= 2x plain GMRES on at least one outlier).
+
+``MADUPITE_BENCH_SCALE`` (default 1.0) scales instance sizes so CI can
+run a quick leg (e.g. ``MADUPITE_BENCH_SCALE=0.02``).
+
+Run directly:  PYTHONPATH=src:. python -m benchmarks.bench_adaptive
+or via:        PYTHONPATH=src:. python -m benchmarks.run --only adaptive
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.api import Session
+from repro.core import generators
+
+SCALE = float(os.environ.get("MADUPITE_BENCH_SCALE", "1.0"))
+
+# f32 Bellman residuals bottom out near eps * ||v|| ~ 1e-7 * 1/(1-gamma):
+# 1e-3 sits safely above that floor for the gamma=0.9999 chain while still
+# exercising the full fixed-method spread
+ATOL = 1e-3
+MAX_OUTER = 3000
+
+
+def _n(n: int, lo: int = 64) -> int:
+    return max(int(n * SCALE), lo)
+
+
+INSTANCES = {
+    "garnet_0.95": lambda: generators.garnet(_n(1_024), 8, 4, gamma=0.95,
+                                             seed=0),
+    "chain_0.999": lambda: generators.chain_walk(_n(2_000), gamma=0.999),
+    "chain_0.9999": lambda: generators.chain_walk(_n(1_500), gamma=0.9999),
+}
+
+# (tag, solve overrides) — auto last so its warm pass can only reuse
+# programs a fixed leg already compiled when the rule table agrees
+LEGS = [
+    ("vi", {"method": "vi"}),
+    ("mpi", {"method": "mpi"}),
+    ("ipi_gmres", {"method": "ipi_gmres"}),
+    ("ipi_gmres+jacobi", {"method": "ipi_gmres", "pc_type": "jacobi"}),
+    ("auto", {"method": "auto"}),
+]
+
+
+def run(csv_rows: list):
+    scale_tag = "" if SCALE == 1.0 else f";scale={SCALE}"
+    with Session({"-atol": ATOL, "-max_outer": MAX_OUTER,
+                  "-max_inner": 512, "-verbose": False}) as sess:
+        for iname, make in INSTANCES.items():
+            mdp = make()
+            walls: dict[str, float] = {}
+            conv: dict[str, bool] = {}
+            for tag, ov in LEGS:
+                sess.solve(mdp, **ov)            # compile / probe pass
+                t0 = time.time()
+                r = sess.solve(mdp, **ov)        # timed warm pass
+                walls[tag] = time.time() - t0
+                conv[tag] = bool(r.converged)
+                csv_rows.append((
+                    f"adaptive/{iname}/{tag}", walls[tag] * 1e6,
+                    f"converged={conv[tag]};outer={r.outer_iterations}"
+                    f"{scale_tag}"))
+                print(f"  {iname:14s} {tag:18s} wall={walls[tag]:7.2f}s "
+                      f"conv={conv[tag]} outer={r.outer_iterations}",
+                      flush=True)
+            fixed = {t: w for t, w in walls.items()
+                     if t != "auto" and conv[t]}
+            if fixed and conv["auto"]:
+                best_tag = min(fixed, key=fixed.get)
+                ratio = walls["auto"] / fixed[best_tag]
+                csv_rows.append((
+                    f"adaptive/{iname}/auto_vs_best", ratio,
+                    f"best={best_tag};auto_within_1.3x={ratio <= 1.3}"
+                    f"{scale_tag}"))
+                print(f"  {iname:14s} auto/best({best_tag}) = {ratio:.2f}x",
+                      flush=True)
+            if conv.get("ipi_gmres+jacobi"):
+                # plain GMRES may not even converge within max_outer; its
+                # wall is then a LOWER bound on the true cost, so the
+                # reported speedup is conservative
+                sp = walls["ipi_gmres"] / walls["ipi_gmres+jacobi"]
+                csv_rows.append((
+                    f"adaptive/{iname}/jacobi_vs_plain_gmres", sp,
+                    f"plain_converged={conv['ipi_gmres']}{scale_tag}"))
+                print(f"  {iname:14s} jacobi speedup over plain gmres = "
+                      f"{sp:.2f}x (plain conv={conv['ipi_gmres']})",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

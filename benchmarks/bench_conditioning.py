@@ -1,9 +1,15 @@
 """Benchmark 2 — conditioning sweep: iterations to tolerance as gamma -> 1
 (the figure-style claim motivating Krylov iPI: VI cost grows ~1/(1-gamma),
-iGMRES-PI stays flat)."""
+iGMRES-PI stays flat), plus the preconditioned leg (``-pc_type jacobi``)
+showing the Jacobi-scaled Krylov inner solves hold up in the hardest
+regime.
+
+``MADUPITE_BENCH_SCALE`` (default 1.0) scales the chain length so CI can
+run a quick leg (e.g. ``MADUPITE_BENCH_SCALE=0.02``)."""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -11,23 +17,32 @@ import jax
 from repro.core import IPIOptions, generators
 from repro.core.driver import solve
 
+SCALE = float(os.environ.get("MADUPITE_BENCH_SCALE", "1.0"))
+
 GAMMAS = [0.9, 0.99, 0.999, 0.9999]
+
+# (tag, method, pc_type)
+LEGS = [("vi", "vi", "none"),
+        ("ipi_gmres", "ipi_gmres", "none"),
+        ("ipi_gmres+jacobi", "ipi_gmres", "jacobi")]
 
 
 def run(csv_rows: list):
     jax.config.update("jax_enable_x64", True)
+    n = max(int(2_000 * SCALE), 64)
+    scale_tag = "" if SCALE == 1.0 else f";scale={SCALE}"
     for gamma in GAMMAS:
-        mdp = generators.chain_walk(2_000, gamma=gamma)
-        for method in ("vi", "ipi_gmres"):
+        mdp = generators.chain_walk(n, gamma=gamma)
+        for tag, method, pc in LEGS:
             opts = IPIOptions(method=method, atol=1e-8, dtype="float64",
                               max_outer=2_000_000 if method == "vi" else 500,
-                              max_inner=2000)
+                              max_inner=2000, pc_type=pc)
             t0 = time.time()
             r = solve(mdp, opts, chunk=4096)
             wall = time.time() - t0
             total = r.outer_iterations + r.inner_iterations
             csv_rows.append((
-                f"conditioning/gamma={gamma}/{method}", wall * 1e6,
-                f"total_iters={total};converged={r.converged}"))
-            print(f"  gamma={gamma:7} {method:10s} total_iters={total:8d} "
+                f"conditioning/gamma={gamma}/{tag}", wall * 1e6,
+                f"total_iters={total};converged={r.converged}{scale_tag}"))
+            print(f"  gamma={gamma:7} {tag:18s} total_iters={total:8d} "
                   f"wall={wall:6.2f}s", flush=True)

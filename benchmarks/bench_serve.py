@@ -14,8 +14,10 @@ Two measurements:
 * ``poisson`` — the same workload arriving on a seeded Poisson clock;
   p50/p95 request latency and throughput, batched server vs a
   no-batching server (``-serve_max_batch 1``, sequential dispatch
-  discipline).  The warm-up wave replays the identical arrival schedule
-  so the timed wave runs warm slots.
+  discipline) vs a deadline-bounded server (``-serve_deadline_ms``
+  closes the batching window early for latency-sensitive requests).
+  The warm-up wave replays the identical arrival schedule so the timed
+  wave runs warm slots.
 
 Run directly:  PYTHONPATH=src:. python -m benchmarks.bench_serve
 or via:        PYTHONPATH=src:. python -m benchmarks.run --only serve
@@ -132,11 +134,16 @@ def run(rows) -> None:
           f"dispatches={dispatches} "
           f"cache_hit_rate={pc['hit_rate']:.2f}", flush=True)
 
-    # -- Poisson arrivals: batched vs no-batching dispatch ------------------ #
+    # -- Poisson arrivals: batched vs no-batching vs deadline-bounded ------- #
+    # the deadline leg keeps the 10 ms window but bounds every request's
+    # queue wait at 2 ms (-serve_deadline_ms): tail latency should drop
+    # toward the nobatch leg while keeping some coalescing
     rate = 400.0
     legs = [("batched", {"-serve_batch_window": 0.01}),
             ("nobatch", {"-serve_max_batch": 1,
-                         "-serve_batch_window": 0.0})]
+                         "-serve_batch_window": 0.0}),
+            ("deadline2ms", {"-serve_batch_window": 0.01,
+                             "-serve_deadline_ms": 2.0})]
     for tag, extra in legs:
         with Server({**OPTS, **extra}) as srv:
             # warm every pow2 slot, then replay the identical seeded

@@ -28,11 +28,14 @@ import numpy as np
 
 from repro.core import IPIOptions, generators
 from repro.core.driver import solve
-from repro.core.methods import method_names
+from repro.core.methods import get_method, method_names
 
 SCALE = float(os.environ.get("MADUPITE_BENCH_SCALE", "1.0"))
 
-METHODS = [m for m in method_names(builtin_only=True) if m != "pi"]
+# pi is exact policy iteration (dense solves, different cost model);
+# virtual methods (auto) are drivers over these, not methods of their own
+METHODS = [m for m in method_names(builtin_only=True)
+           if m != "pi" and not get_method(m).virtual]
 
 
 def _n(n: int, lo: int = 64) -> int:

@@ -20,6 +20,8 @@ Tables:
                   from_functions million-state construction
   serve         — batched serving vs sequential solves (>= 2x claim) +
                   Poisson-arrival latency quantiles
+  adaptive      — -method auto vs fixed methods (within 1.3x of best) +
+                  preconditioned-vs-plain GMRES on the outliers
   lm_substrate  — per-arch smoke train-step timing
 (roofline terms live in benchmarks/roofline.py -> results/roofline.json)
 """
@@ -33,15 +35,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: solvers,conditioning,kernels,scaling,"
-                         "batch,fleet,api,serve,lm_substrate")
+                         "batch,fleet,api,serve,adaptive,lm_substrate")
     ap.add_argument("--json-out", default=None,
                     help="path for the machine-readable results "
                          "(default: benchmarks/results/BENCH_batch.json)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_api, bench_batch, bench_conditioning,
-                            bench_fleet, bench_kernels, bench_lm_substrate,
-                            bench_scaling, bench_serve, bench_solvers)
+    from benchmarks import (bench_adaptive, bench_api, bench_batch,
+                            bench_conditioning, bench_fleet, bench_kernels,
+                            bench_lm_substrate, bench_scaling, bench_serve,
+                            bench_solvers)
     suites = {
         "solvers": bench_solvers.run,
         "conditioning": bench_conditioning.run,
@@ -51,6 +54,7 @@ def main() -> None:
         "fleet": bench_fleet.run,
         "api": bench_api.run,
         "serve": bench_serve.run,
+        "adaptive": bench_adaptive.run,
         "lm_substrate": bench_lm_substrate.run,
     }
     pick = args.only.split(",") if args.only else list(suites)

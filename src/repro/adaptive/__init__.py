@@ -1,0 +1,35 @@
+"""Adaptive solver driver: ``-method auto`` made first-class.
+
+madupite leaves method selection to the user; every benchmark table has a
+different winner, and the gap between the best and worst method on one
+instance spans orders of magnitude (the GMRES outliers).  This package
+closes the loop:
+
+* :mod:`repro.adaptive.probe` — a handful of cheap compiled VI iterations
+  distill an instance into a :class:`~repro.adaptive.probe.ProblemProfile`
+  (observed contraction, span-vs-norm ratio, probe residuals);
+* :mod:`repro.adaptive.rules` — an explainable ordered rule table maps the
+  profile to a (method, stop criterion, preconditioner) choice, plus the
+  stagnation escalation chain;
+* :mod:`repro.adaptive.supervisor` — between-chunks stagnation/divergence
+  detection (the generalized Chebyshev ``divtol`` bail-out);
+* :mod:`repro.adaptive.driver` — :func:`solve_adaptive`, which runs
+  probe -> select -> supervised solve and hot-swaps mid-solve by resuming
+  the current :class:`~repro.core.ipi.SolveState` under the next method.
+
+The user surface is ``-method auto`` (plus ``-probe_iters``,
+``-adapt_on_stagnation``, ``-pc_type``) through
+:class:`repro.api.Session` — this package is the engine behind it.
+"""
+
+from repro.adaptive.driver import AdaptiveReport, solve_adaptive
+from repro.adaptive.probe import ProblemProfile, estimate_contraction, probe
+from repro.adaptive.rules import MethodChoice, escalate, explain, \
+    select_method
+from repro.adaptive.supervisor import StagnationSupervisor
+
+__all__ = [
+    "AdaptiveReport", "MethodChoice", "ProblemProfile",
+    "StagnationSupervisor", "escalate", "estimate_contraction", "explain",
+    "probe", "select_method", "solve_adaptive",
+]

@@ -86,12 +86,13 @@ def method_table(*, builtin_only: bool = True) -> str:
 
 def ksp_table(*, builtin_only: bool = True) -> str:
     """The inner-solver (KSP) registry as a markdown table."""
-    lines = ["| ksp | deterministic_dots | description |",
-             "|-----|--------------------|-------------|"]
+    lines = ["| ksp | deterministic_dots | precond | description |",
+             "|-----|--------------------|---------|-------------|"]
     for name in ksp_names(builtin_only=builtin_only):
         s = get_ksp(name)
         det = "yes" if s.deterministic else "—"
-        lines.append(f"| `{s.name}` | {det} | "
+        pc = "yes" if s.preconditioned else "—"
+        lines.append(f"| `{s.name}` | {det} | {pc} | "
                      f"{s.doc.replace('|', chr(92) + '|')} |")
     return "\n".join(lines)
 

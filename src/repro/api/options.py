@@ -44,6 +44,7 @@ ENV_VAR = "MADUPITE_OPTIONS"
 _SOURCES = {"default": 0, "env": 1, "cli": 2, "user": 3}
 
 _LAYOUT_CHOICES = ("auto", "single", "1d", "2d", "fleet", "fleet2d")
+_PC_TYPES = ("none", "jacobi", "bjacobi")
 
 
 class UnknownOptionError(KeyError):
@@ -224,6 +225,28 @@ _SPECS = [
                "pin the GMRES projection accumulation order so "
                "fleet-sharded Krylov values are bit-equal to the "
                "replicated layout"),
+    OptionSpec("-pc_type", str, "none",
+               "right preconditioner for Krylov inner solvers: jacobi "
+               "(diagonal of I - gamma P_pi) or bjacobi (shard-local "
+               "dense blocks, PETSc-style); matrix-free compatible",
+               choices=_PC_TYPES),
+    OptionSpec("-pc_block", int, 32,
+               "bjacobi block size (states per dense block, per shard)",
+               validate=_positive("pc_block")),
+    OptionSpec("-divtol", float, 1e4,
+               "declare divergence (sticky SolveState.diverged flag, "
+               "loop bail-out) when the residual exceeds divtol x the "
+               "initial residual",
+               validate=lambda v: None if v > 1.0
+               else f"must be > 1, got {v}"),
+    OptionSpec("-probe_iters", int, 8,
+               "-method auto: compiled probe iterations used to estimate "
+               "contraction / residual decay before picking the method",
+               validate=_positive("probe_iters")),
+    OptionSpec("-adapt_on_stagnation", bool, False,
+               "watch any solve (fixed -method too) for stagnation or "
+               "divergence between chunks and hot-swap to the next method "
+               "in the escalation chain, resuming from the current state"),
     OptionSpec("-kernel_impl", str, None,
                "kernel implementation (auto = blocked XLA on CPU, Pallas "
                "on TPU, with autotuned tiles); '-impl' is accepted as an "
@@ -320,6 +343,11 @@ _SPECS = [
                "keyed by shape bucket (hit/miss/eviction counters in "
                "Server.stats())",
                validate=_positive("serve_program_cache")),
+    OptionSpec("-serve_deadline_ms", float, None,
+               "serving: per-request latency budget; the scheduler cuts "
+               "its coalescing linger short so the request dispatches "
+               "before its deadline (default: no deadline)",
+               nullable=True, validate=_positive("serve_deadline_ms")),
     OptionSpec("-serve_slot_policy", str, "mid2",
                "serving: fleet-slot sizing — mid2 pads each bucket's "
                "request count up on the pow2-with-midpoints grid "
@@ -355,7 +383,8 @@ _IPI_FIELDS = {
     "-kernel_impl": "impl", "-dtype": "dtype",
     "-halo": "halo", "-gather_dtype": "gather_dtype",
     "-comm_overlap": "comm_overlap", "-async_sweeps": "async_sweeps",
-    "-monitor_mode": "monitor_mode",
+    "-monitor_mode": "monitor_mode", "-pc_type": "pc_type",
+    "-pc_block": "pc_block", "-divtol": "divtol",
 }
 
 

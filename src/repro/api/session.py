@@ -98,6 +98,10 @@ class Session:
         # concurrently from scheduler/client threads (repro.serve), and
         # interleaved -file_stats jsonl appends must stay line-atomic
         self._io_lock = threading.RLock()
+        # -method auto probe results, keyed by the problem family
+        # (n, m, gamma, mode): repeat solves of the same family skip the
+        # probe phase and reuse the rule-table choice
+        self._auto_cache: dict = {}
         _sync_x64(self.options)
         self._apply_kernel_options()
 
@@ -254,6 +258,8 @@ class Session:
                                                   stop_criterion)
         mdp = self._wrap(mdp, opts)
         ipi = self._ipi(opts, mdp.mode)
+        spec = _methods.get_method(ipi.method)
+        adaptive_on = spec.virtual or bool(opts.get("-adapt_on_stagnation"))
         mesh, layout = self.placement(opts)
         core = mdp.place(mesh, layout, mode=ipi.mode,
                          materialize=opts.get("-mdp_materialize"))
@@ -262,14 +268,34 @@ class Session:
         if mdp.deferred and isinstance(core, MatrixFreeMDP):
             self._mf_mdps.add(mdp)
         t0 = time.time()
-        r = driver.solve(core, ipi, mesh=mesh, layout=layout,
-                         checkpoint_dir=opts.get("-checkpoint_dir"),
-                         chunk=opts.get("-chunk"),
-                         verbose=opts.get("-verbose"), monitor=mon_cb)
+        report = None
+        if adaptive_on:
+            # virtual methods (-method auto) probe + select, then run
+            # supervised; concrete methods under -adapt_on_stagnation skip
+            # the probe but get the same stagnation hot-swap safety net
+            from repro.adaptive import solve_adaptive
+            key = None
+            choice = None
+            if spec.virtual:
+                key = (int(mdp.n), int(mdp.m), float(mdp.gamma), ipi.mode)
+                choice = self._auto_cache.get(key)
+            r, report = solve_adaptive(
+                core, ipi, mesh=mesh, layout=layout,
+                probe_iters=opts.get("-probe_iters"), choice=choice,
+                checkpoint_dir=opts.get("-checkpoint_dir"),
+                chunk=opts.get("-chunk"), verbose=opts.get("-verbose"),
+                monitor=mon_cb)
+            if key is not None and report.choice is not None:
+                self._auto_cache[key] = report.choice
+        else:
+            r = driver.solve(core, ipi, mesh=mesh, layout=layout,
+                             checkpoint_dir=opts.get("-checkpoint_dir"),
+                             chunk=opts.get("-chunk"),
+                             verbose=opts.get("-verbose"), monitor=mon_cb)
         wall = time.time() - t0
         r = _trim(r, mdp.n)
         self._record([r], [mdp], ipi, opts, mesh, layout, wall, fleet=None,
-                     monitor=mon_records)
+                     monitor=mon_records, adaptive=report)
         self._write_outputs([r], opts)
         return r
 
@@ -301,16 +327,29 @@ class Session:
                              f"{sorted(modes)}; solve mixed-mode instances "
                              f"separately")
         ipi = self._ipi(opts, modes.pop())
+        spec = _methods.get_method(ipi.method)
         buckets = bucket_indices([m.n for m in wrapped],
                                  policy=opts.get("-fleet_bucketing"))
         ckpt = opts.get("-checkpoint_dir")
         results: list[SolveResult | None] = [None] * len(wrapped)
+        auto_choices: list[dict] | None = [] if spec.virtual else None
         t0 = time.time()
         for j, bucket in enumerate(buckets):
             mesh, layout = self.placement(opts, fleet_size=len(bucket))
             bucket_ckpt = ckpt if ckpt is None or len(buckets) == 1 \
                 else os.path.join(ckpt, f"bucket{j}")
             bmdps = [wrapped[i] for i in bucket]
+            bucket_ipi = ipi
+            if spec.virtual:
+                # fleets resolve the virtual method ONCE per bucket: probe
+                # the bucket's largest instance on a single device and fix
+                # the rule-table choice for the whole batched program (no
+                # mid-solve supervision — a hot-swap would split the batch)
+                bucket_ipi, choice = self._resolve_auto(bmdps, ipi, opts)
+                auto_choices.append(dict(
+                    bucket=j, method=choice.method, pc_type=choice.pc_type,
+                    stop_criterion=choice.stop_criterion,
+                    reason=choice.reason))
             payload = self._fleet_cores(bmdps, mesh, layout, ipi.mode, opts)
             origin = None if isinstance(payload, list) else \
                 (len(bmdps), max(m.n for m in bmdps))
@@ -319,7 +358,7 @@ class Session:
             bucket_cb = mon_cb if mon_cb is None or len(buckets) == 1 \
                 else (lambda rec, _j=j: mon_cb({**rec, "bucket": _j}))
             rs = driver.solve_many(
-                payload, ipi, mesh=mesh, layout=layout,
+                payload, bucket_ipi, mesh=mesh, layout=layout,
                 pad_fleet=opts.get("-pad_fleet"), origin=origin,
                 checkpoint_dir=bucket_ckpt, chunk=opts.get("-chunk"),
                 verbose=opts.get("-verbose"), monitor=bucket_cb)
@@ -327,10 +366,12 @@ class Session:
                 results[i] = _trim(r, wrapped[i].n)
         wall = time.time() - t0
         mesh, layout = self.placement(opts, fleet_size=len(wrapped))
+        fleet_info = dict(size=len(wrapped),
+                          buckets=[sorted(b) for b in buckets])
+        if auto_choices is not None:
+            fleet_info["auto"] = auto_choices
         self._record(results, wrapped, ipi, opts, mesh, layout, wall,
-                     fleet=dict(size=len(wrapped),
-                                buckets=[sorted(b) for b in buckets]),
-                     monitor=mon_records)
+                     fleet=fleet_info, monitor=mon_records)
         self._write_outputs(results, opts)
         return results  # type: ignore[return-value]
 
@@ -427,8 +468,33 @@ class Session:
             ipi = dataclasses.replace(ipi, mode=mdp_mode)
         return ipi
 
+    def _resolve_auto(self, bmdps: list[MDP], ipi, opts: Options):
+        """Resolve a virtual method for one fleet bucket: probe the
+        bucket's largest instance single-device, run the rule table, and
+        return ``(concrete IPIOptions, MethodChoice)``.  Choices are cached
+        per problem family (n, m, gamma, mode) so homogeneous fleets probe
+        exactly once."""
+        from repro.adaptive import probe, select_method
+        rep = max(bmdps, key=lambda m: m.n)
+        key = (int(rep.n), int(rep.m), float(rep.gamma), ipi.mode)
+        choice = self._auto_cache.get(key)
+        if choice is None:
+            core = rep.place(None, "1d", mode=ipi.mode,
+                             materialize=opts.get("-mdp_materialize"))
+            profile, _ = probe(core, ipi,
+                               probe_iters=opts.get("-probe_iters"))
+            choice = select_method(
+                profile, deterministic_dots=ipi.deterministic_dots)
+            self._auto_cache[key] = choice
+        resolved = dataclasses.replace(
+            ipi, method=choice.method,
+            stop_criterion=choice.stop_criterion,
+            pc_type=choice.pc_type if ipi.pc_type == "none"
+            else ipi.pc_type)
+        return resolved, choice
+
     def _record(self, results, mdps, ipi, opts: Options, mesh, layout: str,
-                wall: float, *, fleet, monitor=None) -> None:
+                wall: float, *, fleet, monitor=None, adaptive=None) -> None:
         entry = {
             "method": ipi.method,
             "mode": ipi.mode,
@@ -443,6 +509,7 @@ class Session:
                     "n": int(m.n), "m": int(m.m),
                     "gamma": float(m.gamma),
                     "converged": bool(r.converged),
+                    "diverged": bool(getattr(r, "diverged", False)),
                     "outer_iterations": int(r.outer_iterations),
                     "inner_iterations": int(r.inner_iterations),
                     "residual": float(r.residual),
@@ -451,6 +518,8 @@ class Session:
                 for m, r in zip(mdps, results)
             ],
         }
+        if adaptive is not None:
+            entry["adaptive"] = adaptive.as_dict()
         if fleet is not None:
             fleet = dict(fleet, cache=self._fleet_cache.stats())
             entry["fleet"] = fleet

@@ -66,11 +66,17 @@ class SolveResult:
     inner_iterations: int
     trace_residual: np.ndarray     # (outer+1,)
     trace_inner: np.ndarray        # (outer,)
+    diverged: bool = False         # residual went NaN or blew past
+                                   # opts.divtol * res0 — the solve stopped
+                                   # early and v/policy are NOT certified
+    span: float = float("inf")     # final sp(T v - v) (inf unless the stop
+                                   # criterion declared needs_span)
 
     def summary(self) -> str:
+        flag = " DIVERGED" if self.diverged else ""
         return (f"converged={self.converged} outer={self.outer_iterations} "
                 f"inner={self.inner_iterations} residual={self.residual:.3e} "
-                f"gap<= {self.gap_bound:.3e}")
+                f"gap<= {self.gap_bound:.3e}{flag}")
 
 
 def _result(state: SolveState, opts: IPIOptions, gamma: float,
@@ -103,7 +109,9 @@ def _result(state: SolveState, opts: IPIOptions, gamma: float,
         outer_iterations=k,
         inner_iterations=int(state.inner_total),
         trace_residual=np.asarray(state.trace_res)[:k + 1],
-        trace_inner=np.asarray(state.trace_inner)[:k])
+        trace_inner=np.asarray(state.trace_inner)[:k],
+        diverged=bool(state.diverged),
+        span=float(state.span))
 
 
 def _validate_banded(mdp, halo: int, mesh, layout: str) -> None:
@@ -196,10 +204,15 @@ def _drain_monitor(mid: int, state: SolveState, done_prev, k_prev) -> None:
     k = np.asarray(jax.device_get(state.k))
     tr = np.asarray(jax.device_get(state.trace_res))
     ti = np.asarray(jax.device_get(state.trace_inner))
+    div_f = np.asarray(jax.device_get(state.diverged))
     if k.ndim == 0:
         for kk in range(int(k_prev) + 1, int(k) + 1):
+            # diverged flips exactly at the iteration the loop stopped on,
+            # so only the final reconstructed record can carry it — same
+            # sequence the stream emits
             methods.emit_host(mid, kk, float(tr[kk]),
-                              max(int(ti[kk - 1]), 0))
+                              max(int(ti[kk - 1]), 0),
+                              bool(div_f) and kk == int(k))
         return
     act_prev = ~np.asarray(done_prev)
     if not act_prev.any():
@@ -217,7 +230,9 @@ def _drain_monitor(mid: int, state: SolveState, done_prev, k_prev) -> None:
         col = np.where(~act_prev | np.isnan(col), res_f, col)
         inn = ti[:, kk - 1]
         inn = np.where(~act_prev | (inn < 0), 0, inn).astype(np.int32)
-        methods.emit_host(mid, kk, col, inn)
+        methods.emit_host(mid, kk, col, inn,
+                          div_f & (kk == k) if kk == k_hi
+                          else np.zeros_like(div_f))
 
 
 _RUN_CHUNK_CACHE: dict = {}
@@ -274,8 +289,8 @@ def _make_runners(dev_mdp, opts: IPIOptions, mesh, axes: Axes, batch,
         v=P(*lead, axes.state), tv=P(*lead, axes.state),
         pi=P(*lead, axes.state),
         res=scal, k=scal, inner_total=scal, trace_res=scal,
-        trace_inner=scal, res0=scal, span=scal, done=scal, n_true=scal,
-        win=win_spec)
+        trace_inner=scal, res0=scal, span=scal, done=scal, diverged=scal,
+        n_true=scal, win=win_spec)
     # Reuse one jit wrapper per (mesh, opts, axes, specs) so repeated solves
     # of same-shaped problems — a serving fleet, bench reps, the chunked
     # restart loop — hit jax's compilation cache instead of re-tracing a
@@ -334,7 +349,7 @@ def _trim_ckpt_state(state: SolveState, n_orig: int,
         k=lead(host.k), inner_total=lead(host.inner_total),
         trace_res=lead(host.trace_res), trace_inner=lead(host.trace_inner),
         res0=lead(host.res0), span=lead(host.span), done=lead(host.done),
-        n_true=lead(host.n_true),
+        diverged=lead(host.diverged), n_true=lead(host.n_true),
         # the exchanged window is mesh-dependent derived state (invariant
         # win == gather(v)); checkpoint it empty — restore zero-fills, i.e.
         # the k=0 iterate, a valid stale async restart window
@@ -375,7 +390,7 @@ def _restore_or_init(init, v0, checkpoint_dir, verbose, expect=None):
     values this solve requires — a mismatch means the directory holds some
     *other* problem's checkpoint, which zero-padding would otherwise
     silently absorb."""
-    if checkpoint_dir:
+    if checkpoint_dir and ckpt.latest_step(checkpoint_dir) is not None:
         like = jax.eval_shape(init, v0)
         restored = ckpt.restore(checkpoint_dir, like)
         if restored is not None:
@@ -395,10 +410,21 @@ def _restore_or_init(init, v0, checkpoint_dir, verbose, expect=None):
     return init(v0)
 
 
+def _reject_virtual(opts: IPIOptions) -> None:
+    if methods.get_method(opts.method).virtual:
+        raise ValueError(
+            f"method {opts.method!r} is a virtual (meta) method — the "
+            f"adaptive layer resolves it to a concrete solver first; use "
+            f"repro.api.Session.solve (which routes -method auto "
+            f"automatically) or repro.adaptive.solve_adaptive")
+
+
 def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
           mesh=None, layout: str = "1d", v0=None,
           checkpoint_dir: str | None = None, chunk: int = 64,
-          verbose: bool = False, monitor=None) -> SolveResult:
+          checkpoint_mode: str = "chunk",
+          verbose: bool = False, monitor=None, supervisor=None) \
+        -> SolveResult:
     """Solve an MDP until ``opts.stop_criterion`` is satisfied (default:
     ``||T v - v||_inf <= opts.atol``).
 
@@ -406,14 +432,32 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
     onto ``mesh`` and the identical loop runs SPMD under ``shard_map``.
 
     ``monitor`` (requires ``opts.monitor=True``) is a callable receiving one
-    dict per outer iteration — ``{"k", "res", "inner", "elapsed"}`` —
-    streamed out of the compiled loop via ``jax.debug.callback``; when
-    ``opts.monitor`` is set without a callable, records print PETSc-style
-    (:func:`repro.core.methods.print_monitor`).
+    dict per outer iteration — ``{"k", "res", "inner", "diverged",
+    "elapsed"}`` — streamed out of the compiled loop via
+    ``jax.debug.callback``; when ``opts.monitor`` is set without a callable,
+    records print PETSc-style (:func:`repro.core.methods.print_monitor`).
+
+    ``supervisor`` is a between-chunks hook for the adaptive layer: a
+    callable receiving ``{"k", "res", "k_prev", "res_prev", "diverged"}``
+    once per completed chunk; returning truthy interrupts the solve (the
+    current state is checkpointed when ``checkpoint_dir`` is set, so the
+    caller can resume it under different options — the hot-swap path).  A
+    diverged state interrupts the loop on its own.
+
+    ``checkpoint_mode`` controls when ``checkpoint_dir`` is written:
+    ``"chunk"`` (default) persists after every run chunk — the
+    fault-tolerance contract; ``"interrupt"`` writes only when the solve is
+    interrupted mid-flight (supervisor trigger or divergence), which is all
+    the adaptive hot-swap needs — supervised solves then pay zero
+    checkpoint overhead on the happy path.
     """
     if mdp.batch is not None:
         raise ValueError("solve() takes one MDP instance; for a batched "
                          "fleet use solve_many()")
+    _reject_virtual(opts)
+    if checkpoint_mode not in ("chunk", "interrupt"):
+        raise ValueError(f"checkpoint_mode={checkpoint_mode!r}: expected "
+                         f"'chunk' or 'interrupt'")
     if layout in partition.FLEET_LAYOUTS:
         raise ValueError(f"layout={layout!r} shards the fleet (instance) "
                          "dim, which a single solve() does not have; use "
@@ -436,6 +480,13 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
 
     state = _restore_or_init(init, v0, checkpoint_dir, verbose,
                              expect=dict(n=n_orig))
+    save_each = bool(checkpoint_dir) and checkpoint_mode == "chunk"
+
+    def save_state() -> None:
+        ckpt.save(checkpoint_dir, int(jax.device_get(state.k)),
+                  _trim_ckpt_state(state, n_orig, None),
+                  meta=dict(method=opts.method, n=n_orig))
+
     mid = 0
     if opts.monitor:
         mid = methods.monitor_handle(monitor or methods.print_monitor)
@@ -443,26 +494,40 @@ def solve(mdp: MDP, opts: IPIOptions = IPIOptions(), *,
         if mid:   # the k=0 (or resume-point) record, emitted host-side
             k0, res0 = jax.device_get((state.k, state.res))
             methods.emit_host(mid, int(k0), float(res0), 0)
+        prev = None
         while True:
-            # one host round-trip for the whole control tuple: three
-            # separate device_gets triple the per-chunk sync latency,
+            # one host round-trip for the whole control tuple: separate
+            # device_gets multiply the per-chunk sync latency,
             # which dominates warm small-n solves
-            k, res, done = jax.device_get((state.k, state.res, state.done))
-            k, res, done = int(k), float(res), bool(done)
+            k, res, done, div = jax.device_get(
+                (state.k, state.res, state.done, state.diverged))
+            k, res, done, div = int(k), float(res), bool(done), bool(div)
             if verbose:
-                print(f"[driver] k={k} residual={res:.3e}")
+                print(f"[driver] k={k} residual={res:.3e}"
+                      + (" DIVERGED" if div else ""))
             # NaN residual (inner-solver breakdown): neither "active" on
             # device nor "converged" here — bail out, don't spin forever.
-            if done or k >= opts.max_outer or np.isnan(res):
+            # Likewise a diverged flag (residual past divtol * res0).
+            if done or k >= opts.max_outer or np.isnan(res) or div:
+                # a NaN-poisoned state is not worth persisting: the resume
+                # path discards it anyway
+                if div and not np.isnan(res) and checkpoint_dir \
+                        and not save_each:
+                    save_state()
                 break
+            if supervisor is not None and prev is not None and supervisor(
+                    dict(k=k, res=res, k_prev=prev[0], res_prev=prev[1],
+                         diverged=div)):
+                if checkpoint_dir and not save_each:
+                    save_state()
+                break
+            prev = (k, res)
             k_hi = jnp.int32(min(k + chunk, opts.max_outer))
             state = run_chunk(dev_mdp, state, k_hi, jnp.int32(mid))
             if mid and opts.monitor_mode == "chunk":
                 _drain_monitor(mid, state, None, k)
-            if checkpoint_dir:
-                ckpt.save(checkpoint_dir, int(jax.device_get(state.k)),
-                          _trim_ckpt_state(state, n_orig, None),
-                          meta=dict(method=opts.method, n=n_orig))
+            if save_each:
+                save_state()
     finally:
         if mid:
             jax.effects_barrier()   # flush in-flight monitor callbacks
@@ -521,6 +586,7 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
     checkpoint meta would record the mesh-padded shapes and refuse an
     elastic resume on a differently-padding mesh.
     """
+    _reject_virtual(opts)
     if isinstance(mdps, (EllMDP, DenseMDP, MatrixFreeMDP)):
         if mdps.batch is None:
             raise ValueError("solve_many() wants a fleet; for a single "
@@ -590,10 +656,11 @@ def solve_many(mdps: Sequence[MDP] | MDP, opts: IPIOptions = IPIOptions(), *,
                               np.zeros(dev_mdp.batch, np.int32))
         while True:
             # one host round-trip per chunk (see the solve() loop)
-            k, res, crit = (np.asarray(x) for x in jax.device_get(
-                (state.k, state.res, state.done)))
-            # isnan: a broken-down lane is not device-active -> count it done
-            done = crit | (k >= opts.max_outer) | np.isnan(res)
+            k, res, crit, div = (np.asarray(x) for x in jax.device_get(
+                (state.k, state.res, state.done, state.diverged)))
+            # isnan / diverged: a broken-down lane is not device-active ->
+            # count it done (its result reports diverged, not converged)
+            done = crit | (k >= opts.max_outer) | np.isnan(res) | div
             if verbose:
                 n_act = int((~done).sum())
                 print(f"[driver] fleet B={len(k)} active={n_act} "

@@ -69,7 +69,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import bellman, methods
+from repro.core import bellman, methods, solvers
 from repro.core.comm import Axes
 from repro.core.mdp import MDP, batch_parts
 
@@ -130,6 +130,15 @@ class IPIOptions:
                                 # margins (driver-set from
                                 # partition.overlap_margins; not a user
                                 # option — compiled programs key on it)
+    pc_type: str = "none"       # Krylov inner-solve preconditioner:
+                                # none | jacobi (diag of I - gamma P_pi) |
+                                # bjacobi (shard-local pc_block tiles)
+    pc_block: int = 32          # bjacobi tile size
+    divtol: float = 1e4         # declare divergence when the Bellman
+                                # residual exceeds divtol * (initial
+                                # residual) or goes NaN; the solve stops
+                                # with SolveState.diverged set (the
+                                # adaptive supervisor's hot-swap trigger)
 
     def __post_init__(self):
         # Raised (not assert'd): option validation must survive `python -O`.
@@ -168,6 +177,33 @@ class IPIOptions:
                 f"does not implement — its dots would still re-associate "
                 f"by lane count; use a deterministic ksp (e.g. "
                 f"gmres/richardson/chebyshev) or drop the flag")
+        if self.pc_type not in ("none", "jacobi", "bjacobi"):
+            raise ValueError(f"pc_type must be 'none', 'jacobi' or "
+                             f"'bjacobi', got {self.pc_type!r}")
+        if self.pc_type != "none" and not spec.virtual:
+            if spec.ksp is None:
+                raise ValueError(
+                    f"pc_type {self.pc_type!r} preconditions the Krylov "
+                    f"inner solve, but method {self.method!r} has no inner "
+                    f"KSP; pick an ipi_* method (or -method auto) or drop "
+                    f"-pc_type")
+            if not methods.get_ksp(spec.ksp).preconditioned:
+                raise ValueError(
+                    f"ksp {spec.ksp!r} (method {self.method!r}) does not "
+                    f"accept a preconditioner; register it with "
+                    f"preconditioned=True (and a `precond` keyword) or use "
+                    f"gmres/bicgstab")
+            if self.pc_type == "bjacobi" and self.deterministic_dots:
+                raise ValueError(
+                    "pc_type 'bjacobi' applies batched tile inverses whose "
+                    "accumulation order is not lane-count-pinned; under "
+                    "deterministic_dots use pc_type 'jacobi' (elementwise) "
+                    "or drop the flag")
+        if self.pc_block < 1:
+            raise ValueError(f"pc_block must be >= 1, got {self.pc_block}")
+        if not self.divtol > 1.0:
+            raise ValueError(f"divtol must be > 1 (residual growth factor "
+                             f"declaring divergence), got {self.divtol}")
         if self.restart < 1:
             raise ValueError(f"restart must be >= 1, got {self.restart}")
         if self.mpi_sweeps < 1:
@@ -233,6 +269,10 @@ class SolveState:
     span: jax.Array         # scalar, sp(T v - v) over the TRUE states (inf
                             # unless the stop criterion declared needs_span)
     done: jax.Array         # scalar bool, stop criterion satisfied
+    diverged: jax.Array     # scalar bool (sticky): residual went NaN or
+                            # exceeded divtol * res0 — the loop stops and
+                            # the flag surfaces through SolveResult /
+                            # monitor records / run stats
     n_true: jax.Array       # scalar int32, unpadded state count: mesh-pad
                             # rows are absorbing zero-cost states whose 0
                             # residual must not enter the span min
@@ -298,7 +338,8 @@ def init_state(mdp: MDP, axes: Axes, opts: IPIOptions,
         inner_total=jnp.int32(0),
         trace_res=trace_res.at[0].set(res),
         trace_inner=jnp.full((opts.max_outer,), -1, jnp.int32),
-        res0=res, span=span, done=done, n_true=nt, win=win)
+        res0=res, span=span, done=done, diverged=jnp.isnan(res),
+        n_true=nt, win=win)
 
 
 @partial(jax.jit, static_argnames=("opts", "axes"))
@@ -365,8 +406,17 @@ def _outer_core(mdp: MDP, state: SolveState, opts: IPIOptions,
                                            gather_dtype=gd, gamma_t=gamma_t)
     tol = jnp.maximum(opts.forcing_eta * state.res, jnp.float32(1e-30))
     gamma = gamma_t if gamma_t is not None else mdp.gamma
+    precond = None
+    if opts.pc_type != "none" and spec.ksp is not None:
+        # rebuilt per outer iteration from the policy-rows transient the
+        # matvec already needs — matrix-free MDPs pay no extra memory
+        precond = solvers.build_precond(
+            rows, axes=axes, n_local=mdp.n_local, gamma=gamma,
+            pc_type=opts.pc_type, block=opts.pc_block,
+            dtype=state.tv.dtype)
     v1, inner_iters, _ = methods.inner_solve(
-        opts, matvec, b, state.tv, tol, axes, context=dict(gamma=gamma))
+        opts, matvec, b, state.tv, tol, axes, context=dict(gamma=gamma),
+        precond=precond)
 
     def eval_at(v):
         # exact gather; opts.overlap_plan switches in the communication-
@@ -400,13 +450,15 @@ def outer_step(mdp: MDP, state: SolveState, opts: IPIOptions,
     g = gamma_t if gamma_t is not None else mdp.gamma
     done = methods.stop_done(opts, res=res1, span=span1, res0=state.res0,
                              k=k1, gamma=g)
+    div1 = state.diverged | jnp.isnan(res1) | \
+        (res1 > opts.divtol * jnp.maximum(state.res0, 1e-30))
     return SolveState(
         v=v1, tv=tv1, pi=pi1, res=res1, k=k1,
         inner_total=state.inner_total + inner_iters,
         trace_res=state.trace_res.at[k1].set(res1),
         trace_inner=state.trace_inner.at[state.k].set(inner_iters),
-        res0=state.res0, span=span1, done=done, n_true=state.n_true,
-        win=win1)
+        res0=state.res0, span=span1, done=done, diverged=div1,
+        n_true=state.n_true, win=win1)
 
 
 def _lead_flag(axes: Axes) -> jax.Array:
@@ -436,13 +488,15 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
     """
     if mdp.batch is None:
         def cond(s: SolveState):
-            return (~s.done) & ~jnp.isnan(s.res) & (s.k < k_hi)
+            return (~s.done) & ~jnp.isnan(s.res) & (~s.diverged) & \
+                (s.k < k_hi)
 
         def body(s: SolveState) -> SolveState:
             s1 = outer_step(mdp, s, opts, axes)
             if opts.monitor and opts.monitor_mode == "stream":
                 methods.emit_monitor(mon_id, _lead_flag(axes), s1.k, s1.res,
-                                     s1.inner_total - s.inner_total)
+                                     s1.inner_total - s.inner_total,
+                                     s1.diverged)
             return s1
 
         return jax.lax.while_loop(cond, body, state)
@@ -459,7 +513,7 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
         in_axes=(in_ax, 0, None if gamma_t is None else 0))
 
     def active(s: SolveState) -> jax.Array:
-        return (~s.done) & ~jnp.isnan(s.res) & (s.k < k_hi)
+        return (~s.done) & ~jnp.isnan(s.res) & (~s.diverged) & (s.k < k_hi)
 
     def body(s: SolveState) -> SolveState:
         act = active(s)
@@ -470,6 +524,8 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
         g = gamma_t if gamma_t is not None else mdp.gamma
         done1 = methods.stop_done(opts, res=res1, span=span1, res0=s.res0,
                                   k=k1, gamma=g)
+        div1 = s.diverged | (act & (jnp.isnan(res1) | (
+            res1 > opts.divtol * jnp.maximum(s.res0, 1e-30))))
         # Lockstep: all active lanes write outer index k_col; frozen lanes
         # keep their old column value.
         k_col = jnp.max(jnp.where(act, k1, 0))
@@ -485,8 +541,8 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
                 s.trace_inner, inner_col[:, None], (jnp.int32(0),
                                                     k_col - 1)),
             res0=s.res0, span=sel(span1, s.span),
-            done=jnp.where(act, done1, s.done), n_true=s.n_true,
-            win=sel(win1, s.win))
+            done=jnp.where(act, done1, s.done), diverged=div1,
+            n_true=s.n_true, win=sel(win1, s.win))
         if opts.monitor and opts.monitor_mode == "stream":
             # One fleet-wide record per outer iteration: gather the
             # per-instance rows over the fleet axis (every shard runs the
@@ -494,7 +550,8 @@ def solve_chunk(mdp: MDP, state: SolveState, k_hi: jax.Array,
             methods.emit_monitor(
                 mon_id, _lead_flag(axes),
                 axes.pmax_fleet(k_col), axes.allgather_fleet(s1.res),
-                axes.allgather_fleet(jnp.where(act, inner, 0)))
+                axes.allgather_fleet(jnp.where(act, inner, 0)),
+                axes.allgather_fleet(s1.diverged))
         return s1
 
     # The loop condition is all-reduced over the fleet axis: every fleet

@@ -80,14 +80,18 @@ class KSPSpec:
 
     name: str
     fn: Callable                 # normalized: fn(matvec, b, x0, tol, maxiter,
-    #                              axes, opts, context) -> (x, iters, res)
+    #                              axes, opts, context, precond)
+    #                              -> (x, iters, res)
     doc: str = ""
     deterministic: bool = False  # honors -deterministic_dots (its arithmetic
     #                              is invariant to the vmapped lane count)
     builtin: bool = False
+    preconditioned: bool = False  # accepts a `precond` apply (-pc_type)
 
-    def call(self, matvec, b, x0, *, tol, maxiter, axes, opts, context):
-        return self.fn(matvec, b, x0, tol, maxiter, axes, opts, context)
+    def call(self, matvec, b, x0, *, tol, maxiter, axes, opts, context,
+             precond=None):
+        return self.fn(matvec, b, x0, tol, maxiter, axes, opts, context,
+                       precond)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +113,10 @@ class MethodSpec:
     #                              span/stop bookkeeping stays shared.  Such
     #                              methods get SolveState.win maintained
     #                              (the last exchanged value window).
+    virtual: bool = False        # meta-method (e.g. "auto"): validates in the
+    #                              options layer but is resolved to a concrete
+    #                              method by repro.adaptive before any compiled
+    #                              loop runs; driver.solve rejects it directly.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,9 +164,10 @@ def _normalize_ksp_fn(fn: Callable) -> Callable:
     """Adapt a user solver to the internal calling convention.
 
     ``fn(matvec, b, x0, *, tol, maxiter, axes)`` is the minimal contract;
-    ``opts`` (static :class:`IPIOptions`) and ``context`` (traced per-solve
-    values, e.g. ``gamma``) are forwarded only when the signature accepts
-    them (or has ``**kwargs``).
+    ``opts`` (static :class:`IPIOptions`), ``context`` (traced per-solve
+    values, e.g. ``gamma``) and ``precond`` (the optional ``-pc_type``
+    apply) are forwarded only when the signature accepts them (or has
+    ``**kwargs``).
     """
     try:
         params = inspect.signature(fn).parameters
@@ -169,12 +178,14 @@ def _normalize_ksp_fn(fn: Callable) -> Callable:
     accepts = (lambda name: True) if (params is None or var_kw) else \
         (lambda name: name in params)
 
-    def call(matvec, b, x0, tol, maxiter, axes, opts, context):
+    def call(matvec, b, x0, tol, maxiter, axes, opts, context, precond=None):
         kw = dict(tol=tol, maxiter=maxiter, axes=axes)
         if accepts("opts"):
             kw["opts"] = opts
         if accepts("context"):
             kw["context"] = context
+        if accepts("precond"):
+            kw["precond"] = precond
         return fn(matvec, b, x0, **kw)
 
     return call
@@ -208,6 +219,7 @@ def _check_free(registry: Mapping[str, Any], kind: str, name: str,
 
 def register_ksp(name: str, fn: Callable | None = None, *, doc: str = "",
                  deterministic: bool = False, auto_method: bool = True,
+                 preconditioned: bool = False,
                  overwrite: bool = False, _builtin: bool = False):
     """Register an inner linear solver (usable as a decorator).
 
@@ -218,16 +230,20 @@ def register_ksp(name: str, fn: Callable | None = None, *, doc: str = "",
     solver selectable via ``-ksp_type name`` everywhere options are
     ingested.  ``deterministic=True`` declares the solver's arithmetic
     batch-invariant (legal under ``-deterministic_dots``).
+    ``preconditioned=True`` declares that the solver accepts a ``precond``
+    keyword (an apply ``x -> M x``) and therefore honors ``-pc_type``.
     """
     if fn is None:
         return lambda f: register_ksp(name, f, doc=doc,
                                       deterministic=deterministic,
                                       auto_method=auto_method,
+                                      preconditioned=preconditioned,
                                       overwrite=overwrite, _builtin=_builtin)
     _check_free(_KSPS, "ksp", name, overwrite)
     spec = KSPSpec(name=name, fn=_normalize_ksp_fn(fn),
                    doc=doc or (fn.__doc__ or "").strip().split("\n")[0],
-                   deterministic=deterministic, builtin=_builtin)
+                   deterministic=deterministic, builtin=_builtin,
+                   preconditioned=preconditioned)
     _KSPS[name] = spec
     if auto_method and f"ipi_{name}" not in _METHODS:
         register_method(f"ipi_{name}", ksp=name, inner="forcing",
@@ -239,13 +255,16 @@ def register_ksp(name: str, fn: Callable | None = None, *, doc: str = "",
 
 def register_method(name: str, *, ksp: str | None, inner: str = "forcing",
                     safeguarded: bool = True, doc: str = "",
-                    outer: Callable | None = None,
+                    outer: Callable | None = None, virtual: bool = False,
                     overwrite: bool = False, _builtin: bool = False) \
         -> MethodSpec:
     """Register an outer method: which KSP runs the policy-evaluation step
     and under which inner-stopping policy (see :data:`INNER_POLICIES`) —
     or, with ``outer``, a full custom outer iteration (e.g. ``async_vi``)
-    that replaces the inner-solve/backup core entirely."""
+    that replaces the inner-solve/backup core entirely.  ``virtual=True``
+    marks a meta-method (like the builtin ``auto``) that never reaches a
+    compiled loop itself: the adaptive layer resolves it to a concrete
+    method first."""
     _check_free(_METHODS, "method", name, overwrite)
     if inner not in INNER_POLICIES:
         raise ValueError(f"inner policy must be one of {INNER_POLICIES}, "
@@ -255,12 +274,15 @@ def register_method(name: str, *, ksp: str | None, inner: str = "forcing",
     if outer is not None and ksp is not None:
         raise ValueError(f"method {name!r}: a custom outer iteration "
                          f"replaces the inner solve — pass ksp=None")
+    if virtual and (ksp is not None or outer is not None):
+        raise ValueError(f"method {name!r}: virtual methods carry no "
+                         f"solver — pass ksp=None, outer=None")
     if (ksp is None) != (inner == "none"):
         raise ValueError(f"method {name!r}: ksp=None requires inner='none' "
                          f"(and vice versa), got ksp={ksp!r} inner={inner!r}")
     spec = MethodSpec(name=name, ksp=ksp, inner=inner,
                       safeguarded=safeguarded, doc=doc, builtin=_builtin,
-                      outer=outer)
+                      outer=outer, virtual=virtual)
     _METHODS[name] = spec
     return spec
 
@@ -411,13 +433,15 @@ def method_for_ksp(ksp: str) -> str:
 # --------------------------------------------------------------------------- #
 
 def inner_solve(opts, matvec, b, x0, forcing_tol, axes: Axes, *,
-                context: Mapping[str, Any] | None = None):
+                context: Mapping[str, Any] | None = None, precond=None):
     """Run ``opts.method``'s inner policy-evaluation solve.
 
     Returns ``(x, iters, resnorm)``.  ``forcing_tol`` is the iPI forcing
     term ``eta * ||T v - v||_inf`` (already floored); the method's inner
     policy decides whether it, a fixed sweep count, or a tight absolute
-    tolerance bounds the KSP.
+    tolerance bounds the KSP.  ``precond`` (the ``-pc_type`` apply for the
+    current policy's system) is forwarded to KSPs that declared
+    ``preconditioned=True``.
     """
     spec = get_method(opts.method)
     if spec.ksp is None:
@@ -430,7 +454,8 @@ def inner_solve(opts, matvec, b, x0, forcing_tol, axes: Axes, *,
     else:
         tol, maxiter = forcing_tol, opts.max_inner
     return ksp.call(matvec, b, x0, tol=tol, maxiter=maxiter, axes=axes,
-                    opts=opts, context=dict(context or {}))
+                    opts=opts, context=dict(context or {}),
+                    precond=precond if ksp.preconditioned else None)
 
 
 def stop_done(opts, *, res, span, res0, k, gamma) -> jax.Array:
@@ -501,21 +526,25 @@ def monitor_release(mid: int) -> None:
     _MONITORS.pop(mid, None)
 
 
-def _record(mid_entry, k, res, inner) -> dict:
+def _record(mid_entry, k, res, inner, diverged=False) -> dict:
     fn, t0, trim = mid_entry
     res = np.asarray(res)
     inner = np.asarray(inner)
+    div = np.asarray(diverged)
     if res.ndim:                           # batched fleet: per-instance rows
+        if div.ndim == 0:
+            div = np.broadcast_to(div, res.shape)
         if trim is not None:
-            res, inner = res[:trim], inner[:trim]
+            res, inner, div = res[:trim], inner[:trim], div[:trim]
         return dict(k=int(np.max(k)), res=[float(x) for x in res],
                     inner=[int(x) for x in inner],
+                    diverged=[bool(x) for x in div],
                     elapsed=time.perf_counter() - t0)
     return dict(k=int(k), res=float(res), inner=int(inner),
-                elapsed=time.perf_counter() - t0)
+                diverged=bool(div), elapsed=time.perf_counter() - t0)
 
 
-def _monitor_cb(mid, lead, k, res, inner) -> None:
+def _monitor_cb(mid, lead, k, res, inner, diverged=False) -> None:
     try:
         if not bool(lead):
             return                         # non-lead shard: drop (the record
@@ -523,13 +552,13 @@ def _monitor_cb(mid, lead, k, res, inner) -> None:
         entry = _MONITORS.get(int(mid))
         if entry is None:
             return
-        entry[0](_record(entry, k, res, inner))
+        entry[0](_record(entry, k, res, inner, diverged))
     except Exception as e:  # noqa: BLE001 — a monitor bug must not kill the
         print(f"[monitor] callback error (record dropped): "  # compiled solve
               f"{type(e).__name__}: {e}")
 
 
-def emit_monitor(mon_id, lead, k, res, inner) -> None:
+def emit_monitor(mon_id, lead, k, res, inner, diverged=False) -> None:
     """Device-side: stream one per-iteration record to the active monitor.
 
     One fixed trampoline for every monitor (``mon_id`` is traced data), so
@@ -537,26 +566,31 @@ def emit_monitor(mon_id, lead, k, res, inner) -> None:
     Unordered callback: records arrive in program order on synchronous
     backends (CPU), but an async accelerator may deliver them out of order —
     consumers needing strict order should sort by ``k`` (``Session.stats``
-    does; each record carries its ``k``)."""
-    jax.debug.callback(_monitor_cb, mon_id, lead, k, res, inner)
+    does; each record carries its ``k``).  ``diverged`` (bool, elementwise
+    for fleets) flags lanes whose residual blew past ``-divtol`` or went
+    NaN — the adaptive supervisor's trigger signal."""
+    jax.debug.callback(_monitor_cb, mon_id, lead, k, res, inner, diverged)
 
 
-def emit_host(mid: int, k, res, inner) -> None:
+def emit_host(mid: int, k, res, inner, diverged=False) -> None:
     """Host-side record emission (the k=0 / resume record, outside jit);
     same never-kill-the-solve guard as the device trampoline."""
-    _monitor_cb(mid, True, k, res, inner)
+    _monitor_cb(mid, True, k, res, inner, diverged)
 
 
 def print_monitor(rec: dict) -> None:
     """The default ``-monitor`` sink (PETSc ``-ksp_monitor`` style lines)."""
     if isinstance(rec["res"], list):
         res = rec["res"]
+        div = rec.get("diverged") or []
+        flag = f" DIVERGED={sum(bool(d) for d in div)}" if any(div) else ""
         print(f"[monitor] k={rec['k']} res_max={max(res):.6e} "
               f"inner={sum(rec['inner'])} B={len(res)} "
-              f"elapsed={rec['elapsed']:.3f}s", flush=True)
+              f"elapsed={rec['elapsed']:.3f}s{flag}", flush=True)
     else:
+        flag = " DIVERGED" if rec.get("diverged") else ""
         print(f"[monitor] k={rec['k']} res={rec['res']:.6e} "
-              f"inner={rec['inner']} elapsed={rec['elapsed']:.3f}s",
+              f"inner={rec['inner']} elapsed={rec['elapsed']:.3f}s{flag}",
               flush=True)
 
 
@@ -574,20 +608,23 @@ register_ksp(
 
 register_ksp(
     "gmres",
-    lambda mv, b, x0, *, tol, maxiter, axes, opts=None:
+    lambda mv, b, x0, *, tol, maxiter, axes, opts=None, precond=None:
         gmres(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
               restart=opts.restart if opts is not None else 32,
               deterministic=bool(opts.deterministic_dots) if opts is not None
-              else False),
+              else False, precond=precond),
     doc="restarted GMRES (CGS2 + Givens) — the iGMRES-PI inner solver",
-    deterministic=True, auto_method=False, _builtin=True)
+    deterministic=True, auto_method=False, preconditioned=True,
+    _builtin=True)
 
 register_ksp(
     "bicgstab",
-    lambda mv, b, x0, *, tol, maxiter, axes:
-        bicgstab(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes),
+    lambda mv, b, x0, *, tol, maxiter, axes, precond=None:
+        bicgstab(mv, b, x0, tol=tol, maxiter=maxiter, axes=axes,
+                 precond=precond),
     doc="BiCGStab — O(1)-memory Krylov alternative",
-    deterministic=False, auto_method=False, _builtin=True)
+    deterministic=False, auto_method=False, preconditioned=True,
+    _builtin=True)
 
 register_ksp(
     "chebyshev",
@@ -638,6 +675,11 @@ register_method("async_vi", ksp=None, inner="none", safeguarded=False,
                 doc="asynchronous VI: async_sweeps stale local sweeps per "
                     "value exchange (span-certified)",
                 _builtin=True)
+register_method("auto", ksp=None, inner="none", safeguarded=False,
+                virtual=True,
+                doc="adaptive: probe the instance, then pick method / stop "
+                    "criterion / preconditioner (repro.adaptive)",
+                _builtin=True)
 
 
 @register_stop_criterion("atol", _builtin=True)
@@ -650,6 +692,16 @@ def _stop_atol(m: StopMetrics):
 def _stop_rtol(m: StopMetrics):
     """relative residual: ||T v - v||_inf <= rtol * (initial residual)."""
     return m.res <= m.rtol * m.res0
+
+
+@register_stop_criterion("probe", needs_span=True, _builtin=True)
+def _stop_probe(m: StopMetrics):
+    """adaptive probe phase: never stop early — fixed-length residual traces.
+
+    Running exactly ``-probe_iters`` outers keeps traces comparable across
+    instances.  Padded dummy fleet lanes carry ``res == 0`` and do stop;
+    span is recorded so the probe can read the span-vs-residual ratio."""
+    return m.res <= 0.0
 
 
 @register_stop_criterion("span", needs_span=True, _builtin=True)

@@ -19,6 +19,8 @@ from repro.core.solvers.chebyshev import chebyshev
 from repro.core.solvers.anderson import anderson
 from repro.core.solvers.async_vi import async_vi_outer
 from repro.core.solvers.direct import dense_policy_value
+from repro.core.solvers.precond import PC_TYPES, build_precond
 
-__all__ = ["anderson", "async_vi_outer", "bicgstab", "chebyshev",
-           "dense_policy_value", "gmres", "richardson"]
+__all__ = ["PC_TYPES", "anderson", "async_vi_outer", "bicgstab",
+           "build_precond", "chebyshev", "dense_policy_value", "gmres",
+           "richardson"]

@@ -188,6 +188,21 @@ def main(argv=None):
         t0 = time.time()
         r = session.solve(mdp)
         print(f"[solve] {r.summary()}  wall={time.time()-t0:.2f}s")
+        adaptive = session.stats[-1].get("adaptive")
+        if adaptive is not None:
+            # what -method auto / -adapt_on_stagnation actually ran
+            choice = adaptive.get("choice")
+            if choice is not None:
+                print(f"[solve] auto-selected {choice['method']} "
+                      f"(stop={choice['stop_criterion']} "
+                      f"pc={choice['pc_type']}): {choice['reason']}")
+            for s in adaptive["swaps"]:
+                print(f"[solve] hot-swap at k={s['k']}: "
+                      f"{s['from_method']} -> {s['to_method']} "
+                      f"(pc={s['pc_type']}) — {s['reason']}")
+            if adaptive["methods"]:
+                print(f"[solve] methods run: "
+                      f"{' -> '.join(adaptive['methods'])}")
         print(f"[solve] ||v - v*||_inf <= {r.gap_bound:.3e} (certificate)")
         return 0 if r.converged else 1
 

@@ -51,7 +51,8 @@ class Request:
     """
 
     def __init__(self, mdp, sig: tuple, overrides: dict, *,
-                 monitor: bool = False, materialization: str | None = None):
+                 monitor: bool = False, materialization: str | None = None,
+                 deadline_ms: float | None = None):
         self.id = next(_REQUEST_IDS)
         self.mdp = mdp
         self.sig = sig
@@ -61,6 +62,12 @@ class Request:
         self.materialization = materialization
         self.monitor = bool(monitor)
         self.submitted = time.monotonic()
+        # absolute dispatch deadline (-serve_deadline_ms): the scheduler
+        # closes the batching window early rather than let this request's
+        # queue wait exceed the bound.  None = the full window applies.
+        self.deadline: float | None = \
+            self.submitted + deadline_ms / 1e3 \
+            if deadline_ms is not None else None
         self.dispatched: float | None = None
         self.completed: float | None = None
         self._event = threading.Event()
@@ -198,6 +205,14 @@ class RequestQueue:
 
     def count_sig(self, sig: tuple) -> int:
         return sum(1 for r in self._items if r.sig == sig)
+
+    def min_deadline(self, sig: tuple) -> float | None:
+        """Tightest dispatch deadline over queued requests that would join
+        a ``sig`` group (None when none carries one) — the linger early-out
+        bound for deadline-aware batching."""
+        ds = [r.deadline for r in self._items
+              if r.sig == sig and r.deadline is not None]
+        return min(ds) if ds else None
 
     def take_group(self, max_batch: int) -> list[Request]:
         """Pop the oldest request plus every queued request sharing its

@@ -145,13 +145,18 @@ class Scheduler:
 
     def _linger(self, sig: tuple, deadline: float) -> None:
         """The batching window: hold dispatch until the window closes, a
-        full compatible batch is queued, or the server is draining."""
+        full compatible batch is queued, the group's tightest per-request
+        deadline (``-serve_deadline_ms``) arrives, or the server is
+        draining.  The deadline is re-read every poll: a later arrival
+        with a tighter bound shortens the wait for the whole group."""
         q = self._queue
         while not (self._stop or self._draining):
             with q.cv:
                 if q.count_sig(sig) >= self._max_batch:
                     return
-                remaining = deadline - time.monotonic()
+                dl = q.min_deadline(sig)
+                eff = deadline if dl is None else min(deadline, dl)
+                remaining = eff - time.monotonic()
                 if remaining <= 0:
                     return
                 q.cv.wait(min(remaining, _POLL_S))

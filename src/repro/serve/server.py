@@ -200,6 +200,11 @@ class Server:
         # submit, not a scheduler-thread failure mid-bucket)
         ov = Options(overrides).as_dict(explicit_only=True) \
             if overrides else {}
+        # the dispatch deadline is serve-side QoS, not a solver option:
+        # pop it BEFORE the signature is built so requests with different
+        # deadlines still share a batch (the tightest one wins the linger)
+        deadline_ms = ov.pop("-serve_deadline_ms",
+                             self._session.options.get("-serve_deadline_ms"))
         mat = None
         if mdp.deferred:
             # resolve the pipeline at submit (per-request override, else
@@ -218,7 +223,8 @@ class Server:
         else:
             fam = _mdp_family(mdp)
         sig = (tuple(sorted(ov.items())), mdp.mode) + fam
-        return Request(mdp, sig, ov, monitor=monitor, materialization=mat)
+        return Request(mdp, sig, ov, monitor=monitor, materialization=mat,
+                       deadline_ms=deadline_ms)
 
     def _as_request(self, request: Request | int) -> Request:
         if isinstance(request, Request):

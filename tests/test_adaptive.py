@@ -1,0 +1,326 @@
+"""The adaptive solver driver (ISSUE 10): probe-based method
+auto-selection, the stagnation/divergence supervisor with checkpointed
+hot-swap, and preconditioned Krylov inner solves.
+
+Covers: probe estimators on a known-spectrum instance (pure self-loops:
+observed contraction == gamma exactly), the explainable rule table and its
+escalation chain, supervisor patience semantics (isolated f32 residual
+plateaus must NOT trigger), hot-swap parity (a diverging Chebyshev solve
+resumes under the escalated method and still returns the certified
+policy), preconditioned-vs-plain GMRES equality under
+``-deterministic_dots``, the sticky ``diverged`` flag, ``-method auto``
+through ``Session`` (stats record + per-family choice cache), and the
+serve-side ``-serve_deadline_ms`` early dispatch.
+"""
+
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.adaptive import (ProblemProfile, StagnationSupervisor, escalate,
+                            explain, probe, select_method, solve_adaptive)
+from repro.adaptive.driver import _rearm_checkpoint
+from repro.adaptive.probe import estimate_contraction
+from repro.api import MDP, Session
+from repro.serve import Server
+from repro.core import IPIOptions, generators
+from repro.core.driver import solve
+from repro.core.ipi import SolveState
+from repro.utils import checkpoint as ckpt
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _core(m):
+    return m.core if hasattr(m, "core") else m._core
+
+
+def selfloop(n=64, gamma=0.9):
+    """Every state self-loops under its single action: P = I, so VI's
+    residual decays by exactly gamma per iteration — a known spectrum."""
+    idx = np.tile(np.arange(n, dtype=np.int32).reshape(n, 1, 1), (1, 1, 3))
+    val = np.zeros((n, 1, 3), np.float32)
+    val[:, :, 0] = 1.0
+    cost = np.ones((n, 1), np.float32)
+    return _core(MDP.from_arrays(idx=idx, val=val, cost=cost, gamma=gamma))
+
+
+def prof(**kw):
+    d = dict(n=100_000, gamma=0.9999, iters=8, res0=1.0, res=0.5,
+             contraction=0.9999, span_ratio=0.5, converged=False)
+    d.update(kw)
+    return ProblemProfile(**d)
+
+
+# --------------------------------------------------------------------------- #
+# probe estimators                                                            #
+# --------------------------------------------------------------------------- #
+
+def test_probe_contraction_matches_known_spectrum():
+    gamma = 0.9
+    profile, v_probe = probe(selfloop(gamma=gamma),
+                             IPIOptions(method="vi", atol=1e-12),
+                             probe_iters=8)
+    assert profile.iters == 8
+    assert profile.res0 == pytest.approx(1.0)
+    # P = I: the observed decay rate IS the discount
+    assert profile.contraction == pytest.approx(gamma, abs=5e-3)
+    assert not profile.converged
+    assert np.asarray(v_probe).shape[-1] == 64
+
+
+def test_probe_converged_flag_and_warm_start():
+    profile, _ = probe(selfloop(gamma=0.9),
+                       IPIOptions(method="vi", atol=10.0), probe_iters=4)
+    assert profile.converged
+    c = select_method(profile)
+    assert c.method == "vi" and "probe" in c.reason
+
+
+def test_estimate_contraction_degenerate_traces():
+    assert estimate_contraction(np.array([])) == 0.0
+    assert estimate_contraction(np.array([1.0])) == 0.0
+    assert estimate_contraction(np.array([1.0, np.nan, np.inf])) == 0.0
+    tr = 0.5 ** np.arange(10)
+    assert estimate_contraction(tr) == pytest.approx(0.5, abs=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# rule table + escalation chain                                               #
+# --------------------------------------------------------------------------- #
+
+def test_rule_table_selections():
+    assert select_method(prof(converged=True)).method == "vi"
+    assert select_method(prof(contraction=0.75)).method == "vi"
+    assert select_method(prof(contraction=0.85)).method == "mpi"
+    assert select_method(prof(contraction=0.99)).method == "mpi"
+    span = select_method(prof(span_ratio=0.01))
+    assert (span.method, span.stop_criterion) == ("vi", "span")
+    # small ill-conditioned instances stay on mpi (Richardson sweeps cross
+    # the state space many times over below KRYLOV_MIN_N)
+    assert select_method(prof(n=1_000)).method == "mpi"
+    hard = select_method(prof())
+    assert (hard.method, hard.pc_type) == ("ipi_gmres", "jacobi")
+    # jacobi is elementwise, hence legal under deterministic dots too
+    det = select_method(prof(), deterministic_dots=True)
+    assert (det.method, det.pc_type) == ("ipi_gmres", "jacobi")
+    assert hard.reason.startswith("[ill-conditioned]")
+
+
+def test_explain_marks_first_match():
+    text = explain(prof())
+    assert "-> ill-conditioned" in text
+    assert "no match" in text
+
+
+def test_escalation_chain():
+    nxt = escalate("mpi")
+    assert (nxt.method, nxt.pc_type) == ("ipi_gmres", "jacobi")
+    nxt = escalate("ipi_gmres")
+    assert (nxt.method, nxt.pc_type) == ("ipi_bicgstab", "jacobi")
+    assert escalate("ipi_bicgstab").method == "vi"
+    assert escalate("vi") is None
+    # out-of-chain methods land on the chain head
+    assert escalate("ipi_chebyshev").method == "mpi"
+    # deterministic chain skips bicgstab (its reductions reorder)
+    assert escalate("ipi_gmres", deterministic_dots=True).method == "vi"
+
+
+# --------------------------------------------------------------------------- #
+# supervisor                                                                  #
+# --------------------------------------------------------------------------- #
+
+def _info(res, res_prev, k=64, kp=0, div=False):
+    return dict(k=k, res=res, k_prev=kp, res_prev=res_prev, diverged=div)
+
+
+def test_supervisor_patience_requires_consecutive_crawl():
+    sup = StagnationSupervisor(0.99, atol=1e-6, patience=2)
+    assert not sup(_info(1.0, 1.0))        # first flat chunk: streak of 1
+    assert sup(_info(1.0, 1.0))            # second consecutive: trigger
+    assert sup.triggered and "stagnation" in sup.reason
+
+
+def test_supervisor_healthy_chunk_resets_streak():
+    sup = StagnationSupervisor(0.99, patience=2)
+    assert not sup(_info(1.0, 1.0))
+    assert not sup(_info(0.1, 1.0))        # healthy: streak resets
+    assert not sup(_info(1.0, 1.0))        # an isolated f32 plateau again
+    assert not sup.triggered
+
+
+def test_supervisor_divergence_immediate_and_atol_guard():
+    sup = StagnationSupervisor(0.99, patience=5)
+    assert sup(_info(1.0, 1.0, div=True))  # patience does not gate -divtol
+    assert "diverged" in sup.reason
+    guard = StagnationSupervisor(0.99, atol=1.0, patience=1)
+    assert not guard(_info(2.0, 2.0))      # within 4*atol: plateau != stall
+
+
+# --------------------------------------------------------------------------- #
+# guards                                                                      #
+# --------------------------------------------------------------------------- #
+
+def test_driver_rejects_virtual_method_and_bad_checkpoint_mode():
+    core = generators.chain_walk(64, gamma=0.9)
+    with pytest.raises(ValueError, match="virtual"):
+        solve(core, IPIOptions(method="auto"))
+    with pytest.raises(ValueError, match="checkpoint_mode"):
+        solve(core, IPIOptions(method="vi"), checkpoint_mode="bogus")
+
+
+def test_bjacobi_rejected_under_deterministic_dots():
+    with pytest.raises(ValueError, match="bjacobi"):
+        IPIOptions(method="ipi_gmres", pc_type="bjacobi",
+                   deterministic_dots=True)
+
+
+# --------------------------------------------------------------------------- #
+# preconditioned Krylov                                                       #
+# --------------------------------------------------------------------------- #
+
+def test_jacobi_gmres_matches_plain_under_deterministic_dots():
+    # garnet: random costs give generic argmin margins far above the
+    # certified value gap, so the greedy policy is unique and must agree
+    # across inner-solver variants (a chain's near-tied boundary actions
+    # would not)
+    core = generators.garnet(256, 5, 4, gamma=0.95, seed=3)
+    base = dict(atol=1e-5, max_outer=2000, max_inner=256,
+                deterministic_dots=True)
+    plain = solve(core, IPIOptions(method="ipi_gmres", **base))
+    pc = solve(core, IPIOptions(method="ipi_gmres", pc_type="jacobi",
+                                **base))
+    ref = solve(core, IPIOptions(method="vi", **base))
+    assert plain.converged and pc.converged
+    assert np.array_equal(pc.policy, ref.policy)
+    assert np.array_equal(plain.policy, ref.policy)
+    assert pc.residual <= base["atol"] and plain.residual <= base["atol"]
+    # right preconditioning keeps stopping semantics: same certificate
+    assert np.max(np.abs(pc.v - plain.v)) <= pc.gap_bound + plain.gap_bound
+
+
+# --------------------------------------------------------------------------- #
+# diverged flag + hot-swap parity                                             #
+# --------------------------------------------------------------------------- #
+
+def _cheby_opts(**kw):
+    # safeguard off: the monotone VI-fallback would otherwise clamp the
+    # mis-bracketed Chebyshev iteration into a stall instead of letting it
+    # genuinely diverge past -divtol
+    d = dict(method="ipi_chebyshev", atol=1e-3, max_outer=3000,
+             max_inner=64, divtol=10.0, safeguard=False)
+    d.update(kw)
+    return IPIOptions(**d)
+
+
+def test_chebyshev_divergence_sets_sticky_flag():
+    core = generators.chain_walk(400, gamma=0.99)
+    r = solve(core, _cheby_opts())
+    assert r.diverged and not r.converged
+    assert "DIVERGED" in r.summary()
+
+
+def test_hot_swap_resumes_and_certifies():
+    core = generators.chain_walk(400, gamma=0.99)
+    ref = solve(core, IPIOptions(method="vi", atol=1e-3, max_outer=20_000))
+    assert ref.converged
+    r, rep = solve_adaptive(core, _cheby_opts())
+    assert r.converged and not r.diverged
+    # the certificate, not bitwise policy: chain boundary actions are
+    # near-tied within the gap bound, so assert value agreement within the
+    # summed certified gaps and policy agreement away from the ties
+    assert np.max(np.abs(r.v - ref.v)) <= r.gap_bound + ref.gap_bound
+    assert np.mean(r.policy == ref.policy) >= 0.95
+    assert rep.methods[0] == "ipi_chebyshev" and len(rep.methods) >= 2
+    assert rep.swaps and rep.swaps[0]["from_method"] == "ipi_chebyshev"
+    # the swap resumed the checkpointed state, not a fresh solve
+    assert rep.swaps[0]["resumed"] or "NaN" not in rep.swaps[0]["reason"]
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint re-arm                                                           #
+# --------------------------------------------------------------------------- #
+
+def _state(nan=False, res=0.5, res0=0.1):
+    v = np.full(8, np.nan if nan else 1.0, np.float32)
+    return SolveState(
+        v=v, tv=v.copy(), pi=np.zeros(8, np.int32), res=np.float32(res),
+        k=np.int32(10), inner_total=np.int32(0),
+        trace_res=np.zeros(4, np.float32),
+        trace_inner=np.zeros(4, np.int32), res0=np.float32(res0),
+        span=np.float32(0.0), done=np.bool_(False),
+        diverged=np.bool_(True), n_true=np.int32(8),
+        win=np.zeros(0, np.float32))
+
+
+def test_rearm_clears_diverged_and_resets_res0(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 10, _state(), meta={})
+    assert _rearm_checkpoint(d)
+    tree, step, _ = ckpt.restore(d, _state())
+    assert step == 10
+    assert not bool(np.asarray(tree.diverged))
+    # res0 re-arms at the resume-point residual so -divtol measures anew
+    assert float(tree.res0) == pytest.approx(0.5)
+
+
+def test_rearm_discards_nan_state(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 10, _state(nan=True), meta={})
+    assert not _rearm_checkpoint(d)
+    assert ckpt.latest_step(d) is None     # poisoned files were removed
+    assert not _rearm_checkpoint(str(tmp_path / "missing"))
+
+
+# --------------------------------------------------------------------------- #
+# Session integration: -method auto                                           #
+# --------------------------------------------------------------------------- #
+
+def test_session_auto_records_choice_and_caches_probe():
+    m = MDP.from_generator("chain_walk", n=256, gamma=0.99)
+    with Session({"-atol": 1e-3, "-max_outer": 2000}) as s:
+        r1 = s.solve(m, method="auto")
+        a1 = s.stats[-1]["adaptive"]
+        assert r1.converged
+        assert a1["profile"] is not None
+        assert a1["choice"]["method"] in ("vi", "mpi")
+        assert a1["choice"]["reason"]
+        assert s.stats[-1]["solves"][0]["diverged"] is False
+        r2 = s.solve(m, method="auto")
+        a2 = s.stats[-1]["adaptive"]
+        # same (n, m, gamma, mode) family: the cached choice skips the probe
+        assert a2["profile"] is None
+        assert a2["choice"]["method"] == a1["choice"]["method"]
+        assert np.array_equal(r1.policy, r2.policy)
+
+
+def test_session_fleet_auto_resolves_per_bucket():
+    mdps = [MDP.from_generator("chain_walk", n=128, gamma=0.95),
+            MDP.from_generator("chain_walk", n=128, gamma=0.95)]
+    with Session({"-atol": 1e-4, "-max_outer": 2000}) as s:
+        rs = s.solve_fleet(mdps, method="auto")
+        assert all(r.converged for r in rs)
+        auto = s.stats[-1]["fleet"]["auto"]
+        assert auto and auto[0]["method"] != "auto"
+        assert auto[0]["reason"]
+
+
+# --------------------------------------------------------------------------- #
+# serve deadline                                                              #
+# --------------------------------------------------------------------------- #
+
+def test_serve_deadline_preempts_batch_window():
+    m = MDP.from_generator("garnet", n=48, m=3, k=4, gamma=0.9, seed=0)
+    base = {"-method": "vi", "-atol": 1e-6,
+            "-serve_batch_window": 5.0, "-serve_deadline_ms": 100.0}
+    with Server(base) as srv:
+        t0 = time.monotonic()
+        r = srv.submit(m).result(timeout=120)
+        elapsed = time.monotonic() - t0
+    assert r.converged
+    # the 100 ms deadline must cut the 5 s linger well short
+    assert elapsed < 2.5
